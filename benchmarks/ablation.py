@@ -1,0 +1,25 @@
+"""Fig. 14 analog: component ablation on MoE-GPT-M — planner only,
+scheduler only, and the full planner×scheduler coupling (eq. 8)."""
+from .simlib import SimConfig, simulate, speedup
+
+
+def run(iters: int = 20):
+    rows = []
+    for k in (1, 2):
+        sim = SimConfig(model="moe-gpt-m", top_k=k, iters=iters)
+        base = simulate("deepspeed", sim)
+        planner = simulate("planner", sim)
+        sched = simulate("scheduler", sim)
+        # planner + scheduler overlap but planning against eq. 6:
+        pl_sched = simulate("planner", sim, scheduled=True)
+        full = simulate("pro_prophet", sim)
+        rows.append((f"ablation/k{k}/planner", planner.mean_iter * 1e6,
+                     speedup(base, planner)))
+        rows.append((f"ablation/k{k}/scheduler", sched.mean_iter * 1e6,
+                     speedup(base, sched)))
+        rows.append((f"ablation/k{k}/planner+scheduler",
+                     pl_sched.mean_iter * 1e6, speedup(base, pl_sched)))
+        # the eq.8 coupling's extra win over uncoupled planner+scheduler
+        rows.append((f"ablation/k{k}/full_coupling_gain",
+                     full.mean_iter * 1e6, speedup(pl_sched, full)))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 16 analog: balance capability — RB (balance-degree ratio) of the
+planner vs FasterMoE across layers and k."""
+import numpy as np
+
+from .simlib import SimConfig, simulate
+
+
+def run(iters: int = 20):
+    rows = []
+    for k in (1, 2):
+        for seed in (0, 1, 2):       # stands in for different layers
+            sim = SimConfig(model="moe-gpt-m", top_k=k, iters=iters,
+                            seed=seed)
+            pp = simulate("planner", sim)
+            fm = simulate("fastermoe", sim)
+            rb_pp = float(np.mean(pp.rb))
+            rb_fm = float(np.mean(fm.rb))
+            rows.append((f"balance/k{k}/layer{seed}/rb_ratio_pp_over_fm",
+                         0.0, rb_pp / max(rb_fm, 1e-9)))
+            rows.append((f"balance/k{k}/layer{seed}/rb_planner", 0.0, rb_pp))
+    return rows

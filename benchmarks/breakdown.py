@@ -1,0 +1,23 @@
+"""Table I analog: load-balancing overhead (Search/Place/Reduce) of a
+prior-art blocked method (FasterMoE-style) as a fraction of step time."""
+from .simlib import SimConfig, simulate
+
+MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
+
+
+def run(iters: int = 12):
+    rows = []
+    for model in MODELS:
+        sim = SimConfig(model=model, iters=iters)
+        fm = simulate("fastermoe", sim)
+        bd = fm.breakdown
+        total = sum(bd.values())
+        search = bd["plan"] / total
+        place = bd["trans"] / total
+        reduce_ = bd["agg"] / total
+        lb = search + place + reduce_
+        rows.append((f"breakdown/{model}/lb_frac", fm.mean_iter * 1e6, lb))
+        rows.append((f"breakdown/{model}/search", 0.0, search))
+        rows.append((f"breakdown/{model}/place", 0.0, place))
+        rows.append((f"breakdown/{model}/reduce", 0.0, reduce_))
+    return rows

@@ -1,0 +1,28 @@
+"""Tables IV/V + Fig. 10 analog: end-to-end speedups of Pro-Prophet vs
+DeepSpeed-MoE-style plain EP and FasterMoE-style shadowing, across the five
+MoE-GPT models, k ∈ {1,2}, and three cluster profiles."""
+from .simlib import CLUSTERS, SimConfig, simulate, speedup
+
+MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
+
+
+def run(iters: int = 20):
+    rows = []
+    for cluster, devices, tokens in (("HPWNV", 16, 16384),
+                                     ("HPNV", 16, 16384),
+                                     ("LPWNV", 8, 4096)):
+        models = MODELS if cluster == "HPWNV" else [m for m in MODELS
+                                                    if m != "moe-gpt-l"]
+        for model in models:
+            for k in (1, 2):
+                sim = SimConfig(model=model, cluster=cluster,
+                                devices=devices, tokens=tokens, top_k=k,
+                                iters=iters)
+                ds = simulate("deepspeed", sim)
+                fm = simulate("fastermoe", sim)
+                pp = simulate("pro_prophet", sim)
+                rows.append((f"e2e/{cluster}/{model}/k{k}/vs_deepspeed",
+                             pp.mean_iter * 1e6, speedup(ds, pp)))
+                rows.append((f"e2e/{cluster}/{model}/k{k}/vs_fastermoe",
+                             pp.mean_iter * 1e6, speedup(fm, pp)))
+    return rows

@@ -1,0 +1,32 @@
+"""Figs. 11/12 analog: single-layer and single-iteration speedups on
+MoE-GPT-M."""
+import numpy as np
+
+from .simlib import SimConfig, simulate
+
+
+def run(iters: int = 30):
+    rows = []
+    for k in (1, 2):
+        sim = SimConfig(model="moe-gpt-m", top_k=k, iters=iters)
+        ds = simulate("deepspeed", sim)
+        fm = simulate("fastermoe", sim)
+        pp = simulate("pro_prophet", sim)
+        # per-layer (Fig. 11)
+        sl_ds = np.mean(ds.per_layer_time) / np.mean(pp.per_layer_time)
+        sl_fm = np.mean(fm.per_layer_time) / np.mean(pp.per_layer_time)
+        rows.append((f"fine/layer/k{k}/vs_deepspeed",
+                     np.mean(pp.per_layer_time) * 1e6, sl_ds))
+        rows.append((f"fine/layer/k{k}/vs_fastermoe",
+                     np.mean(pp.per_layer_time) * 1e6, sl_fm))
+        if k == 1:
+            # per-iteration variability (Fig. 12): Pro-Prophet should be
+            # both faster on average and more consistent.
+            per_it = np.array(fm.iter_times) / np.array(pp.iter_times)
+            rows.append(("fine/iteration/k1/mean_speedup_vs_fm",
+                         np.mean(pp.iter_times) * 1e6, float(per_it.mean())))
+            cv_pp = float(np.std(pp.iter_times) / np.mean(pp.iter_times))
+            cv_fm = float(np.std(fm.iter_times) / np.mean(fm.iter_times))
+            rows.append(("fine/iteration/k1/cv_ratio_fm_over_pp", 0.0,
+                         cv_fm / max(cv_pp, 1e-9)))
+    return rows

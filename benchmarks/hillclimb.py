@@ -1,0 +1,47 @@
+"""§Perf hillclimb probe: re-lower one (arch × shape) with the current
+REPRO_* experiment flags and report the three roofline terms.
+
+  REPRO_XENT_CHUNK=8192 PYTHONPATH=src:. python -m benchmarks.hillclimb \
+      --arch smollm-360m --shape train_4k --tag chunked_xent
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    # dryrun sets the 512-device XLA flag on import — import FIRST.
+    from repro.launch import dryrun
+    from . import roofline
+
+    rec = dryrun.run_one(args.arch, args.shape, "single", args.out)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out,
+                        f"{args.arch}__{args.shape}__{args.tag}.json")
+    rec["tag"] = args.tag
+    rec["flags"] = {k: v for k, v in os.environ.items()
+                    if k.startswith("REPRO_")}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] != "OK":
+        print(f"STATUS={rec['status']}: {rec.get('error', rec.get('reason'))}")
+        sys.exit(1)
+    a = roofline.analyze(rec)
+    print(f"tag={args.tag} flags={rec['flags']}")
+    print(f"  compute    {a['t_compute_s']*1e3:10.2f} ms")
+    print(f"  memory     {a['t_memory_s']*1e3:10.2f} ms")
+    print(f"  collective {a['t_collective_s']*1e3:10.2f} ms")
+    print(f"  dominant   {a['dominant']}  useful_ratio={a['useful_ratio']:.3f}")
+    print(f"  temp bytes/dev {rec.get('temp_size_in_bytes', 0)/1e9:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Fig. 15 analog: planner vs static top2/top3 shadow-to-all policies."""
+from .simlib import SimConfig, simulate, speedup
+
+
+def run(iters: int = 20):
+    rows = []
+    for k in (1, 2):
+        sim = SimConfig(model="moe-gpt-m", top_k=k, iters=iters)
+        planner = simulate("planner", sim)
+        for pol in ("top2", "top3"):
+            other = simulate(pol, sim)
+            rows.append((f"policies/k{k}/planner_vs_{pol}",
+                         planner.mean_iter * 1e6, speedup(other, planner)))
+    return rows

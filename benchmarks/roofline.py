@@ -1,0 +1,120 @@
+"""§Roofline: derive compute/memory/collective terms per (arch × shape)
+from the dry-run artifacts (single-pod mesh, per-device SPMD numbers).
+
+Scan-aware accounting: XLA cost_analysis counts a lax.scan body once, so
+totals are assembled from the per-layer probes × occurrence counts plus
+the embed/unembed head (see repro.launch.dryrun.probe_layers).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def _probe_totals(rec):
+    """Scan-corrected per-device totals from the probes."""
+    probes = rec.get("probes") or {}
+    flops = bytes_ = coll = 0.0
+    ok = True
+    for key, p in probes.items():
+        if "error" in p:
+            ok = False
+            continue
+        c = p.get("count", 1)
+        flops += p.get("flops", 0.0) * c
+        bytes_ += p.get("bytes_accessed", 0.0) * c
+        pc = p.get("collectives", {})
+        coll += sum(v for k, v in pc.items() if k != "count") * c
+    return flops, bytes_, coll, ok and bool(probes)
+
+
+def model_flops_per_device(rec):
+    """Useful model FLOPs per device: 6·N_active·T (train) / 2·N_active·T
+    (inference); T = global tokens this step."""
+    n = rec["active_params"]
+    if rec["kind"] == "decode":
+        tokens = rec["batch"]                  # one new token per sequence
+    else:
+        tokens = rec["batch"] * rec["seq"]
+    mult = 6 if rec["kind"] == "train" else 2
+    return mult * n * tokens / CHIPS
+
+
+def analyze(rec):
+    flops, bytes_, coll, probed = _probe_totals(rec)
+    if not probed:                             # fall back to full-step
+        flops = rec.get("flops", 0.0)
+        bytes_ = rec.get("bytes_accessed", 0.0)
+        coll = sum(v for k, v in rec.get("collectives", {}).items()
+                   if k != "count")
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    ratio = mf / flops if flops else 0.0
+    hints = {
+        "compute": "raise useful-FLOP fraction (less remat/causal-block "
+                   "overcount) or grow per-chip batch",
+        "memory": "fuse/reuse activations, bf16 everywhere, bigger tiles "
+                  "to raise arithmetic intensity",
+        "collective": "reshard to cut all-gather/all-reduce volume "
+                      "(expert-FSDP gather and Trans psum are the levers)",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom, "model_flops_dev": mf, "hlo_flops_dev": flops,
+        "useful_ratio": ratio, "scan_corrected": probed,
+        "hbm_bytes_dev": rec.get("temp_size_in_bytes", 0)
+        + rec.get("argument_size_in_bytes", 0),
+        "hint": hints[dom],
+    }
+
+
+def load_records(mesh="single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    for rec in load_records("single"):
+        if rec["status"] != "OK":
+            continue
+        a = analyze(rec)
+        name = f"roofline/{a['arch']}/{a['shape']}"
+        total = a["t_compute_s"] + a["t_memory_s"] + a["t_collective_s"]
+        rows.append((name + "/dominant_" + a["dominant"], total * 1e6,
+                     a["useful_ratio"]))
+    return rows
+
+
+def full_table():
+    out = []
+    for rec in load_records("single"):
+        if rec["status"] == "OK":
+            out.append(analyze(rec))
+        else:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "dominant": rec["status"],
+                        "hint": rec.get("reason", rec.get("error", ""))})
+    return out
+
+
+if __name__ == "__main__":
+    for a in full_table():
+        print(a)

@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §9).
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+simulated/measured time of the subject in µs (0.0 where the row is a pure
+ratio); ``derived`` is the benchmark's headline metric (speedup, error,
+fraction, RB, useful-FLOP ratio).
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from . import (ablation, balance, breakdown, cadence, end_to_end,
+                   fine_grained, locality, perfmodel_accuracy, policies,
+                   roofline)
+    modules = [
+        ("locality(Fig4)", locality),
+        ("breakdown(TableI)", breakdown),
+        ("end_to_end(TablesIV-V,Fig10)", end_to_end),
+        ("fine_grained(Figs11-12)", fine_grained),
+        ("perfmodel_accuracy(Fig13)", perfmodel_accuracy),
+        ("ablation(Fig14)", ablation),
+        ("policies(Fig15)", policies),
+        ("balance(Fig16)", balance),
+        ("cadence(beyond-paper)", cadence),
+        ("roofline(Roofline)", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for label, mod in modules:
+        t0 = time.time()
+        rows = mod.run()
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived:.4f}")
+        print(f"# {label} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Shared simulation engine for the paper-table benchmarks.
+
+CPU-only container ⇒ the end-to-end cluster numbers (Tables IV/V, Figs
+10–12, 14–16) are **performance-model-driven simulations** over synthetic
+gating traces with the paper's locality property, using the same eqs. 1–8
+the planner itself uses, on cluster constants matched to the paper's
+testbeds.  The performance model itself is validated against *real
+measured compute* in perfmodel_accuracy.py (paper Fig. 13, <5 % target),
+which grounds the simulated tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (BlockCosts, GatingTrace, GreedyPlanner, HardwareSpec,
+                        LocalityPlanner, PerfModel, balance_degree,
+                        iteration_time, traditional)
+from repro.core.baselines import fastermoe_plan, topk_policy
+
+# ---------------------------------------------------------------------------
+# Cluster profiles (paper §VI Testbed)
+# ---------------------------------------------------------------------------
+
+CLUSTERS = {
+    # 4 GPUs/node, PCIe3 + 100 Gb/s IB, RTX 3090.
+    "HPWNV": dict(bandwidth=10e9, flops=35e12),
+    # + NVLink pairs ⇒ higher effective bandwidth.
+    "HPNV": dict(bandwidth=40e9, flops=35e12),
+    # 2080 Ti: lower compute.
+    "LPWNV": dict(bandwidth=10e9, flops=18e12),
+    # The TPU v5e target (per chip) — used by beyond-paper studies.
+    "TPU_V5E": dict(bandwidth=50e9, flops=197e12),
+}
+
+
+@dataclasses.dataclass
+class SimConfig:
+    model: str = "moe-gpt-m"
+    cluster: str = "HPWNV"
+    devices: int = 16
+    tokens: int = 16384
+    top_k: int = 1
+    iters: int = 30
+    # Calibrated so the simulated baselines land in the paper's observed
+    # regime: Fig. 3-level skew (top-3 experts >50% of tokens) and Table I
+    # LB-overhead fractions (~20-40%).
+    skew: float = 0.25
+    drift: float = 0.05
+    seed: int = 0
+    s_max: int = 8
+    n: int = 2                      # paper's n for the planner
+    plan_unit_cost: float = 1e-4    # host greedy-search cost per step [s]
+
+
+@dataclasses.dataclass
+class SimResult:
+    iter_times: List[float]
+    breakdown: Dict[str, float]     # summed seconds by component
+    rb: List[float]                 # per-iteration RB ratio
+    per_layer_time: List[float]     # mean per-MoE-layer time
+
+    @property
+    def mean_iter(self) -> float:
+        return float(np.mean(self.iter_times))
+
+
+def _hw_for(cfg, sim: SimConfig) -> HardwareSpec:
+    cl = CLUSTERS[sim.cluster]
+    nm = 2 if cfg.ffn_kind == "gelu" else 3
+    # Non-MoE (attention) per-layer time: 8·d² matmul flops/token fwd,
+    # 2× for backward.
+    tok_per_dev = sim.tokens / sim.devices
+    attn_flops = 8 * cfg.d_model ** 2 * tok_per_dev
+    t_fnec = attn_flops / cl["flops"]
+    return HardwareSpec.from_model_dims(
+        cfg.d_model, cfg.moe.d_expert, bandwidth=cl["bandwidth"],
+        flops_per_s=cl["flops"], num_ffn_mats=nm,
+        t_fnec=t_fnec, t_bnec=2 * t_fnec)
+
+
+def simulate(policy: str, sim: SimConfig, *, scheduled: Optional[bool] = None,
+             trans_mode: str = "p2p") -> SimResult:
+    """policy ∈ {deepspeed, fastermoe, top2, top3, planner, scheduler,
+    pro_prophet}.
+
+    deepspeed    — plain EP, blocked.
+    fastermoe    — shadow-to-all while its cost model improves, blocked.
+    top2/top3    — static heaviest-k to all devices, blocked.
+    planner      — Pro-Prophet planner only (lightweight placement, eq. 6).
+    scheduler    — FasterMoE placement + block-wise overlap (eq. 8 resid).
+    pro_prophet  — planner×scheduler coupling (plans against eq. 8).
+    """
+    cfg = get_config(sim.model)
+    E = cfg.moe.num_experts
+    D = sim.devices
+    assert E == D or E % D == 0
+    hw = _hw_for(cfg, sim)
+    perf = PerfModel(hw, D, trans_mode=trans_mode)
+    L = cfg.num_moe_layers
+
+    use_sched = scheduled if scheduled is not None else policy in (
+        "scheduler", "pro_prophet")
+    plan_scheduled = policy == "pro_prophet"
+
+    greedy = GreedyPlanner(perf, n=sim.n, alpha=0.25, s_max=sim.s_max,
+                           scheduled=plan_scheduled)
+    planners = [LocalityPlanner(greedy, D, E) for _ in range(L)]
+
+    traces = [GatingTrace(D, E, sim.tokens // D // (1 if sim.top_k == 1 else 1),
+                          skew=sim.skew, drift=sim.drift,
+                          seed=sim.seed * 1000 + li) for li in range(L)]
+    # top-k routing: k choices per token ⇒ k× entries in G
+    iter_times, rbs, layer_ts = [], [], []
+    breakdown = {"a2a": 0.0, "fec": 0.0, "bec": 0.0, "trans": 0.0,
+                 "agg": 0.0, "plan": 0.0, "fnec": 0.0}
+    prev_g = [None] * L
+    for it in range(sim.iters):
+        total = 0.0
+        for li in range(L):
+            g = traces[li].step() * sim.top_k
+            if policy == "deepspeed":
+                placement, plan_steps = traditional(E, D), 0
+            elif policy in ("fastermoe", "scheduler"):
+                res = fastermoe_plan(perf, g, max_shadows=sim.s_max)
+                placement, plan_steps = res.placement, res.steps_examined
+            elif policy in ("top2", "top3"):
+                placement = topk_policy(g, int(policy[-1]))
+                plan_steps = 0
+            else:  # planner / pro_prophet: locality — plan on last iter's G
+                res = planners[li].maybe_plan(prev_g[li] if prev_g[li]
+                                              is not None else g)
+                placement, plan_steps = res.placement, res.steps_examined
+            prev_g[li] = g
+
+            bd = perf.breakdown(placement, g, scheduled=use_sched)
+            layer_t = bd["total"]
+            plan_t = plan_steps * sim.plan_unit_cost
+            if policy in ("planner", "pro_prophet"):
+                plan_t = 0.0        # hidden under the a2a (scheduling space)
+            total += layer_t + hw.t_fnec + hw.t_bnec + plan_t
+            for k in ("a2a", "fec", "bec", "trans", "agg"):
+                breakdown[k] += bd[k]
+            breakdown["plan"] += plan_t
+            breakdown["fnec"] += hw.t_fnec + hw.t_bnec
+            if li == 0:
+                layer_ts.append(layer_t)
+            H0, _ = traditional(E, D).compute_loads(g)
+            H1, _ = placement.compute_loads(g)
+            if li == 0:
+                rbs.append(balance_degree(H0)
+                           / max(balance_degree(H1), 1e-9))
+        iter_times.append(total)
+    return SimResult(iter_times, breakdown, rbs, layer_ts)
+
+
+def speedup(a: SimResult, b: SimResult) -> float:
+    """How much faster is b than a."""
+    return a.mean_iter / b.mean_iter

@@ -1,0 +1,31 @@
+"""Quickstart: train a tiny MoE-GPT with Pro-Prophet load balancing on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data import SyntheticLM
+from repro.optim import adamw, cosine
+from repro.parallel import local_ctx
+from repro.train import Trainer
+from repro.train.trainer import make_engine_for
+
+
+def main():
+    cfg = reduced(get_config("moe-gpt-s"))
+    ctx = local_ctx()
+    engine = make_engine_for(cfg, ctx)             # the paper's planner
+    trainer = Trainer(cfg, ctx, adamw(cosine(3e-3, 10, 100)),
+                      attn_impl="naive", remat=False, engine=engine)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, batch=8, seq=64)
+    state, hist = trainer.run(state, data, num_steps=60, log_every=10)
+    print(f"\nloss {hist[0]:.3f} -> {hist[-1]:.3f}")
+    pt = engine.predicted_times()
+    print(f"planner's predicted MoE-layer speedup this step: "
+          f"{pt['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end driver (deliverable b): train a ~100M-param MoE-GPT for a few
+hundred steps with the full stack — synthetic pipeline, AdamW+cosine,
+Pro-Prophet engine in the loop, periodic checkpointing.
+
+  PYTHONPATH=src python examples/train_moe_gpt.py [--steps 300]
+
+~100M params: moe-gpt-s at full width (d=512, 12 layers, 16 experts,
+d_ff=1024) has ≈ 12·16·2·512·1024·≈ 200M total / ≈ 38M active; we trim
+experts to 8 to keep a CPU step tractable while staying >100M total.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint import save_train_state
+from repro.configs import get_config
+from repro.configs.moe_gpt import with_experts
+from repro.data import SyntheticLM
+from repro.optim import adamw, cosine
+from repro.parallel import local_ctx
+from repro.train import Trainer
+from repro.train.trainer import make_engine_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="artifacts/moe_gpt_ckpt")
+    args = ap.parse_args()
+
+    cfg = with_experts(get_config("moe-gpt-s"), num_experts=8, top_k=1)
+    ctx = local_ctx()
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n/1e6:.0f}M "
+          f"(active {cfg.active_param_count()/1e6:.0f}M)")
+
+    engine = make_engine_for(cfg, ctx)
+    trainer = Trainer(cfg, ctx, adamw(cosine(1e-3, 20, args.steps)),
+                      attn_impl="auto", remat=False, engine=engine)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+    state, hist = trainer.run(state, data, num_steps=args.steps,
+                              log_every=20)
+    save_train_state(state, args.ckpt, step=args.steps,
+                     extra={"arch": cfg.name, "final_loss": hist[-1]})
+    print(f"\nloss {hist[0]:.3f} -> {hist[-1]:.3f}; checkpoint at "
+          f"{args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Pytree checkpointing: flattened key-path → .npz, sharding-aware restore.
+
+No orbax in this environment; this is a self-contained implementation with
+the same contract: save(state) → directory; restore(state_like) → state
+with each leaf device_put to the target sharding (so a checkpoint written
+on one mesh restores onto another).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+_BF16 = "__bf16__"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz can't store ml_dtypes
+            flat[key + _BF16] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_pytree(tree, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+
+
+def load_pytree(tree_like, path: str, shardings: Optional[Any] = None):
+    """Restore into the structure of ``tree_like``; device_put each leaf to
+    the matching sharding if given."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(flat_paths[0]))
+    for (pth, like), shard in zip(flat_paths[0], shard_leaves):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pth)
+        if key + _BF16 in data:
+            import ml_dtypes
+            arr = data[key + _BF16].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+        leaves.append(jax.device_put(arr, shard) if shard is not None
+                      else jax.numpy.asarray(arr, like.dtype))
+    return jax.tree_util.tree_unflatten(flat_paths[1], leaves)
+
+
+def save_train_state(state, path: str, *, step: int, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    save_pytree(state, os.path.join(path, "state.npz"))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+
+
+def restore_train_state(state_like, path: str, shardings=None):
+    state = load_pytree(state_like, os.path.join(path, "state.npz"),
+                        shardings)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return state, meta

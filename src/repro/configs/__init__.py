@@ -1,0 +1,7 @@
+from .base import (LayerSpec, MambaSettings, MLASettings, ModelConfig,
+                   MoESettings, Stage, get_config, list_configs, reduced,
+                   register, uniform_stages)
+
+__all__ = ["LayerSpec", "MambaSettings", "MLASettings", "ModelConfig",
+           "MoESettings", "Stage", "get_config", "list_configs", "reduced",
+           "register", "uniform_stages"]

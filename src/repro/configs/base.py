@@ -1,0 +1,232 @@
+"""Architecture config system: every assigned architecture is a
+:class:`ModelConfig` built from stages of heterogeneous macro-blocks.
+
+A *stage* scans ``repeats`` copies of a *macro-block* — an ordered tuple of
+:class:`LayerSpec`s unrolled inside the scan body.  This expresses every
+assigned pattern exactly:
+
+  uniform decoder      1 stage,  macro = (gqa+ffn,)            × L
+  gemma3 5:1           stage A   macro = (local×5, global)     × 10, +rem
+  jamba 1:7 / moe 1:2  stage A   macro = 8 mixed layers        × 4
+  deepseek 3 dense     stage A = (mla+dense)×3, stage B = (mla+moe)×58
+  xlstm 5:1            stage A   macro = (mlstm×5, slstm)      × 4
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+_REGISTRY: Dict[str, "ModelConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    shadow_capacity_factor: float = 2.0
+    s_max: int = 8                      # Pro-Prophet shadow-slot budget
+    aux_loss_coef: float = 0.0          # off: system-level balancing only
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASettings:
+    q_rank: int = 1536
+    kv_rank: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSettings:
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                  # gqa | mla | mamba | mlstm | slstm
+    ffn: str                    # dense | moe | none
+    window: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    macro: Tuple[LayerSpec, ...]
+    repeats: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str              # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    stages: Tuple[Stage, ...]
+    head_dim: Optional[int] = None
+    ffn_kind: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True                 # False ⇒ encoder (hubert)
+    moe: Optional[MoESettings] = None
+    mla: Optional[MLASettings] = None
+    mamba: Optional[MambaSettings] = None
+    mlstm_heads: int = 4
+    modality: str = "text"              # text | vlm | audio
+    num_prefix_tokens: int = 0          # VLM patch embeddings
+    tie_embeddings: bool = True
+    source: str = ""                    # citation
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def num_layers(self) -> int:
+        return sum(len(s.macro) * s.repeats for s in self.stages)
+
+    @property
+    def layer_specs(self):
+        out = []
+        for s in self.stages:
+            for _ in range(s.repeats):
+                out.extend(s.macro)
+        return out
+
+    @property
+    def num_moe_layers(self) -> int:
+        return sum(1 for l in self.layer_specs if l.ffn == "moe")
+
+    @property
+    def supports_decode(self) -> bool:
+        return self.causal and self.modality != "audio"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Every attention layer windowed, or attention-free ⇒ long-context
+        decode allowed.  MLA is full attention (latent KV is still O(S))."""
+        return all(l.mixer not in ("gqa", "mla") or
+                   (l.mixer == "gqa" and l.window is not None)
+                   for l in self.layer_specs)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + layers)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        nm = 3 if self.ffn_kind == "swiglu" else 2
+        for spec in self.layer_specs:
+            if spec.mixer == "gqa":
+                total += d * (self.num_heads + self.num_kv_heads * 2) * hd
+                total += self.num_heads * hd * d
+            elif spec.mixer == "mla":
+                m = self.mla
+                total += d * m.q_rank + m.q_rank * self.num_heads * (m.nope_dim + m.rope_dim)
+                total += d * (m.kv_rank + m.rope_dim)
+                total += m.kv_rank * self.num_heads * (m.nope_dim + m.v_dim)
+                total += self.num_heads * m.v_dim * d
+            elif spec.mixer == "mamba":
+                di = self.mamba.expand * d
+                dt_rank = max(16, d // 16)
+                total += d * 2 * di + di * (dt_rank + 2 * self.mamba.d_state)
+                total += dt_rank * di + di * d + di * self.mamba.d_state
+            elif spec.mixer in ("mlstm", "slstm"):
+                if spec.mixer == "mlstm":
+                    di = 2 * d
+                    total += d * 2 * di + 3 * di * di + di * 2 * self.mlstm_heads + di * d
+                else:
+                    total += d * 4 * d + d * 4 * (d // self.mlstm_heads) + d * d
+            if spec.ffn == "dense":
+                total += nm * d * self.d_ff
+            elif spec.ffn == "moe":
+                mo = self.moe
+                total += nm * d * mo.d_expert * mo.num_experts + d * mo.num_experts
+                if mo.num_shared:
+                    total += nm * d * (mo.shared_d_ff or mo.d_expert * mo.num_shared)
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE top-k instead of all experts)."""
+        if self.moe is None:
+            return self.param_count()
+        nm = 3 if self.ffn_kind == "swiglu" else 2
+        mo = self.moe
+        inactive = nm * self.d_model * mo.d_expert * (mo.num_experts - mo.top_k)
+        return self.param_count() - inactive * self.num_moe_layers
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def list_configs():
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    from . import (deepseek_v3_671b, gemma3_27b, hubert_xlarge,  # noqa: F401
+                   jamba_v0_1_52b, minicpm_2b, moe_gpt, paligemma_3b,
+                   qwen2_1_5b, qwen3_moe_235b_a22b, smollm_360m, xlstm_350m)
+
+
+def uniform_stages(num_layers: int, spec: LayerSpec) -> Tuple[Stage, ...]:
+    return (Stage(macro=(spec,), repeats=num_layers),)
+
+
+def reduced(cfg: ModelConfig, *, d_model: int = 256, layers: int = 2,
+            vocab: int = 512, d_ff: int = 512, max_experts: int = 4,
+            seq_window: int = 64) -> ModelConfig:
+    """Smoke-test variant of the same family: ≤2 layers, d_model ≤512,
+    ≤4 experts — structure (mixers/ffn kinds/pattern) preserved."""
+    specs = cfg.layer_specs
+    # Keep a structurally representative prefix: first `layers` distinct
+    # (mixer, ffn, windowed?) combos, else the first `layers` layers.
+    seen, macro = [], []
+    for l in specs:
+        key = (l.mixer, l.ffn, l.window is not None)
+        if key not in seen:
+            seen.append(key)
+            macro.append(LayerSpec(l.mixer, l.ffn,
+                                   seq_window if l.window else None))
+        if len(macro) >= max(layers, len(seen)):
+            break
+    while len(macro) < layers:
+        macro.append(macro[-1])
+    heads = min(cfg.num_heads, 4)
+    kv = min(cfg.num_kv_heads, heads)
+    while heads % kv:
+        kv -= 1
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, max_experts),
+            top_k=min(cfg.moe.top_k, 2), d_expert=d_ff // 2,
+            num_shared=min(cfg.moe.num_shared, 1), shared_d_ff=d_ff // 2,
+            s_max=2)
+    mla = dataclasses.replace(cfg.mla, q_rank=64, kv_rank=32, nope_dim=32,
+                              rope_dim=16, v_dim=32) if cfg.mla else None
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", d_model=d_model, num_heads=heads,
+        num_kv_heads=kv, head_dim=d_model // heads, d_ff=d_ff,
+        vocab_size=vocab, stages=(Stage(tuple(macro), 1),), moe=moe, mla=mla,
+        num_prefix_tokens=min(cfg.num_prefix_tokens, 4))

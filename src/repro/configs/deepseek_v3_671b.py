@@ -1,0 +1,32 @@
+"""deepseek-v3-671b [moe]: 61L, MLA attention, 1 shared + 256 routed
+experts top-8, first 3 layers dense, MTP head. [arXiv:2412.19437]"""
+from .base import (LayerSpec, MLASettings, ModelConfig, MoESettings, Stage,
+                   register)
+
+_dense = LayerSpec("mla", "dense")
+_moe = LayerSpec("mla", "moe")
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,           # MLA: effectively MHA over latent KV
+    head_dim=128,
+    d_ff=18432,                 # dense-layer ffn dim (first 3 layers)
+    vocab_size=129280,
+    stages=(
+        Stage(macro=(_dense,), repeats=3),
+        Stage(macro=(_moe,), repeats=58),
+    ),
+    ffn_kind="swiglu",
+    mla=MLASettings(q_rank=1536, kv_rank=512, nope_dim=128, rope_dim=64,
+                    v_dim=128),
+    moe=MoESettings(num_experts=256, top_k=8, d_expert=2048, num_shared=1,
+                    shared_d_ff=2048, capacity_factor=1.25, s_max=8),
+    source="arXiv:2412.19437",
+))
+
+# Multi-token prediction (MTP): one extra depth-1 prediction module, built
+# by repro.train.mtp when enabled.
+MTP_DEPTH = 1

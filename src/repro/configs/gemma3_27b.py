@@ -1,0 +1,27 @@
+"""gemma3-27b [dense]: 5 local (sliding-window 1024) : 1 global layers,
+128k context. 62 layers = (5 local + 1 global) × 10 + 2 local remainder.
+[hf:google/gemma-3-* family]"""
+from .base import LayerSpec, ModelConfig, Stage, register
+
+LOCAL_WINDOW = 1024
+
+_local = LayerSpec("gqa", "dense", window=LOCAL_WINDOW)
+_global = LayerSpec("gqa", "dense", window=None)
+
+CONFIG = register(ModelConfig(
+    name="gemma3-27b",
+    arch_type="dense",
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    stages=(
+        Stage(macro=(_local,) * 5 + (_global,), repeats=10),
+        Stage(macro=(_local, _local), repeats=1),
+    ),
+    ffn_kind="swiglu",
+    rope_theta=1e6,
+    source="hf:google/gemma-3-1b-pt (27b dims)",
+))

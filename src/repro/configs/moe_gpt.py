@@ -1,0 +1,44 @@
+"""The paper's own benchmark models (Table III): MoE-GPT-{S,M,L,DS,DM}.
+
+GPT blocks with every FFN replaced by a MoE layer (GeLU experts, as in
+FastMoE/DeepSpeed-MoE GPT variants).  "Embedding" = d_model, "Hidden" =
+d_ff.  The number of experts per layer equals the number of devices in the
+paper's runs; we default to 16 and the benchmark harness overrides it.
+"""
+import dataclasses
+
+from .base import LayerSpec, ModelConfig, MoESettings, register, uniform_stages
+
+
+def _moe_gpt(name: str, layers: int, d_model: int, d_ff: int,
+             num_experts: int = 16, top_k: int = 1) -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        arch_type="moe",
+        d_model=d_model,
+        num_heads=max(4, d_model // 64),
+        num_kv_heads=max(4, d_model // 64),
+        head_dim=64,
+        d_ff=d_ff,
+        vocab_size=50304,
+        stages=uniform_stages(layers, LayerSpec("gqa", "moe")),
+        ffn_kind="gelu",
+        moe=MoESettings(num_experts=num_experts, top_k=top_k,
+                        d_expert=d_ff, capacity_factor=1.25, s_max=4),
+        source="Pro-Prophet Table III",
+    )
+
+
+MOE_GPT_S = register(_moe_gpt("moe-gpt-s", 12, 512, 1024))
+MOE_GPT_M = register(_moe_gpt("moe-gpt-m", 12, 1024, 2048))
+MOE_GPT_L = register(_moe_gpt("moe-gpt-l", 12, 2048, 4096))
+MOE_GPT_DS = register(_moe_gpt("moe-gpt-ds", 24, 512, 1024))
+MOE_GPT_DM = register(_moe_gpt("moe-gpt-dm", 24, 1024, 2048))
+
+
+def with_experts(cfg: ModelConfig, num_experts: int, top_k: int = 1
+                 ) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, name=f"{cfg.name}-e{num_experts}k{top_k}",
+        moe=dataclasses.replace(cfg.moe, num_experts=num_experts,
+                                top_k=top_k))

@@ -1,0 +1,22 @@
+"""paligemma-3b [vlm]: gemma-style decoder (MQA kv=1) consuming SigLIP
+patch embeddings through a projector.  The vision tower is a stub —
+input_specs provides 256 patch embeddings. [arXiv:2407.07726]"""
+from .base import LayerSpec, ModelConfig, register, uniform_stages
+
+NUM_PATCHES = 256
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    stages=uniform_stages(18, LayerSpec("gqa", "dense")),
+    ffn_kind="swiglu",
+    modality="vlm",
+    num_prefix_tokens=NUM_PATCHES,
+    source="arXiv:2407.07726",
+))

@@ -1,0 +1,18 @@
+"""qwen2-1.5b [dense]: GQA with QKV bias. [arXiv:2407.10671]"""
+from .base import LayerSpec, ModelConfig, register, uniform_stages
+
+CONFIG = register(ModelConfig(
+    name="qwen2-1.5b",
+    arch_type="dense",
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    stages=uniform_stages(28, LayerSpec("gqa", "dense")),
+    ffn_kind="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="arXiv:2407.10671",
+))

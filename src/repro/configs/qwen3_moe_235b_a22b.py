@@ -1,0 +1,22 @@
+"""qwen3-moe-235b-a22b [moe]: 94L, 128 experts top-8, fine-grained
+d_expert=1536, GQA kv=4. Primary Pro-Prophet showcase (large E, small
+experts ⇒ cheap Trans relative to compute).
+[hf:Qwen/Qwen3-235B-A22B, dims per assignment / Qwen3-30B-A3B card]"""
+from .base import LayerSpec, ModelConfig, MoESettings, register, uniform_stages
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,                 # per-expert ffn dim
+    vocab_size=151936,
+    stages=uniform_stages(94, LayerSpec("gqa", "moe")),
+    ffn_kind="swiglu",
+    rope_theta=1e6,
+    moe=MoESettings(num_experts=128, top_k=8, d_expert=1536,
+                    capacity_factor=1.25, s_max=8),
+    source="hf:Qwen/Qwen3-30B-A3B (scaled per assignment)",
+))

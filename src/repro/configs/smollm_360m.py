@@ -1,0 +1,17 @@
+"""smollm-360m [dense]: llama-arch small model.
+[hf:HuggingFaceTB/SmolLM-135M family]"""
+from .base import LayerSpec, ModelConfig, register, uniform_stages
+
+CONFIG = register(ModelConfig(
+    name="smollm-360m",
+    arch_type="dense",
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49152,
+    stages=uniform_stages(32, LayerSpec("gqa", "dense")),
+    ffn_kind="swiglu",
+    source="hf:HuggingFaceTB/SmolLM-360M",
+))

@@ -1,0 +1,20 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks, d_ff=0 (the blocks carry their
+own up/down projections). 24 layers = 4 × (5 mLSTM + 1 sLSTM).
+[arXiv:2405.04517]"""
+from .base import LayerSpec, ModelConfig, Stage, register
+
+_m = LayerSpec("mlstm", "none")
+_s = LayerSpec("slstm", "none")
+
+CONFIG = register(ModelConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    stages=(Stage(macro=(_m, _m, _m, _m, _m, _s), repeats=4),),
+    mlstm_heads=4,
+    source="arXiv:2405.04517",
+))

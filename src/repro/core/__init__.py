@@ -1,0 +1,30 @@
+"""Pro-Prophet core: the paper's contribution as a composable library.
+
+Planner (§IV): lightweight expert placements, performance model, greedy
+locality-based search.  Scheduler (§V): scheduling space + block-wise
+sub-operator overlap.  Engine: per-iteration orchestration for the trainer.
+"""
+from .distribution import (LocalityTracker, ModelLocalityTracker,
+                           balance_degree, distribution_similarity,
+                           imbalance_ratio, rb_ratio,
+                           routing_matrix_from_assignments)
+from .engine import EngineConfig, ProProphetEngine
+from .perfmodel import (V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS, HardwareSpec,
+                        PerfModel)
+from .placement import ExpertPlacement, default_owner, shadow_to_all, traditional
+from .planner import GreedyPlanner, LocalityPlanner, PlanResult
+from .scheduler import (BlockCosts, Timeline, build_graph, iteration_time,
+                        list_schedule, simulate, split_trans)
+from .synthetic import GatingTrace
+from . import baselines
+
+__all__ = [
+    "LocalityTracker", "ModelLocalityTracker", "balance_degree",
+    "distribution_similarity", "imbalance_ratio", "rb_ratio",
+    "routing_matrix_from_assignments", "EngineConfig", "ProProphetEngine",
+    "HardwareSpec", "PerfModel", "V5E_PEAK_FLOPS", "V5E_HBM_BW", "V5E_ICI_BW",
+    "ExpertPlacement", "default_owner", "shadow_to_all", "traditional",
+    "GreedyPlanner", "LocalityPlanner", "PlanResult", "BlockCosts",
+    "Timeline", "build_graph", "iteration_time", "list_schedule", "simulate",
+    "split_trans", "GatingTrace", "baselines",
+]

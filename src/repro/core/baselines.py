@@ -1,0 +1,66 @@
+"""Baseline load-balancing policies the paper compares against (§VI).
+
+* ``vanilla_ep``      — DeepSpeed-MoE-style plain expert parallelism.
+* ``fastermoe_plan``  — FasterMoE's *dynamic shadowing*: greedily replicate
+  the globally heaviest experts onto **all** devices while its cost model
+  predicts an improvement.  Coarse-grained (whole-device-set) and executed
+  blocked (no overlap), per the paper's characterization.
+* ``topk_policy``     — the ablation's static policies (top2/top3): always
+  replicate the k heaviest experts to all devices (§VI.C, Fig. 15).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .perfmodel import PerfModel
+from .placement import ExpertPlacement, shadow_to_all, traditional
+from .planner import PlanResult
+
+Array = np.ndarray
+
+
+def vanilla_ep(num_experts: int, num_devices: int) -> ExpertPlacement:
+    return traditional(num_experts, num_devices)
+
+
+def topk_policy(g: Array, k: int) -> ExpertPlacement:
+    """Replicate the k heaviest experts onto all devices."""
+    g = np.asarray(g, dtype=np.float64)
+    D, E = g.shape
+    heavy = np.argsort(-g.sum(axis=0), kind="stable")[:k]
+    return shadow_to_all(E, D, heavy)
+
+
+def fastermoe_plan(perf: PerfModel, g: Array, *, max_shadows: int | None = None
+                   ) -> PlanResult:
+    """FasterMoE-style shadowing: replicate the heaviest expert to all
+    devices while the performance model predicts a win.
+
+    Unlike Pro-Prophet, the target set is always *all* devices (n = 0) and
+    the evaluation never accounts for overlap (blocked execution)."""
+    g = np.asarray(g, dtype=np.float64)
+    D, E = g.shape
+    max_shadows = E if max_shadows is None else max_shadows
+
+    placement = traditional(E, D)
+    H, R = placement.compute_loads(g)
+    t_best = perf.layer_time(R, H, 0, 0)
+    baseline = t_best
+    tokens = g.sum(axis=0)
+    order = list(np.argsort(-tokens, kind="stable"))
+    steps = 0
+    while order and placement.num_shadowed < max_shadows:
+        e = int(order.pop(0))
+        cand = placement.with_shadow(
+            e, frozenset(range(D)) - {int(placement.owner[e])})
+        Hc, Rc = cand.compute_loads(g)
+        t = perf.layer_time(Rc, Hc, cand.num_shadowed, 0)
+        steps += 1
+        if t < t_best:
+            t_best, placement, (H, R) = t, cand, (Hc, Rc)
+        else:
+            break
+    total = float(g.sum())
+    return PlanResult(placement=placement, predicted_time=t_best,
+                      baseline_time=baseline, steps_examined=steps,
+                      balanced=bool((H.max() - H.min()) < total / E))

@@ -1,0 +1,112 @@
+"""Execution engine: planner × scheduler → a per-iteration step plan.
+
+The engine is the piece the trainer talks to.  Per iteration it
+
+  1. ingests the routing matrices observed on-device last step (one per MoE
+     layer — cheap host transfers of ``[D, E]`` int32),
+  2. lets each layer's :class:`LocalityPlanner` (re)plan at its cadence,
+  3. packs the placements into the static-shape arrays the jitted train
+     step consumes (``shadow_idx`` / ``shadow_valid`` / ``shadow_devs``
+     stacked over MoE layers),
+  4. exposes predicted timings (eq. 6 / eq. 8) for logging and benchmarks.
+
+This is the paper's Fig. 5 "execution engine" realized for a JAX runtime:
+the *Plan* primitive runs here on host, overlapped with device execution of
+the current step (the locality property is what makes planning one step
+ahead sound).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .perfmodel import HardwareSpec, PerfModel
+from .placement import ExpertPlacement, traditional
+from .planner import GreedyPlanner, LocalityPlanner, PlanResult
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_experts: int
+    num_devices: int
+    num_moe_layers: int
+    s_max: int = 8
+    n: int = 0                    # paper's n (devices NOT sent to)
+    alpha: float = 0.25           # eq. 7 balance tolerance
+    replan_interval: int = 1      # locality cadence
+    predictor: str = "last"
+    scheduled: bool = True        # plan against eq. 8 (planner×scheduler)
+    trans_mode: str = "ring"      # TPU adaptation; "p2p" = paper-faithful
+    policy: str = "pro_prophet"   # pro_prophet | fastermoe | top2 | top3 | none
+
+
+class ProProphetEngine:
+    def __init__(self, cfg: EngineConfig, hw: HardwareSpec):
+        self.cfg = cfg
+        self.perf = PerfModel(hw, cfg.num_devices, trans_mode=cfg.trans_mode)
+        greedy = GreedyPlanner(self.perf, n=cfg.n, alpha=cfg.alpha,
+                               s_max=cfg.s_max, scheduled=cfg.scheduled)
+        self.planners: List[LocalityPlanner] = [
+            LocalityPlanner(greedy, cfg.num_devices, cfg.num_experts,
+                            replan_interval=cfg.replan_interval,
+                            predictor=cfg.predictor)
+            for _ in range(cfg.num_moe_layers)
+        ]
+        self._placements: List[ExpertPlacement] = [
+            traditional(cfg.num_experts, cfg.num_devices)
+            for _ in range(cfg.num_moe_layers)
+        ]
+        self.last_results: List[Optional[PlanResult]] = [None] * cfg.num_moe_layers
+
+    # ------------------------------------------------------------------
+    def observe(self, per_layer_g: Sequence[Array]) -> None:
+        """Feed routing matrices observed in the step that just finished;
+        plans the placements to use next step."""
+        assert len(per_layer_g) == self.cfg.num_moe_layers
+        if self.cfg.policy == "none":
+            return
+        from .baselines import fastermoe_plan, topk_policy
+        for li, g in enumerate(per_layer_g):
+            if self.cfg.policy == "pro_prophet":
+                res = self.planners[li].maybe_plan(g)
+                self._placements[li] = res.placement
+                self.last_results[li] = res
+            elif self.cfg.policy == "fastermoe":
+                res = fastermoe_plan(self.perf, g, max_shadows=self.cfg.s_max)
+                self._placements[li] = res.placement
+                self.last_results[li] = res
+            elif self.cfg.policy in ("top2", "top3"):
+                k = int(self.cfg.policy[-1])
+                self._placements[li] = topk_policy(g, min(k, self.cfg.s_max))
+            else:
+                raise ValueError(f"unknown policy {self.cfg.policy}")
+
+    @property
+    def placements(self) -> List[ExpertPlacement]:
+        return list(self._placements)
+
+    def step_arrays(self) -> Dict[str, Array]:
+        """Stacked static-shape placement arrays for the jitted step."""
+        cfg = self.cfg
+        idx = np.zeros((cfg.num_moe_layers, cfg.s_max), dtype=np.int32)
+        valid = np.zeros((cfg.num_moe_layers, cfg.s_max), dtype=np.float32)
+        devs = np.zeros((cfg.num_moe_layers, cfg.s_max, cfg.num_devices),
+                        dtype=np.float32)
+        for li, pl in enumerate(self._placements):
+            arrs = pl.to_device_arrays(cfg.s_max)
+            idx[li] = arrs["shadow_idx"]
+            valid[li] = arrs["shadow_valid"]
+            devs[li] = arrs["shadow_devs"]
+        return {"shadow_idx": idx, "shadow_valid": valid, "shadow_devs": devs}
+
+    def predicted_times(self) -> Dict[str, float]:
+        ts = [r.predicted_time for r in self.last_results if r is not None]
+        bs = [r.baseline_time for r in self.last_results if r is not None]
+        if not ts:
+            return {"predicted": 0.0, "baseline": 0.0, "speedup": 1.0}
+        return {"predicted": float(np.sum(ts)), "baseline": float(np.sum(bs)),
+                "speedup": float(np.sum(bs) / max(np.sum(ts), 1e-12))}

@@ -1,0 +1,169 @@
+"""The planner's performance model (paper §IV.B, eqs. 1–6; §V.C, eq. 8).
+
+Estimates the execution time of one MoE layer under a lightweight expert
+placement.  All terms are straggler-bound maxima, matching the paper's
+P2P-based a2a (eq. 1) and sequential per-device expert compute (eq. 2/3).
+
+Two ``Trans``/``Agg`` cost variants are provided:
+
+* ``"p2p"`` — the paper's eq. 4/5 (GPU point-to-multipoint):
+  ``T = s·(D−n)·size / (D·B̄)``.
+* ``"ring"`` — the TPU adaptation (DESIGN.md §3): shadow slots are
+  materialized by a ring collective over the EP axis, so the wire time does
+  not shrink with n: ``T = s·(D−1)·size / (D·B̄)``.  n still matters for
+  *compute* balance via the placement's compute mask.
+
+The scheduler coupling (eq. 8) replaces Trans/Agg by their unhidden
+residuals: ``T_PTrans = max(0, T_Trans − T_FEC − T_FNEC)`` and
+``T_PAgg = max(0, T_Agg − T_BEC − T_BNEC)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+
+Array = np.ndarray
+TransMode = Literal["p2p", "ring"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Cluster constants feeding the performance model.
+
+    bandwidth:   B̄, average per-device communication bandwidth [bytes/s]
+    throughput:  t, per-device expert compute throughput [tokens/s]
+    input_bytes: size(input) — one token's activation payload [bytes]
+    expert_param_bytes: size(e.params) == size(e.grads) [bytes]
+    t_fnec / t_bnec: measured fwd/bwd time of the *non*-MoE layer [s]
+                     (static per model; used by eq. 8 and the sub-op split)
+    """
+
+    bandwidth: float
+    throughput: float
+    input_bytes: float
+    expert_param_bytes: float
+    t_fnec: float = 0.0
+    t_bnec: float = 0.0
+
+    @staticmethod
+    def from_model_dims(d_model: int, d_ff: int, *,
+                        bandwidth: float, flops_per_s: float,
+                        bytes_per_elem: int = 2,
+                        t_fnec: float = 0.0, t_bnec: float = 0.0,
+                        num_ffn_mats: int = 2) -> "HardwareSpec":
+        """Derive token/expert sizes from layer dimensions.
+
+        An expert FFN with ``num_ffn_mats`` matrices (2 for GeLU-MLP as in
+        the paper's MoE-GPT, 3 for SwiGLU) has ``num_ffn_mats·d_model·d_ff``
+        parameters and ``2·params`` FLOPs per token.
+        """
+        params = num_ffn_mats * d_model * d_ff
+        flops_per_token = 2 * params
+        return HardwareSpec(
+            bandwidth=bandwidth,
+            throughput=flops_per_s / flops_per_token,
+            input_bytes=d_model * bytes_per_elem,
+            expert_param_bytes=params * bytes_per_elem,
+            t_fnec=t_fnec,
+            t_bnec=t_bnec,
+        )
+
+
+# TPU v5e constants (per chip), used for roofline + TPU-mode predictions.
+V5E_PEAK_FLOPS = 197e12          # bf16 FLOP/s
+V5E_HBM_BW = 819e9               # bytes/s
+V5E_ICI_BW = 50e9                # bytes/s per link (≈per-device ring bw)
+
+
+class PerfModel:
+    """Closed-form layer-time estimator (paper eqs. 1–6, 8)."""
+
+    def __init__(self, hw: HardwareSpec, num_devices: int,
+                 trans_mode: TransMode = "p2p"):
+        self.hw = hw
+        self.D = int(num_devices)
+        self.trans_mode = trans_mode
+
+    # -- eq. 1 ------------------------------------------------------------
+    def t_a2a(self, R: Array) -> float:
+        R = np.asarray(R, dtype=np.float64)
+        return float(R.max()) * self.hw.input_bytes / self.hw.bandwidth
+
+    # -- eq. 2 ------------------------------------------------------------
+    def t_fec(self, H: Array) -> float:
+        H = np.asarray(H, dtype=np.float64)
+        return float(H.max()) / self.hw.throughput
+
+    # -- eq. 3 ------------------------------------------------------------
+    def t_bec(self, H: Array) -> float:
+        return 2.0 * self.t_fec(H)
+
+    # -- eqs. 4/5 ---------------------------------------------------------
+    def _t_transfer(self, s: int, n: int, size: float) -> float:
+        if s <= 0:
+            return 0.0
+        if self.trans_mode == "p2p":
+            span = self.D - n
+        else:  # ring collective: wire time independent of the subset size
+            span = self.D - 1
+        span = max(span, 0)
+        return s * span * size / (self.D * self.hw.bandwidth)
+
+    def t_trans(self, s: int, n: int) -> float:
+        return self._t_transfer(s, n, self.hw.expert_param_bytes)
+
+    def t_agg(self, s: int, n: int) -> float:
+        return self._t_transfer(s, n, self.hw.expert_param_bytes)
+
+    # -- eq. 6: unscheduled layer time -------------------------------------
+    def layer_time(self, R: Array, H: Array, s: int, n: int) -> float:
+        return (4.0 * self.t_a2a(R)
+                + 3.0 * self.t_fec(H)
+                + self.t_trans(s, n)
+                + self.t_agg(s, n))
+
+    # -- eq. 8: with the scheduler's overlap ------------------------------
+    def layer_time_scheduled(self, R: Array, H: Array, s: int, n: int) -> float:
+        t_fec = self.t_fec(H)
+        t_bec = self.t_bec(H)
+        p_trans = max(0.0, self.t_trans(s, n) - t_fec - self.hw.t_fnec)
+        p_agg = max(0.0, self.t_agg(s, n) - t_bec - self.hw.t_bnec)
+        return 4.0 * self.t_a2a(R) + 3.0 * t_fec + p_trans + p_agg
+
+    # -- convenience -------------------------------------------------------
+    def layer_time_for(self, placement, g: Array, *, scheduled: bool = False,
+                       n: int | None = None) -> float:
+        """Evaluate a placement on routing matrix ``G`` directly."""
+        H, R = placement.compute_loads(g)
+        s = placement.num_shadowed
+        if n is None:
+            # Effective mean "not transferred to" count across shadowed
+            # experts (the paper's n is uniform; placements may not be).
+            if s:
+                sizes = [len(d) for d in placement.shadows.values() if d]
+                n = int(round(self.D - 1 - float(np.mean(sizes))))
+            else:
+                n = 0
+        fn = self.layer_time_scheduled if scheduled else self.layer_time
+        return fn(R, H, s, n)
+
+    def breakdown(self, placement, g: Array, *, scheduled: bool = False) -> dict:
+        """Term-by-term dict — feeds the Table-I style benchmark."""
+        H, R = placement.compute_loads(g)
+        s = placement.num_shadowed
+        sizes = [len(d) for d in placement.shadows.values() if d]
+        n = int(round(self.D - 1 - float(np.mean(sizes)))) if sizes else 0
+        t_a2a = self.t_a2a(R)
+        t_fec = self.t_fec(H)
+        t_trans = self.t_trans(s, n)
+        t_agg = self.t_agg(s, n)
+        if scheduled:
+            t_trans = max(0.0, t_trans - t_fec - self.hw.t_fnec)
+            t_agg = max(0.0, t_agg - 2 * t_fec - self.hw.t_bnec)
+        return {
+            "a2a": 4 * t_a2a, "fec": t_fec, "bec": 2 * t_fec,
+            "trans": t_trans, "agg": t_agg,
+            "total": 4 * t_a2a + 3 * t_fec + t_trans + t_agg,
+        }

@@ -1,0 +1,147 @@
+"""Lightweight expert placements (paper §IV.A).
+
+A *lightweight expert placement* independently maps each (selected) expert
+to a **subset** of devices.  Only parameters (``Trans``) and gradients
+(``Agg``) travel, and only within the subset — optimizer states stay on the
+owner device.  This module is the host-side representation; the traced /
+device-side form (static shadow slots) is produced by
+:meth:`ExpertPlacement.to_device_arrays`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Mapping, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+def default_owner(num_experts: int, num_devices: int) -> Array:
+    """Contiguous expert→owner-device map (EP home layout).
+
+    Experts are divided evenly; expert ``e`` lives on device
+    ``e // (E / D)`` when ``E >= D`` and ``e % D`` when ``E < D``
+    (the latter only matters for toy configs).
+    """
+    if num_experts >= num_devices:
+        assert num_experts % num_devices == 0, (num_experts, num_devices)
+        per = num_experts // num_devices
+        return np.arange(num_experts) // per
+    return np.arange(num_experts) % num_devices
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlacement:
+    """Ownership layout + shadow sets for one MoE layer.
+
+    ``shadows`` maps an expert id to the frozen set of *extra* devices that
+    temporarily hold its parameters this iteration (never includes the
+    owner).  The empty mapping is the traditional EP placement.
+    """
+
+    num_experts: int
+    num_devices: int
+    shadows: Mapping[int, FrozenSet[int]] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        owner = default_owner(self.num_experts, self.num_devices)
+        for e, devs in self.shadows.items():
+            assert 0 <= e < self.num_experts, e
+            assert int(owner[e]) not in devs, (
+                f"shadow set of expert {e} contains its owner {owner[e]}")
+            assert all(0 <= d < self.num_devices for d in devs)
+
+    # -- basic queries --------------------------------------------------
+    @property
+    def owner(self) -> Array:
+        return default_owner(self.num_experts, self.num_devices)
+
+    @property
+    def num_shadowed(self) -> int:
+        """s in the paper: number of experts whose params are transferred."""
+        return sum(1 for devs in self.shadows.values() if devs)
+
+    def placement_matrix(self) -> Array:
+        """Boolean ``P[e, d]``: does device d hold expert e's params."""
+        p = np.zeros((self.num_experts, self.num_devices), dtype=bool)
+        p[np.arange(self.num_experts), self.owner] = True
+        for e, devs in self.shadows.items():
+            for d in devs:
+                p[e, d] = True
+        return p
+
+    def with_shadow(self, expert: int, devices: FrozenSet[int]) -> "ExpertPlacement":
+        owner = int(self.owner[expert])
+        devices = frozenset(int(d) for d in devices) - {owner}
+        new = dict(self.shadows)
+        new[expert] = frozenset(new.get(expert, frozenset())) | devices
+        return ExpertPlacement(self.num_experts, self.num_devices, new)
+
+    # -- load computation (Replace_Inputs in Algorithm 1) ----------------
+    def compute_loads(self, g: Array) -> Tuple[Array, Array]:
+        """Given routing matrix ``G[d, e]``, return ``(H, R)``.
+
+        ``H[i]``: tokens *computed* on device i.  ``R[i]``: tokens
+        *received* by device i from other devices (the paper's a2a term).
+        A token on source device d routed to expert e is computed locally
+        iff d holds e's params under this placement; otherwise it is sent
+        to e's owner.  (When an expert is shadowed, tokens on non-holder
+        devices still go to the owner — the shadow only absorbs the load
+        already resident on the shadow devices, paper Fig. 6b.)
+        """
+        g = np.asarray(g, dtype=np.float64)
+        D, E = self.num_devices, self.num_experts
+        assert g.shape == (D, E), (g.shape, (D, E))
+        p = self.placement_matrix()  # [E, D]
+        holds = p.T  # [D, E] — device d holds expert e
+        local = g * holds  # tokens computed where they live
+        remote = g * (~holds)  # tokens shipped to the owner
+        H = local.sum(axis=1)
+        H += np.bincount(self.owner, weights=remote.sum(axis=0), minlength=D)
+        R = np.bincount(self.owner, weights=remote.sum(axis=0), minlength=D)
+        return H, R
+
+    # -- device-side (traced) form ---------------------------------------
+    def to_device_arrays(self, s_max: int) -> Dict[str, Array]:
+        """Static-shape form for the jitted step.
+
+        Returns:
+          ``shadow_idx``  int32 ``[s_max]``  — expert id per slot (0-padded),
+          ``shadow_valid`` f32  ``[s_max]``  — 1.0 where the slot is live,
+          ``shadow_devs`` f32  ``[s_max, D]`` — compute mask (owner excluded;
+          the owner computes its tokens through the home path).
+        """
+        D = self.num_devices
+        # Padding slots carry the sentinel expert id == num_experts so the
+        # device-side lookup tables can never alias a real expert.
+        idx = np.full((s_max,), self.num_experts, dtype=np.int32)
+        valid = np.zeros((s_max,), dtype=np.float32)
+        devs = np.zeros((s_max, D), dtype=np.float32)
+        live = [(e, ds) for e, ds in sorted(self.shadows.items()) if ds]
+        if len(live) > s_max:
+            # Keep the largest shadow sets; the rest fall back to the a2a
+            # path.  The planner respects s_max so this is a safety net.
+            live.sort(key=lambda kv: -len(kv[1]))
+            live = live[:s_max]
+            live.sort()
+        for slot, (e, ds) in enumerate(live):
+            idx[slot] = e
+            valid[slot] = 1.0
+            for d in ds:
+                devs[slot, d] = 1.0
+        return {"shadow_idx": idx, "shadow_valid": valid, "shadow_devs": devs}
+
+
+def traditional(num_experts: int, num_devices: int) -> ExpertPlacement:
+    """Plain EP placement (DeepSpeed-MoE baseline)."""
+    return ExpertPlacement(num_experts, num_devices, {})
+
+
+def shadow_to_all(num_experts: int, num_devices: int, experts) -> ExpertPlacement:
+    """FasterMoE-style: replicate the given experts onto *all* devices."""
+    pl = traditional(num_experts, num_devices)
+    all_devs = frozenset(range(num_devices))
+    for e in experts:
+        pl = pl.with_shadow(int(e), all_devs)
+    return pl

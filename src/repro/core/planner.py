@@ -1,0 +1,162 @@
+"""Pro-Prophet planner: the locality-based greedy search (paper §IV.C, Alg. 1).
+
+The search space of lightweight expert placements is ``2^(E·D)``; the greedy
+algorithm instead repeatedly
+
+  1. finds the heaviest device,
+  2. selects its heaviest resident expert (not yet selected),
+  3. shadows that expert onto every device except the ``n`` devices holding
+     the fewest of its tokens (``BottomK``) — and except its owner,
+  4. re-derives the loads (``Replace_Inputs``) and evaluates the placement
+     with the performance model,
+
+keeping the *prefix* of moves that achieved the minimum predicted time
+(``cnt`` in the paper's listing).  Termination: the balance condition
+``max(H) − min(H) < α·I/E`` (eq. 7), the heaviest device repeating, or the
+shadow budget ``s_max`` being reached.
+
+The *locality-based* part: ``LocalityPlanner`` re-runs the search only every
+``replan_interval`` iterations, planning from the **predicted** distribution
+of the upcoming iteration (last observed, per the paper), and reuses the
+placement in between.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .distribution import LocalityTracker
+from .perfmodel import PerfModel
+from .placement import ExpertPlacement, traditional
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class PlanResult:
+    placement: ExpertPlacement
+    predicted_time: float        # performance-model time of `placement`
+    baseline_time: float         # time of the traditional placement
+    steps_examined: int          # greedy iterations executed
+    balanced: bool               # eq. 7 satisfied at exit
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.baseline_time / self.predicted_time if self.predicted_time else 1.0
+
+
+class GreedyPlanner:
+    """Algorithm 1.  ``n``: devices a selected expert is NOT sent to;
+    ``alpha``: balance tolerance of eq. 7; ``s_max``: shadow-slot budget
+    (static capacity of the traced step, see DESIGN.md §3)."""
+
+    def __init__(self, perf: PerfModel, *, n: int = 0, alpha: float = 0.25,
+                 s_max: int = 8, scheduled: bool = False):
+        self.perf = perf
+        self.n = int(n)
+        self.alpha = float(alpha)
+        self.s_max = int(s_max)
+        # When True the performance model evaluates eq. 8 (planner/scheduler
+        # coupling, §V.C) so the search targets the *overlapped* time.
+        self.scheduled = bool(scheduled)
+
+    def _balanced(self, H: Array, total_inputs: float, num_experts: int) -> bool:
+        return (H.max() - H.min()) < self.alpha * total_inputs / num_experts
+
+    def plan(self, g: Array) -> PlanResult:
+        g = np.asarray(g, dtype=np.float64)
+        D, E = g.shape
+        assert D == self.perf.D, (D, self.perf.D)
+        total_inputs = float(g.sum())
+        eval_time = (self.perf.layer_time_scheduled if self.scheduled
+                     else self.perf.layer_time)
+
+        placement = traditional(E, D)
+        H, R = placement.compute_loads(g)
+        t_best = eval_time(R, H, 0, self.n)
+        baseline = t_best
+
+        used_devices: set[int] = set()
+        moves: List[Tuple[int, frozenset]] = []
+        cnt = 0  # best prefix length
+        steps = 0
+        owner = placement.owner
+        tokens_per_expert = g.sum(axis=0)
+
+        cur = placement
+        while not self._balanced(H, total_inputs, E) and len(moves) < self.s_max:
+            steps += 1
+            heavy_dev = int(np.argmax(H))
+            if heavy_dev in used_devices:
+                break
+            used_devices.add(heavy_dev)
+
+            # Heaviest not-yet-shadowed expert resident on the heavy device.
+            resident = np.where(owner == heavy_dev)[0]
+            resident = [e for e in resident if e not in cur.shadows]
+            if not resident:
+                break
+            e = int(resident[int(np.argmax(tokens_per_expert[resident]))])
+
+            # BottomK: exclude the n devices holding the fewest of e's
+            # tokens (never excluding the owner — it already has the params).
+            order = np.argsort(g[:, e], kind="stable")
+            bottoms = [int(d) for d in order if int(d) != heavy_dev][: self.n]
+            shadow_devs = frozenset(range(D)) - {heavy_dev} - set(bottoms)
+
+            cur = cur.with_shadow(e, shadow_devs)
+            moves.append((e, shadow_devs))
+            H, R = cur.compute_loads(g)  # Replace_Inputs
+            t = eval_time(R, H, len(moves), self.n)
+            if t < t_best:
+                t_best = t
+                cnt = len(moves)
+
+        # Keep only the best prefix (paper: PoE ← L[0:cnt]).
+        best = traditional(E, D)
+        for e, devs in moves[:cnt]:
+            best = best.with_shadow(e, devs)
+        Hb, _ = best.compute_loads(g)
+        return PlanResult(
+            placement=best,
+            predicted_time=t_best,
+            baseline_time=baseline,
+            steps_examined=steps,
+            balanced=self._balanced(Hb, total_inputs, E),
+        )
+
+
+class LocalityPlanner:
+    """Locality-based wrapper: predicted-distribution planning at a reduced
+    cadence (paper §IV.C last paragraph + §V.A).
+
+    ``maybe_plan`` is called once per iteration with the routing matrix
+    *observed* in that iteration; it returns the placement to use for the
+    **next** iteration.  A fresh greedy search runs every
+    ``replan_interval`` iterations; otherwise the cached placement is
+    reused — valid precisely because of the locality property.
+    """
+
+    def __init__(self, greedy: GreedyPlanner, num_devices: int,
+                 num_experts: int, *, replan_interval: int = 1,
+                 predictor: str = "last"):
+        self.greedy = greedy
+        self.replan_interval = max(1, int(replan_interval))
+        self.predictor = predictor
+        self.tracker = LocalityTracker(num_devices, num_experts)
+        self._cached: Optional[PlanResult] = None
+        self._iteration = -1
+
+    @property
+    def current(self) -> Optional[PlanResult]:
+        return self._cached
+
+    def maybe_plan(self, g_observed: Array) -> PlanResult:
+        self._iteration += 1
+        self.tracker.update(np.asarray(g_observed, dtype=np.float64))
+        if self._cached is None or self._iteration % self.replan_interval == 0:
+            g_pred = self.tracker.predict_next(self.predictor)
+            self._cached = self.greedy.plan(g_pred)
+        return self._cached

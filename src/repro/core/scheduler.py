@@ -1,0 +1,239 @@
+"""Pro-Prophet scheduler (paper §V): scheduling space + block-wise strategy.
+
+The model is a stack of *MoE blocks* (MoE layer + adjacent non-MoE layer).
+Each op is ``comm`` or ``comp`` (Fig. 7):
+
+  comp: Plan, FEC, FNEC, BEC, BNEC
+  comm: Trans, Agg, A2A (×4 per block per iteration)
+
+Scheduling space (Fig. 8), reproduced as dependency rewrites:
+
+  * ``Plan_i^{j+1}`` may start as early as block i's a2a of iteration j
+    (needs iteration j's distribution — the locality prediction).
+  * ``Trans_{i+1}^j`` overlaps the forward computations of block i
+    (within-iteration, for universality across optimizer-update styles).
+  * ``Agg_{i+1}^j`` overlaps the backward computations of block i.
+
+Block-wise sub-operator strategy (Alg. 2): Trans_{i+1} is *split* into
+SubTrans1 ∥ FEC_i and SubTrans2 ∥ FNEC_i; Agg_{i+1} into SubAgg1 ∥ BNEC_i
+and SubAgg2 ∥ BEC_i.  The split sizes come from the statically-known
+non-MoE durations (paper: "the forward computation overhead of the non-MoE
+layer and the transferring overhead of an expert's parameters are static").
+
+Everything here is an analytical timeline over two serial resources per
+device group — one comm stream, one comp stream — which is exactly the
+abstraction the paper's figures use.  The TPU runtime realization of the
+same idea (hoisting shadow collectives so XLA's async scheduler can overlap
+them) lives in :mod:`repro.parallel.ep`; this module is what the planner's
+eq. 8 coupling and the ablation/overlap benchmarks reason with.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Literal, Optional, Sequence
+
+Strategy = Literal["sequential", "operator", "blockwise"]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: Literal["comm", "comp"]
+    duration: float
+    deps: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Placed:
+    name: str
+    kind: str
+    start: float
+    end: float
+
+
+@dataclasses.dataclass
+class Timeline:
+    ops: List[Placed]
+
+    @property
+    def makespan(self) -> float:
+        return max((o.end for o in self.ops), default=0.0)
+
+    def span(self, name: str) -> Placed:
+        for o in self.ops:
+            if o.name == name:
+                return o
+        raise KeyError(name)
+
+    def validate(self, graph: Sequence[Op]) -> None:
+        """Assert no dependency or resource-serialization violations."""
+        by_name = {o.name: o for o in self.ops}
+        for op in graph:
+            for d in op.deps:
+                assert by_name[d].end <= by_name[op.name].start + 1e-12, (
+                    f"{op.name} starts before dep {d} ends")
+        for kind in ("comm", "comp"):
+            placed = sorted((o for o in self.ops if o.kind == kind),
+                            key=lambda o: o.start)
+            for a, b in zip(placed, placed[1:]):
+                assert a.end <= b.start + 1e-12, (
+                    f"resource overlap on {kind}: {a.name} vs {b.name}")
+
+
+def list_schedule(graph: Sequence[Op]) -> Timeline:
+    """ASAP list scheduling on two serial resources (comm / comp).
+
+    Ops are considered in the given order (program order); each starts at
+    ``max(deps end, resource free)``.  Program order ties are what the
+    strategy builders below control.
+    """
+    end_of: Dict[str, float] = {}
+    free = {"comm": 0.0, "comp": 0.0}
+    placed: List[Placed] = []
+    pending = list(graph)
+    # Iterate until all placed; respect program order among ready ops.
+    while pending:
+        progressed = False
+        for i, op in enumerate(pending):
+            if all(d in end_of for d in op.deps):
+                start = max([free[op.kind]] + [end_of[d] for d in op.deps])
+                end = start + op.duration
+                free[op.kind] = end
+                end_of[op.name] = end
+                placed.append(Placed(op.name, op.kind, start, end))
+                pending.pop(i)
+                progressed = True
+                break
+        if not progressed:
+            raise ValueError("dependency cycle in op graph")
+    return Timeline(placed)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCosts:
+    """Per-block op durations (seconds) feeding the timeline."""
+
+    a2a: float       # one a2a (×2 fwd, ×2 bwd)
+    fec: float
+    bec: float
+    fnec: float
+    bnec: float
+    trans: float
+    agg: float
+    plan: float = 0.0
+
+
+def _block_costs(costs, i: int) -> BlockCosts:
+    return costs[i] if isinstance(costs, (list, tuple)) else costs
+
+
+def build_graph(num_blocks: int, costs, strategy: Strategy) -> List[Op]:
+    """Emit the op graph of one iteration (fwd + bwd) under a strategy.
+
+    * ``sequential`` — prior art's blocked execution: Plan→Trans→a2a→FEC→
+      a2a→FNEC per block, then the backward mirror with Agg after BEC.
+    * ``operator``   — whole-op scheduling: Trans_{i+1} ∥ FEC_i only
+      (Fig. 9a); Agg_{i+1} ∥ BEC_i; Plan under a2a.
+    * ``blockwise``  — Pro-Prophet (Alg. 2): sub-op splitting across both
+      computations of the previous block.
+    """
+    ops: List[Op] = []
+    prev = None  # name of the op that ends the previous program segment
+
+    def add(name, kind, dur, deps):
+        ops.append(Op(name, kind, dur, list(deps)))
+        return name
+
+    # ---------------- forward ----------------
+    for i in range(num_blocks):
+        c = _block_costs(costs, i)
+        deps0 = [prev] if prev else []
+        if strategy == "sequential":
+            p = add(f"plan{i}", "comp", c.plan, deps0)
+            t = add(f"trans{i}", "comm", c.trans, [p])
+            a1 = add(f"a2a1_{i}", "comm", c.a2a, [t])
+            f = add(f"fec{i}", "comp", c.fec, [a1])
+            a2 = add(f"a2a2_{i}", "comm", c.a2a, [f])
+            prev = add(f"fnec{i}", "comp", c.fnec, [a2])
+        else:
+            # Plan for the *next* iteration hides under this block's a2a —
+            # zero-cost on the critical path; modeled as comp parallel op.
+            a1 = add(f"a2a1_{i}", "comm", c.a2a, deps0)
+            add(f"plan{i}", "comp", c.plan, deps0)
+            f = add(f"fec{i}", "comp", c.fec, [a1])
+            # Trans of block i+1 overlaps block i's computations.
+            if i + 1 < num_blocks:
+                cn = _block_costs(costs, i + 1)
+                if strategy == "operator":
+                    add(f"trans{i+1}", "comm", cn.trans, [a1])
+                else:  # blockwise: split across FEC_i and FNEC_i windows
+                    s1 = min(cn.trans, c.fec) if cn.trans > 0 else 0.0
+                    s2 = cn.trans - s1
+                    add(f"subtrans1_{i+1}", "comm", s1, [a1])
+                    add(f"subtrans2_{i+1}", "comm", s2,
+                        [f"subtrans1_{i+1}"])
+            a2 = add(f"a2a2_{i}", "comm", c.a2a, [f])
+            fn_deps = [a2]
+            prev = add(f"fnec{i}", "comp", c.fnec, fn_deps)
+        if i == 0 and strategy != "sequential":
+            # Block 0's Trans cannot hide (no previous block): it fronts
+            # the iteration, matching the paper's space (Fig. 8 starts
+            # overlapping at block i+1).
+            c0 = _block_costs(costs, 0)
+            ops.insert(0, Op("trans0", "comm", c0.trans, []))
+            for op in ops:
+                if op.name == "a2a1_0":
+                    op.deps.append("trans0")
+
+    # ---------------- backward ----------------
+    for bi in range(num_blocks - 1, -1, -1):
+        c = _block_costs(costs, bi)
+        if strategy == "sequential":
+            bn = add(f"bnec{bi}", "comp", c.bnec, [prev])
+            a3 = add(f"a2a3_{bi}", "comm", c.a2a, [bn])
+            be = add(f"bec{bi}", "comp", c.bec, [a3])
+            a4 = add(f"a2a4_{bi}", "comm", c.a2a, [be])
+            prev = add(f"agg{bi}", "comm", c.agg, [a4])
+        else:
+            bn = add(f"bnec{bi}", "comp", c.bnec, [prev])
+            a3 = add(f"a2a3_{bi}", "comm", c.a2a, [bn])
+            be = add(f"bec{bi}", "comp", c.bec, [a3])
+            prev = add(f"a2a4_{bi}", "comm", c.a2a, [be])
+            # Agg of block bi+1 overlaps block bi's backward computations.
+            if bi + 1 < num_blocks:
+                cn = _block_costs(costs, bi + 1)
+                if strategy == "operator":
+                    add(f"agg{bi+1}", "comm", cn.agg, [f"a2a4_{bi+1}", bn])
+                else:
+                    s1 = min(cn.agg, c.bnec) if cn.agg > 0 else 0.0
+                    s2 = cn.agg - s1
+                    add(f"subagg1_{bi+1}", "comm", s1,
+                        [f"a2a4_{bi+1}", bn])
+                    add(f"subagg2_{bi+1}", "comm", s2, [f"subagg1_{bi+1}"])
+    if strategy != "sequential":
+        # Block 0's Agg tails the iteration (nothing left to hide under).
+        c0 = _block_costs(costs, 0)
+        if strategy == "operator":
+            add("agg0", "comm", c0.agg, [prev])
+        else:
+            add("subagg1_0", "comm", c0.agg, [prev])
+    return ops
+
+
+def iteration_time(num_blocks: int, costs, strategy: Strategy) -> float:
+    g = build_graph(num_blocks, costs, strategy)
+    return list_schedule(g).makespan
+
+
+def simulate(num_blocks: int, costs, strategy: Strategy) -> Timeline:
+    g = build_graph(num_blocks, costs, strategy)
+    tl = list_schedule(g)
+    tl.validate(g)
+    return tl
+
+
+def split_trans(trans: float, fec: float, fnec: float) -> tuple[float, float]:
+    """Static sub-op split (Alg. 2): fill the FEC window first, spill the
+    remainder into the FNEC window.  Returns (subtrans1, subtrans2)."""
+    s1 = min(trans, fec)
+    return s1, trans - s1

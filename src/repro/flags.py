@@ -1,0 +1,47 @@
+"""Experiment flags for §Perf hillclimbing (env-var driven so a dry-run
+probe can flip one optimization at a time without code edits).
+
+REPRO_TRANS_SHARDED=1   Trans psum runs on FSDP-sharded expert weights
+                        (per-shard bytes over the EP axis), shadow params
+                        gathered afterwards — instead of psum'ing the
+                        fully-gathered weights.  Beyond-paper: cuts the
+                        Trans all-reduce volume by the FSDP factor.
+REPRO_XENT_CHUNK=N      Vocab-chunked streaming cross-entropy: never
+                        materializes the [B,S,V] logits (N = vocab chunk).
+REPRO_SEQ_PARALLEL=1    Sequence-parallel activation constraints between
+                        blocks (Korthikanti-style): activations sharded
+                        over the model axis on S between layers.
+REPRO_CAPACITY_FACTOR=x Override MoE capacity factor (a2a volume lever).
+REPRO_GQA_FLASH=1       Route big-shape attention through the chunked
+                        online-softmax path with a larger q_block.
+"""
+import os
+
+
+def _flag(name: str, default: str = "0") -> str:
+    return os.environ.get(name, default)
+
+
+def trans_sharded() -> bool:
+    return _flag("REPRO_TRANS_SHARDED") == "1"
+
+
+def xent_chunk() -> int:
+    return int(_flag("REPRO_XENT_CHUNK", "0"))
+
+
+def seq_parallel() -> bool:
+    return _flag("REPRO_SEQ_PARALLEL") == "1"
+
+
+def capacity_factor_override():
+    v = _flag("REPRO_CAPACITY_FACTOR", "")
+    return float(v) if v else None
+
+
+def pin_residual() -> bool:
+    """REPRO_PIN_RESIDUAL=1: constrain the residual stream to
+    P(batch, None, None) at sublayer boundaries so the MoE's
+    all-axes token sharding cannot propagate into attention internals
+    (which triggers SPMD involuntary-remat all-gathers)."""
+    return _flag("REPRO_PIN_RESIDUAL") == "1"

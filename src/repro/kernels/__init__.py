@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots:
+
+* ``gmm``             — grouped expert matmul (the MoE FEC/BEC the paper's
+                        load balancing targets),
+* ``flash_attention`` — block-wise online-softmax attention (prefill and
+                        sliding-window layers).
+
+``ops`` exposes jit'd wrappers (interpret=True off-TPU); ``ref`` holds the
+pure-jnp oracles the tests sweep against.
+"""
+from . import ops, ref  # noqa: F401

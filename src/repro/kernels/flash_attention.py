@@ -1,0 +1,117 @@
+"""Flash-attention Pallas kernel (causal / sliding-window).
+
+Contract: q,k,v [BH, S, dh] (heads pre-flattened; GQA repeat handled by the
+wrapper in ops.py).  Grid (BH, nq, nk) with the online-softmax state
+(m, l, acc) in VMEM scratch carried across the innermost kv dimension;
+each (1, bq, dh) q tile and (1, bk, dh) k/v tile is MXU-aligned.
+
+Out-of-band tiles (kv block entirely above the causal diagonal or outside
+the sliding window) still iterate but skip compute via @pl.when — block
+*skipping* (grid pruning) is a recorded §Perf follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int, nk: int,
+            seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Tile-level relevance: any (q, k) pair in range?
+    q_first, q_last = qi * bq, qi * bq + bq - 1
+    k_first, k_last = ki * bk, ki * bk + bk - 1
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(k_first <= q_last)
+    if window is not None:
+        relevant = jnp.logical_and(relevant,
+                                   jnp.asarray(k_last > q_first - window))
+
+    @pl.when(relevant)
+    def _compute():
+        s = jnp.dot(q_ref[0], k_ref[0].T,
+                    preferred_element_type=jnp.float32) * scale
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - safe_m[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_prev - safe_m))
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _pad_seq(x, mult: int):
+    pad = (-x.shape[1]) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale: float = None, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q,k,v [BH, S, dh] → [BH, S, dh]."""
+    BH, S, dh = q.shape
+    scale = dh ** -0.5 if scale is None else scale
+    q = _pad_seq(q, bq)
+    k = _pad_seq(k, bk)
+    v = _pad_seq(v, bk)
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk, seq_len=S),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

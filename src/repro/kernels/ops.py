@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
+body executes as traced JAX ops) so the same call sites work everywhere;
+on TPU they lower to real Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gmm as _gmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gmm(x, w, *, bt: int = 128, bf: int = 128, bd: int = 128):
+    """Grouped expert matmul [G,T,D]×[G,D,F]→[G,T,F]."""
+    return _gmm.gmm(x, w, bt=bt, bf=bf, bd=bd, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale: float = None, bq: int = 128, bk: int = 128):
+    """Grouped-head attention.
+
+    Accepts q [B,S,K,G,dh], k/v [B,S,K,dh] (the shape the model uses) or
+    pre-flattened [BH,S,dh]."""
+    if q.ndim == 5:
+        B, S, K, G, dh = q.shape
+        H = K * G
+        qf = q.transpose(0, 2, 3, 1, 4).reshape(B * H, S, dh)
+        kf = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+        vf = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+        o = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                                scale=scale, bq=bq, bk=bk,
+                                interpret=_interpret())
+        return o.reshape(B, K, G, S, dh).transpose(0, 3, 1, 2, 4)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, bq=bq, bk=bk,
+                               interpret=_interpret())

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gmm_ref(x, w):
+    """[G,T,D] × [G,D,F] → [G,T,F] in f32 accumulation."""
+    return jnp.einsum("gtd,gdf->gtf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q,k,v [BH,S,dh] → [BH,S,dh]; naive masked softmax attention."""
+    BH, S, dh = q.shape
+    scale = dh ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows (can't happen with causal self-attn) → zeros.
+    p = jnp.where(mask.any(-1)[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,507 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) combination with ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / collective bytes for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh single --out artifacts/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.data import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.optim import adamw, constant
+from repro.optim.adamw import apply_updates
+from repro.parallel import make_ctx, param_shardings, zero1_pspec
+from repro.parallel.sharding import param_pspec
+from repro.train.trainer import TrainState
+
+ARCHS = [
+    "paligemma-3b", "jamba-v0.1-52b", "xlstm-350m", "qwen3-moe-235b-a22b",
+    "minicpm-2b", "gemma3-27b", "smollm-360m", "hubert-xlarge",
+    "qwen2-1.5b", "deepseek-v3-671b",
+]
+
+# name: (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+LONG_OK = {"jamba-v0.1-52b", "xlstm-350m", "gemma3-27b"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    kind = SHAPES[shape][2]
+    if kind == "decode":
+        if not cfg.supports_decode:
+            return "encoder-only: no decode step (DESIGN.md §5)"
+        if shape == "long_500k" and arch not in LONG_OK:
+            return "full-attention arch: long_500k needs sub-quadratic path"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def placement_specs(cfg: ModelConfig, ctx, mesh):
+    if cfg.moe is None:
+        return None
+    L, s = cfg.num_moe_layers, cfg.moe.s_max
+    rep = NamedSharding(mesh, P())
+    return {
+        "shadow_idx": jax.ShapeDtypeStruct((L, s), jnp.int32, sharding=rep),
+        "shadow_valid": jax.ShapeDtypeStruct((L, s), jnp.float32, sharding=rep),
+        "shadow_devs": jax.ShapeDtypeStruct((L, s, ctx.ep_size), jnp.float32,
+                                            sharding=rep),
+    }
+
+
+def batch_specs(cfg: ModelConfig, ctx, mesh, seq: int, batch: int,
+                dtype=jnp.bfloat16):
+    raw = make_batch_specs(cfg, batch, seq, dtype)
+    out = {}
+    for k, v in raw.items():
+        spec = ctx.batch_spec(len(v.shape), batch)
+        out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                      sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def _greedy_cache_spec(shape, ctx, start_dim: int = 1) -> P:
+    """Assign (pod, data, model) greedily to divisible dims (dim0 = layer
+    stack stays replicated); largest dims first."""
+    entries = [None] * len(shape)
+    axes = [a for a in (ctx.pod_axis, ctx.data_axis, ctx.model_axis) if a]
+    dims = sorted(range(start_dim, len(shape)), key=lambda i: -shape[i])
+    for ax in axes:
+        size = ctx.axis_size(ax)
+        for i in dims:
+            if entries[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                entries[i] = ax
+                break
+    return P(*entries)
+
+
+def cache_specs(cfg: ModelConfig, ctx, mesh, batch: int, seq: int,
+                dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, seq, dtype))
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype,
+            sharding=NamedSharding(mesh, _greedy_cache_spec(l.shape, ctx))),
+        shapes)
+
+
+def state_specs(cfg: ModelConfig, ctx, mesh, optimizer,
+                dtype=jnp.bfloat16):
+    params_sds = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg, dtype))
+    pshard = param_shardings(params_sds, ctx)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+
+    def opt_shard(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        stacked = 1 if "stages" in keys else 0
+        spec = param_pspec(keys, leaf.shape, ctx, stacked_dims=stacked)
+        spec = zero1_pspec(spec, leaf.shape, ctx)
+        return NamedSharding(mesh, spec)
+
+    mu_shard = jax.tree_util.tree_map_with_path(opt_shard, opt_sds.mu)
+    nu_shard = jax.tree_util.tree_map_with_path(opt_shard, opt_sds.nu)
+    state = TrainState(
+        params=_sds(params_sds, pshard),
+        opt=type(opt_sds)(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())),
+            mu=_sds(opt_sds.mu, mu_shard),
+            nu=_sds(opt_sds.nu, nu_shard)),
+    )
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_step(cfg: ModelConfig, ctx, kind: str, optimizer=None):
+    if kind == "train":
+        def step(state, batch, placements=None):
+            def lf(p):
+                return model_lib.loss_fn(p, batch, cfg, ctx,
+                                         placements=placements,
+                                         attn_impl="auto", remat=True)
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(
+                state.params)
+            updates, opt = optimizer.update(grads, state.opt, state.params)
+            params = apply_updates(state.params, updates)
+            out = {"loss": loss}
+            if aux.get("counts") is not None:
+                out["counts"] = aux["counts"]
+            return TrainState(params, opt), out
+        return step
+    if kind == "prefill":
+        def step(params, batch, placements=None):
+            logits, aux = model_lib.forward(
+                params, batch.get("tokens"), cfg, ctx, placements=placements,
+                attn_impl="auto", prefix_embeds=batch.get("prefix_embeds"),
+                frame_embeds=batch.get("frame_embeds"), remat=True)
+            # Serving returns only the last position (next-token dist).
+            return logits[:, -1]
+        return step
+    if kind == "decode":
+        def step(params, caches, token, index, placements=None):
+            return model_lib.decode_step(params, caches, token, index, cfg,
+                                         ctx, placements=placements)
+        return step
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte extraction from HLO text
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    Per-device view (the module is the per-partition SPMD program), so the
+    numbers are bytes-through-this-device — what the roofline needs."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (\w[\w\-]*)\(", ls)
+        if not m:
+            continue
+        shape_part, opname = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if opname == kind or opname == kind + "-start":
+                out[kind] += _shape_bytes(shape_part)
+                out["count"] += 1
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer probes: XLA's cost_analysis counts a lax.scan body ONCE (the
+# while-loop trip count is invisible to it), so full-step numbers undercount
+# by ~num_layers.  For the roofline we therefore lower *one layer of each
+# distinct kind* at the production shapes and scale by its occurrence count.
+# ---------------------------------------------------------------------------
+
+def _probe_record(lowered) -> Dict:
+    compiled = lowered.compile()
+    rec: Dict = {}
+    ca = compiled.cost_analysis()
+    if ca:
+        rec["flops"] = float(ca.get("flops", -1))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def probe_layers(cfg: ModelConfig, ctx, mesh, kind: str, seq: int,
+                 gbatch: int, dtype=jnp.bfloat16) -> Dict[str, Dict]:
+    """Lower one layer per distinct LayerSpec + the embed/unembed head."""
+    from repro.models import blocks as blocks_lib
+    from repro.models.common import cross_entropy_loss, embed, unembed
+
+    distinct: Dict[str, Tuple] = {}
+    for spec in cfg.layer_specs:
+        key = f"{spec.mixer}:{spec.ffn}:w{spec.window}"
+        if key in distinct:
+            distinct[key] = (spec, distinct[key][1] + 1)
+        else:
+            distinct[key] = (spec, 1)
+
+    bspec = ctx.batch_spec(3, gbatch)
+    out: Dict[str, Dict] = {}
+    for key, (spec, count) in distinct.items():
+        params_sds = jax.eval_shape(
+            lambda s=spec: blocks_lib.layer_init(jax.random.PRNGKey(0), s,
+                                                 cfg, dtype))
+        pshard = param_shardings(params_sds, ctx)
+        params_sds = _sds(params_sds, pshard)
+        placement = None
+        if spec.ffn == "moe":
+            rep = NamedSharding(mesh, P())
+            s = cfg.moe.s_max
+            placement = {
+                "shadow_idx": jax.ShapeDtypeStruct((s,), jnp.int32,
+                                                   sharding=rep),
+                "shadow_valid": jax.ShapeDtypeStruct((s,), jnp.float32,
+                                                     sharding=rep),
+                "shadow_devs": jax.ShapeDtypeStruct((s, ctx.ep_size),
+                                                    jnp.float32,
+                                                    sharding=rep),
+            }
+        try:
+            if kind in ("train", "prefill"):
+                x = jax.ShapeDtypeStruct((gbatch, seq, cfg.d_model), dtype,
+                                         sharding=NamedSharding(mesh, bspec))
+                pos = jax.ShapeDtypeStruct(
+                    (gbatch, seq), jnp.int32,
+                    sharding=NamedSharding(mesh, ctx.batch_spec(2, gbatch)))
+
+                def fwd(p, xx, pp, pl, _spec=spec):
+                    y, _ = blocks_lib.layer_apply(p, xx, pp, _spec, cfg, ctx,
+                                                  pl, "auto")
+                    # Sum in the activation dtype: an f32 seed would poison
+                    # every backward cotangent to f32 and inflate the
+                    # measured TP all-reduce bytes 2× vs the real step.
+                    return jnp.sum(y)
+
+                if kind == "train":
+                    fn = jax.grad(fwd)
+                else:
+                    fn = fwd
+                lowered = jax.jit(fn).lower(params_sds, x, pos, placement)
+            else:  # decode
+                cache_sds = jax.eval_shape(
+                    lambda s=spec: blocks_lib.layer_init_cache(s, cfg,
+                                                               gbatch, seq,
+                                                               dtype))
+                cache_sds = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        l.shape, l.dtype,
+                        sharding=NamedSharding(
+                            mesh, _greedy_cache_spec(l.shape, ctx,
+                                                     start_dim=1))),
+                    cache_sds)
+                x = jax.ShapeDtypeStruct(
+                    (gbatch, 1, cfg.d_model), dtype,
+                    sharding=NamedSharding(mesh, ctx.batch_spec(3, gbatch)))
+                idx = jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=NamedSharding(mesh, P()))
+
+                def dec(p, xx, cc, ii, pl, _spec=spec):
+                    return blocks_lib.layer_decode(p, xx, cc, ii, _spec, cfg,
+                                                   ctx, pl)
+
+                lowered = jax.jit(dec).lower(params_sds, x, cache_sds, idx,
+                                             placement)
+            rec = _probe_record(lowered)
+            rec["count"] = count
+            out[key] = rec
+        except Exception as e:  # noqa: BLE001
+            out[key] = {"count": count, "error": f"{type(e).__name__}: {e}"}
+
+    # Head probe: embed → unembed → xent (train adds grad).
+    if cfg.modality != "audio":
+        try:
+            emb_sds = jax.eval_shape(
+                lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg,
+                                              dtype)["embed"])
+            emb_sds = _sds(emb_sds, param_shardings(emb_sds, ctx))
+            hseq = 1 if kind == "decode" else seq
+            tok = jax.ShapeDtypeStruct(
+                (gbatch, hseq), jnp.int32,
+                sharding=NamedSharding(mesh, ctx.batch_spec(2, gbatch)))
+
+            from repro import flags as _flags
+            _chunk = _flags.xent_chunk()
+
+            def head(e, t):
+                x = embed(e, t)
+                if _chunk:
+                    from repro.models.common import chunked_unembed_xent
+                    return chunked_unembed_xent(x, e["table"], t, _chunk)
+                logits = unembed(e, x)
+                return cross_entropy_loss(logits, t)
+
+            fn = jax.grad(head) if kind == "train" else head
+            rec = _probe_record(jax.jit(fn).lower(emb_sds, tok))
+            rec["count"] = 1
+            out["head"] = rec
+        except Exception as e:  # noqa: BLE001
+            out["head"] = {"count": 1, "error": f"{type(e).__name__}: {e}"}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape: str, mesh_kind: str, out_dir: str,
+            dtype=jnp.bfloat16) -> Dict:
+    cfg = get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    rec: Dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "kind": kind, "seq": seq, "batch": gbatch,
+                 "params": cfg.param_count(),
+                 "active_params": cfg.active_param_count()}
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec["status"] = "SKIP"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = make_ctx(mesh)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+            placements = placement_specs(cfg, ctx, mesh)
+            if kind == "train":
+                optimizer = adamw(constant(1e-4), state_dtype=jnp.float32)
+                step = build_step(cfg, ctx, kind, optimizer)
+                state = state_specs(cfg, ctx, mesh, optimizer, dtype)
+                batch = batch_specs(cfg, ctx, mesh, seq, gbatch, dtype)
+                lowered = jax.jit(step).lower(state, batch, placements)
+            elif kind == "prefill":
+                step = build_step(cfg, ctx, kind)
+                params = state_specs(
+                    cfg, ctx, mesh, adamw(constant(1e-4)), dtype).params
+                batch = batch_specs(cfg, ctx, mesh, seq, gbatch, dtype)
+                lowered = jax.jit(step).lower(params, batch, placements)
+            else:  # decode
+                step = build_step(cfg, ctx, kind)
+                params = state_specs(
+                    cfg, ctx, mesh, adamw(constant(1e-4)), dtype).params
+                caches = cache_specs(cfg, ctx, mesh, gbatch, seq, dtype)
+                token = jax.ShapeDtypeStruct(
+                    (gbatch, 1), jnp.int32,
+                    sharding=NamedSharding(mesh, ctx.batch_spec(2, gbatch)))
+                index = jax.ShapeDtypeStruct((), jnp.int32,
+                                             sharding=NamedSharding(mesh, P()))
+                lowered = jax.jit(step).lower(params, caches, token, index,
+                                              placements)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes", "alias_size_in_bytes",
+                             "generated_code_size_in_bytes"):
+                    v = getattr(ma, attr, None)
+                    if v is not None:
+                        rec[attr] = int(v)
+            ca = compiled.cost_analysis()
+            if ca:
+                rec["flops"] = float(ca.get("flops", -1))
+                rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+                rec["transcendentals"] = float(ca.get("transcendentals", 0))
+            txt = compiled.as_text()
+            rec["collectives"] = collective_bytes(txt)
+            rec["hlo_chars"] = len(txt)
+            # Per-layer probes for scan-aware roofline accounting (single
+            # -pod only; multi-pod reuses single-pod probes scaled).
+            if mesh_kind == "single":
+                rec["probes"] = probe_layers(cfg, ctx, mesh, kind, seq,
+                                             gbatch)
+            rec["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print(f"[cached] {arch} {shape} {mk}: {rec['status']}")
+                    results.append(rec)
+                    continue
+                print(f"[dryrun] {arch} {shape} {mk} ...", flush=True)
+                rec = run_one(arch, shape, mk, args.out)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                msg = rec.get("reason") or rec.get("error", "")
+                print(f"  -> {rec['status']} "
+                      f"lower={rec.get('lower_s', '-')}s "
+                      f"compile={rec.get('compile_s', '-')}s "
+                      f"flops={rec.get('flops', '-')} {msg}", flush=True)
+                results.append(rec)
+    ok = sum(r["status"] == "OK" for r in results)
+    skip = sum(r["status"] == "SKIP" for r in results)
+    fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\nDRY-RUN SUMMARY: {ok} OK, {skip} SKIP, {fail} FAIL "
+          f"of {len(results)}")
+    if fail:
+        for r in results:
+            if r["status"] == "FAIL":
+                print(f"  FAIL {r['arch']} {r['shape']} {r['mesh']}: "
+                      f"{r['error']}")
+
+
+if __name__ == "__main__":
+    main()

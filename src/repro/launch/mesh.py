@@ -1,0 +1,24 @@
+"""Production meshes (DESIGN.md §6).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first jax
+init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 v5e pod (256 chips) or 2 pods (512 chips).
+
+    Axes: ``data`` — batch / ZeRO / expert-FSDP; ``model`` — tensor
+    parallel + expert parallel (EP groups of 16); ``pod`` — pure data
+    parallelism across the inter-pod link."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small host-device mesh for subprocess integration tests."""
+    return jax.make_mesh(shape, axes)

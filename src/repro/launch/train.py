@@ -1,0 +1,92 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch moe-gpt-s --steps 100 \
+      --batch 8 --seq 128 --policy pro_prophet [--reduced] [--mesh d,m]
+
+On this CPU container use ``--reduced`` (smoke-scale variant) or the small
+paper models; on a real cluster drop ``--reduced`` and pass the production
+mesh.  ``--mesh 2,4`` builds a (data, model) host-device mesh (requires
+XLA_FLAGS=--xla_force_host_platform_device_count=8 or real devices).
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="moe-gpt-s")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "constant"])
+    ap.add_argument("--policy", default="pro_prophet",
+                    choices=["pro_prophet", "fastermoe", "top2", "top3",
+                             "none"])
+    ap.add_argument("--replan-interval", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2,4' for a (data, model) device mesh")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant, cosine, wsd
+    from repro.parallel import local_ctx, make_ctx
+    from repro.train import Trainer
+    from repro.train.trainer import make_engine_for
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh(shape, ("data", "model")[-len(shape):]
+                             if len(shape) == 2
+                             else ("pod", "data", "model"))
+        ctx = make_ctx(mesh)
+    else:
+        mesh = None
+        ctx = local_ctx()
+
+    sched = {"cosine": lambda: cosine(args.lr, 10, args.steps),
+             "wsd": lambda: wsd(args.lr, 10, int(args.steps * 0.7),
+                                int(args.steps * 0.2)),
+             "constant": lambda: constant(args.lr)}[args.schedule]()
+    engine = None
+    if cfg.moe is not None and args.policy != "none":
+        engine = make_engine_for(cfg, ctx, policy=args.policy,
+                                 replan_interval=args.replan_interval)
+    trainer = Trainer(cfg, ctx, adamw(sched), attn_impl="auto",
+                      remat=not args.reduced, engine=engine)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+
+    ctxmgr = mesh if mesh is not None else _null()
+    with ctxmgr:
+        state, hist = trainer.run(state, data, num_steps=args.steps,
+                                  log_every=args.log_every)
+    print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
+    if args.ckpt:
+        from repro.checkpoint import save_train_state
+        save_train_state(state, args.ckpt, step=args.steps,
+                         extra={"arch": cfg.name})
+        print(f"checkpoint written to {args.ckpt}")
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model substrate: composable JAX layer definitions for all assigned
+architectures (dense GQA, MLA, sliding-window, MoE, Mamba, xLSTM, encoder,
+VLM/audio backbones) plus KV/SSM caches for decode."""
+from . import attention, blocks, common, ffn, kvcache, mla, model, moe, ssm, xlstm  # noqa: F401

@@ -1,0 +1,308 @@
+"""Attention: GQA/MQA/MHA with optional QKV bias and sliding windows.
+
+Three interchangeable inner implementations (all numerically equivalent):
+
+* ``naive``   — materializes [B, H, Sq, Skv] scores.  Tests / tiny shapes.
+* ``chunked`` — flash-style online softmax over KV blocks in pure jnp
+  (lax.scan); O(S·block) live memory.  Default for large shapes.
+* ``banded``  — sliding-window variant of ``chunked`` that only visits the
+  ceil(window/block)+1 KV blocks a query block can see: true sub-quadratic
+  compute for local-attention layers (gemma3, jamba @ 500k).
+* ``pallas``  — TPU Pallas flash kernel (repro.kernels.flash_attention),
+  validated in interpret mode; selected via ``impl='pallas'``.
+
+Grouped heads are handled without materializing repeated KV: queries are
+reshaped to [B, S, K, G, dh] and contracted against KV per group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _qkv(params, x, num_heads, num_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, S, num_kv_heads, head_dim)
+    v = v.reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Inner attention implementations.  q: [B,Sq,K,G,dh], k/v: [B,Skv,K,dh].
+# ---------------------------------------------------------------------------
+
+def _naive(q, k, v, *, causal: bool, window: Optional[int], scale: float,
+           q_offset: int = 0):
+    B, Sq, K, G, dh = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgd,bpkd->bkgqp", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqp,bpkd->bqkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _online_block(carry, qb, kb, vb, mask, scale):
+    """One online-softmax update. carry=(m,l,o); qb [B,Bq,K,G,dh].
+
+    With REPRO_ATTN_BF16_SCORES=1 (§Perf memory lever) the two big
+    einsums read bf16 operands and accumulate in f32 via
+    preferred_element_type — halves the score-traffic bytes with the same
+    f32 softmax statistics."""
+    import os
+    bf16_ops = os.environ.get("REPRO_ATTN_BF16_SCORES") == "1"
+    m, l, o = carry
+    if bf16_ops:
+        # jnp.einsum upcasts operands even with preferred_element_type in
+        # this pattern — explicit dot_general keeps them bf16.
+        lhs = qb.transpose(0, 2, 3, 1, 4)          # [B,K,G,Bq,dh]
+        rhs = kb.transpose(0, 2, 1, 3)             # [B,K,Bk,dh]
+        s = jax.lax.dot_general(
+            lhs, rhs, (((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum("bqkgd,bpkd->bkgqp", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    # Guard fully-masked rows (m_new == NEG_INF) against inf-inf.
+    safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - safe_m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - safe_m))
+    l_new = l * alpha + p.sum(axis=-1)
+    if bf16_ops:
+        rhs_v = vb.transpose(0, 2, 1, 3)           # [B,K,Bk,dv]
+        ob = jax.lax.dot_general(
+            p.astype(vb.dtype), rhs_v, (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)
+    else:
+        ob = jnp.einsum("bkgqp,bpkd->bkgqd", p, vb.astype(jnp.float32))
+    o_new = o * alpha[..., None] + ob
+    return m_new, l_new, o_new
+
+
+def _pad_seq(x, block: int):
+    pad = (-x.shape[1]) % block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[1] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def _chunked(q, k, v, *, causal: bool, window: Optional[int], scale: float,
+             q_block: int, kv_block: int, q_offset: int = 0):
+    """Online softmax over all KV blocks (masked). O(S·block) memory."""
+    B, Sq0, K, G, dh = q.shape
+    Skv0 = k.shape[1]
+    dv = v.shape[-1]              # may differ from dh (MLA)
+    q = _pad_seq(q, q_block)
+    k = _pad_seq(k, kv_block)
+    v = _pad_seq(v, kv_block)
+    Sq, Skv = q.shape[1], k.shape[1]
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    kb = k.reshape(B, nk, kv_block, K, dh)
+    vb = v.reshape(B, nk, kv_block, K, dv)
+    qb = q.reshape(B, nq, q_block, K, G, dh)
+
+    def per_q(qi, qblk):
+        qpos = qi * q_block + jnp.arange(q_block) + q_offset
+
+        def step(carry, inp):
+            ki, kblk, vblk = inp
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            mask = jnp.broadcast_to(kpos[None, :] < Skv0,
+                                    (q_block, kv_block))  # kv padding
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask = mask[None, None, None]  # [1,1,1,Bq,Bk]
+            return _online_block(carry, qblk, kblk, vblk, mask, scale), None
+
+        init = (jnp.full((B, K, G, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, q_block), jnp.float32),
+                jnp.zeros((B, K, G, q_block, dv), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(
+            step, init,
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", o).astype(q.dtype)
+
+    out = jax.lax.map(lambda t: per_q(t[0], t[1]),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, K, G, dv)[:, :Sq0]
+
+
+def _banded(q, k, v, *, window: int, scale: float, q_block: int,
+            kv_block: int, q_offset: int = 0):
+    """Causal sliding-window attention visiting only in-band KV blocks.
+
+    Query block i (absolute start p0 = i·Bq + q_offset) can see keys in
+    [p0 − window + 1, p0 + Bq − 1]; that's a static count of
+    ceil((window + Bq)/Bk) + 1 KV blocks fetched by dynamic_slice.
+    """
+    B, Sq0, K, G, dh = q.shape
+    Skv0 = k.shape[1]
+    dv = v.shape[-1]
+    q = _pad_seq(q, q_block)
+    k = _pad_seq(k, kv_block)
+    v = _pad_seq(v, kv_block)
+    Sq, Skv = q.shape[1], k.shape[1]
+    nq = Sq // q_block
+    nband = (window + q_block - 1) // kv_block + 1
+
+    qb = q.reshape(B, nq, q_block, K, G, dh)
+
+    def per_q(qi, qblk):
+        p0 = qi * q_block + q_offset
+        qpos = p0 + jnp.arange(q_block)
+        first_block = (p0 - window + 1) // kv_block  # may be negative
+
+        def step(carry, r):
+            bidx = first_block + r
+            cl = jnp.clip(bidx, 0, Skv // kv_block - 1)
+            kblk = jax.lax.dynamic_slice_in_dim(k, cl * kv_block, kv_block, 1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, cl * kv_block, kv_block, 1)
+            kpos = cl * kv_block + jnp.arange(kv_block)
+            mask = (qpos[:, None] >= kpos[None, :]) & \
+                   (qpos[:, None] - kpos[None, :] < window) & \
+                   (bidx >= 0) & (kpos[None, :] < Skv0)
+            mask = mask[None, None, None]
+            return _online_block(carry, qblk, kblk, vblk, mask, scale), None
+
+        init = (jnp.full((B, K, G, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, q_block), jnp.float32),
+                jnp.zeros((B, K, G, q_block, dv), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(step, init, jnp.arange(nband))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", o).astype(q.dtype)
+
+    out = jax.lax.map(lambda t: per_q(t[0], t[1]),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, K, G, dv)[:, :Sq0]
+
+
+def multihead_attention(params, x, positions, *, num_heads: int,
+                        num_kv_heads: int, head_dim: int,
+                        causal: bool = True, window: Optional[int] = None,
+                        rope_theta: float = 10000.0, use_rope: bool = True,
+                        impl: str = "auto", q_block: int = 512,
+                        kv_block: int = 512):
+    """Full attention sublayer (projections + rope + inner attention)."""
+    B, S, _ = x.shape
+    K, G = num_kv_heads, num_heads // num_kv_heads
+    q, k, v = _qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    qg = q.reshape(B, S, K, G, head_dim)
+    scale = head_dim ** -0.5
+
+    if impl == "auto":
+        import os
+        # §Perf lever (REPRO_ATTN_NAIVE_MAX): at moderate S, naive scores
+        # with head-TP + remat beat the chunked lax.map path, whose
+        # q-block loop forces SPMD "involuntary full rematerialization"
+        # all-gathers.  Default threshold keeps the original behaviour.
+        naive_max = int(os.environ.get("REPRO_ATTN_NAIVE_MAX", "2048"))
+        if window is not None and causal and S > 2 * q_block and window < S:
+            impl = "banded"
+        elif S > naive_max:
+            impl = "chunked"
+        else:
+            impl = "naive"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(qg, k, v, causal=causal, window=window,
+                                 scale=scale)
+    elif impl == "naive":
+        o = _naive(qg, k, v, causal=causal, window=window, scale=scale)
+    elif impl == "chunked":
+        qb = min(q_block, S)
+        o = _chunked(qg, k, v, causal=causal, window=window, scale=scale,
+                     q_block=qb, kv_block=min(kv_block, S))
+    elif impl == "banded":
+        assert window is not None and causal
+        qb = min(q_block, S)
+        o = _banded(qg, k, v, window=window, scale=scale,
+                    q_block=qb, kv_block=min(kv_block, S))
+    else:
+        raise ValueError(f"unknown attention impl {impl}")
+
+    o = o.reshape(B, S, num_heads * head_dim)
+    return o @ params["wo"]
+
+
+def decode_attention(params, x, cache_k, cache_v, cache_index, *,
+                     num_heads: int, num_kv_heads: int, head_dim: int,
+                     window: Optional[int] = None,
+                     rope_theta: float = 10000.0, use_rope: bool = True):
+    """Single-token decode: x [B,1,d]; cache [B,Smax,K,dh]; returns
+    (y [B,1,d], new_cache_k, new_cache_v)."""
+    B, one, _ = x.shape
+    K, G = num_kv_heads, num_heads // num_kv_heads
+    q, k, v = _qkv(params, x, num_heads, num_kv_heads, head_dim)
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_index, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_index, axis=1)
+    Smax = cache_k.shape[1]
+    qg = q.reshape(B, K, G, head_dim)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * head_dim ** -0.5
+    kpos = jnp.arange(Smax)
+    mask = kpos <= cache_index
+    if window is not None:
+        mask &= kpos > cache_index - window
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, num_heads * head_dim)
+    return o @ params["wo"], cache_k, cache_v

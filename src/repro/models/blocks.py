@@ -1,0 +1,313 @@
+"""Layer + stage composition: heterogeneous macro-blocks under lax.scan.
+
+A stage scans ``repeats`` copies of a macro-block (tuple of LayerSpecs
+unrolled in the body).  Parameters are stacked along a leading dim by
+vmapped init; caches likewise for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, Stage
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm, xlstm
+from .common import rmsnorm, rmsnorm_init
+from .ffn import ffn_apply, ffn_init
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype=jnp.float32):
+    kmix, kffn = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer == "gqa":
+        p["attn"] = attn.attention_init(
+            kmix, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias, dtype=dtype)
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        p["mla"] = mla_mod.mla_init(
+            kmix, cfg.d_model, cfg.num_heads, q_rank=m.q_rank,
+            kv_rank=m.kv_rank, nope_dim=m.nope_dim, rope_dim=m.rope_dim,
+            v_dim=m.v_dim, dtype=dtype)
+    elif spec.mixer == "mamba":
+        mb = cfg.mamba
+        p["mamba"] = ssm.mamba_init(kmix, cfg.d_model, expand=mb.expand,
+                                    d_state=mb.d_state, d_conv=mb.d_conv,
+                                    dtype=dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(kmix, cfg.d_model, cfg.mlstm_heads,
+                                      dtype=dtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = xlstm.slstm_init(kmix, cfg.d_model, cfg.mlstm_heads,
+                                      dtype=dtype)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+    if spec.ffn == "dense":
+        p["ffn"] = ffn_init(kffn, cfg.ffn_kind, cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ffn == "moe":
+        mo = cfg.moe
+        p["moe"] = moe_mod.moe_init(
+            kffn, cfg.d_model, mo.d_expert, mo.num_experts,
+            ffn_kind=cfg.ffn_kind, num_shared=mo.num_shared,
+            shared_d_ff=mo.shared_d_ff, dtype=dtype)
+    return p
+
+
+def _mixer_apply(params, x, positions, spec: LayerSpec, cfg: ModelConfig,
+                 attn_impl: str):
+    if spec.mixer == "gqa":
+        return attn.multihead_attention(
+            params["attn"], x, positions, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            causal=cfg.causal, window=spec.window,
+            rope_theta=cfg.rope_theta, impl=attn_impl)
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return mla_mod.mla_attention(
+            params["mla"], x, positions, num_heads=cfg.num_heads,
+            kv_rank=m.kv_rank, nope_dim=m.nope_dim, rope_dim=m.rope_dim,
+            v_dim=m.v_dim, rope_theta=cfg.rope_theta, causal=cfg.causal,
+            impl=attn_impl if attn_impl in ("naive", "chunked") else "auto")
+    if spec.mixer == "mamba":
+        mb = cfg.mamba
+        return ssm.mamba(params["mamba"], x, expand=mb.expand,
+                         d_state=mb.d_state, d_conv=mb.d_conv)
+    if spec.mixer == "mlstm":
+        impl = {"naive": "parallel", "chunked": "recurrent"}.get(attn_impl,
+                                                                 "auto")
+        return xlstm.mlstm(params["mlstm"], x, num_heads=cfg.mlstm_heads,
+                           impl=impl)
+    if spec.mixer == "slstm":
+        return xlstm.slstm(params["slstm"], x, num_heads=cfg.mlstm_heads)
+    raise ValueError(spec.mixer)
+
+
+def _pin(x, ctx):
+    """Residual-stream constraint at sublayer boundaries (§Perf levers):
+    REPRO_SEQ_PARALLEL ⇒ S sharded over the model axis (sequence
+    parallelism); REPRO_PIN_RESIDUAL ⇒ replicated over model."""
+    from jax.sharding import PartitionSpec as _P
+
+    from repro import flags as _flags
+    if ctx.mesh is None:
+        return x
+    ba = ctx.batch_axes
+    blead = ba if len(ba) != 1 else ba[0]
+    if _flags.seq_parallel():
+        return ctx.constrain(x, _P(blead, ctx.model_axis, None))
+    if _flags.pin_residual():
+        return ctx.constrain(x, _P(blead, None, None))
+    return x
+
+
+def _pin_norm(y, ctx):
+    """REPRO_PIN_NORM=1 (§Perf): constrain the rmsnorm output to
+    P(batch, None, None).  The TP backward then all-reduces ONE bf16
+    cotangent at this boundary instead of three f32 x-shaped intermediates
+    inside the norm's backward (observed 8.56 GB/layer → bf16 boundary)."""
+    import os
+    if os.environ.get("REPRO_PIN_NORM") != "1" or ctx.mesh is None:
+        return y
+    from jax.sharding import PartitionSpec as _P
+    ba = ctx.batch_axes
+    return ctx.constrain(y, _P(ba if len(ba) != 1 else ba[0], None, None))
+
+
+def layer_apply(params, x, positions, spec: LayerSpec, cfg: ModelConfig,
+                ctx, placement=None, attn_impl: str = "auto"):
+    """Pre-LN residual layer. Returns (x, moe_aux or None)."""
+    x = _pin(x, ctx)
+    x = x + _mixer_apply(params, _pin_norm(rmsnorm(params["norm1"], x), ctx),
+                         positions, spec, cfg, attn_impl)
+    x = _pin(x, ctx)
+    aux = None
+    if spec.ffn == "dense":
+        x = x + ffn_apply(cfg.ffn_kind, params["ffn"],
+                          _pin_norm(rmsnorm(params["norm2"], x), ctx))
+    elif spec.ffn == "moe":
+        mo = cfg.moe
+        y, aux = moe_mod.moe_apply(
+            params["moe"], rmsnorm(params["norm2"], x), placement, ctx,
+            num_experts=mo.num_experts, top_k=mo.top_k,
+            d_expert=mo.d_expert, ffn_kind=cfg.ffn_kind,
+            capacity_factor=mo.capacity_factor,
+            shadow_capacity_factor=mo.shadow_capacity_factor,
+            s_max=mo.s_max)
+        x = x + y
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with caches)
+# ---------------------------------------------------------------------------
+
+def layer_init_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     max_len: int, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    if spec.mixer == "gqa":
+        shape = (batch, max_len, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, max_len, m.kv_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, m.rope_dim), dtype)}
+    if spec.mixer == "mamba":
+        mb = cfg.mamba
+        return ssm.mamba_init_state(batch, cfg.d_model, expand=mb.expand,
+                                    d_state=mb.d_state, d_conv=mb.d_conv,
+                                    dtype=dtype)
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_init_state(batch, cfg.d_model, cfg.mlstm_heads)
+    if spec.mixer == "slstm":
+        return xlstm.slstm_init_state(batch, cfg.d_model, cfg.mlstm_heads)
+    raise ValueError(spec.mixer)
+
+
+def _mixer_decode(params, x, cache, cache_index, spec: LayerSpec,
+                  cfg: ModelConfig):
+    if spec.mixer == "gqa":
+        y, k, v = attn.decode_attention(
+            params["attn"], x, cache["k"], cache["v"], cache_index,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, window=spec.window,
+            rope_theta=cfg.rope_theta)
+        return y, {"k": k, "v": v}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        y, ckv, krope = mla_mod.mla_decode(
+            params["mla"], x, cache["ckv"], cache["krope"], cache_index,
+            num_heads=cfg.num_heads, kv_rank=m.kv_rank, nope_dim=m.nope_dim,
+            rope_dim=m.rope_dim, v_dim=m.v_dim, rope_theta=cfg.rope_theta)
+        return y, {"ckv": ckv, "krope": krope}
+    if spec.mixer == "mamba":
+        mb = cfg.mamba
+        return ssm.mamba_decode(params["mamba"], x, cache, expand=mb.expand,
+                                d_state=mb.d_state, d_conv=mb.d_conv)
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_decode(params["mlstm"], x, cache,
+                                  num_heads=cfg.mlstm_heads)
+    if spec.mixer == "slstm":
+        return xlstm.slstm_decode(params["slstm"], x, cache,
+                                  num_heads=cfg.mlstm_heads)
+    raise ValueError(spec.mixer)
+
+
+def layer_decode(params, x, cache, cache_index, spec: LayerSpec,
+                 cfg: ModelConfig, ctx, placement=None):
+    y, cache = _mixer_decode(params, rmsnorm(params["norm1"], x), cache,
+                             cache_index, spec, cfg)
+    x = x + y
+    if spec.ffn == "dense":
+        x = x + ffn_apply(cfg.ffn_kind, params["ffn"],
+                          rmsnorm(params["norm2"], x))
+    elif spec.ffn == "moe":
+        mo = cfg.moe
+        y, _ = moe_mod.moe_apply(
+            params["moe"], rmsnorm(params["norm2"], x), placement, ctx,
+            num_experts=mo.num_experts, top_k=mo.top_k,
+            d_expert=mo.d_expert, ffn_kind=cfg.ffn_kind,
+            capacity_factor=mo.capacity_factor,
+            shadow_capacity_factor=mo.shadow_capacity_factor,
+            s_max=mo.s_max)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stages (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def stage_init(key, stage: Stage, cfg: ModelConfig, dtype=jnp.float32):
+    """Params: {pos: stacked-layer-params [repeats, ...]}."""
+    keys = jax.random.split(key, stage.repeats)
+
+    def one(k):
+        ks = jax.random.split(k, len(stage.macro))
+        return {str(i): layer_init(ks[i], spec, cfg, dtype)
+                for i, spec in enumerate(stage.macro)}
+
+    if stage.repeats == 1:
+        p = one(keys[0])
+        return jax.tree.map(lambda a: a[None], p)
+    return jax.vmap(one)(keys)
+
+
+def moe_positions(stage: Stage) -> List[int]:
+    return [i for i, s in enumerate(stage.macro) if s.ffn == "moe"]
+
+
+def stage_apply(params, x, positions, stage: Stage, cfg: ModelConfig, ctx,
+                placements=None, attn_impl: str = "auto",
+                remat: bool = True):
+    """placements: dict of arrays with leading dims [repeats, m_moe, ...]
+    (m_moe = MoE layers per macro) or None.  Returns (x, counts
+    [repeats*m_moe, ep, E] or None)."""
+    mpos = moe_positions(stage)
+
+    def body(carry, per_layer):
+        x = carry
+        layer_params, pl_slice = per_layer
+        counts_out = []
+        for i, spec in enumerate(stage.macro):
+            pl = None
+            if spec.ffn == "moe" and pl_slice is not None:
+                j = mpos.index(i)
+                pl = {k: v[j] for k, v in pl_slice.items()}
+            x, aux = layer_apply(layer_params[str(i)], x, positions, spec,
+                                 cfg, ctx, pl, attn_impl)
+            if aux is not None:
+                counts_out.append(aux["counts"])
+        stacked = jnp.stack(counts_out) if counts_out else jnp.zeros((0, 1, 1),
+                                                                     jnp.int32)
+        return x, stacked
+
+    fn = jax.checkpoint(body) if remat else body
+    x, counts = jax.lax.scan(fn, x, (params, placements))
+    if counts.shape[1] == 0:
+        return x, None
+    r, m = counts.shape[0], counts.shape[1]
+    return x, counts.reshape(r * m, *counts.shape[2:])
+
+
+def stage_init_cache(stage: Stage, cfg: ModelConfig, batch: int,
+                     max_len: int, dtype=jnp.float32):
+    caches = {str(i): layer_init_cache(spec, cfg, batch, max_len, dtype)
+              for i, spec in enumerate(stage.macro)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (stage.repeats,) + a.shape).copy()
+        if stage.repeats > 1 else a[None], caches)
+
+
+def stage_decode(params, x, caches, cache_index, stage: Stage,
+                 cfg: ModelConfig, ctx, placements=None):
+    mpos = moe_positions(stage)
+
+    def body(carry, per_layer):
+        x = carry
+        layer_params, layer_cache, pl_slice = per_layer
+        new_cache = {}
+        for i, spec in enumerate(stage.macro):
+            pl = None
+            if spec.ffn == "moe" and pl_slice is not None:
+                j = mpos.index(i)
+                pl = {k: v[j] for k, v in pl_slice.items()}
+            x, new_cache[str(i)] = layer_decode(
+                layer_params[str(i)], x, layer_cache[str(i)], cache_index,
+                spec, cfg, ctx, pl)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches, placements))
+    return x, new_caches

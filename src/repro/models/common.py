@@ -1,0 +1,134 @@
+"""Shared building blocks: norms, RoPE, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    """LeCun-normal style init; fan_in defaults to shape[-2]."""
+    fi = fan_in if fan_in is not None else (shape[-2] if len(shape) >= 2 else shape[-1])
+    return truncated_normal(key, shape, stddev=1.0 / np.sqrt(fi), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    import os
+    if os.environ.get("REPRO_NORM_BF16") == "1" and dt == jnp.bfloat16:
+        # §Perf collective lever: no f32 x-shaped island — the variance is
+        # f32-accumulated from bf16 reads, the normalization stays bf16,
+        # so delayed TP all-reduces of the backward move bf16 tensors.
+        d = x.shape[-1]
+        var = jnp.einsum("...d,...d->...", x, x,
+                         preferred_element_type=jnp.float32)[..., None] / d
+        y = x * jax.lax.rsqrt(var + eps).astype(dt)
+        return y * params["scale"].astype(dt)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, Dh]; positions: [..., S] int32."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))  # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    # 1/sqrt(d) keeps tied-unembedding logits O(1) after the final RMSNorm.
+    return {"table": truncated_normal(key, (vocab, d_model),
+                                      1.0 / np.sqrt(d_model), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Tied unembedding: logits in f32 for a stable softmax/xent."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))
+
+
+def chunked_unembed_xent(x, table, labels, chunk: int, mask=None):
+    """Streaming tied-unembedding cross entropy (§Perf memory lever).
+
+    Never materializes the [B, S, V] logits: scans the vocab in chunks of
+    ``chunk`` rows, maintaining an online logsumexp and picking the gold
+    logit on the fly.  x [B,S,d]; table [V,d]; labels int [B,S]."""
+    V, d = table.shape
+    pad = (-V) % chunk
+    tbl = jnp.pad(table, ((0, pad), (0, 0))) if pad else table
+    nc = tbl.shape[0] // chunk
+    x32 = x.astype(jnp.float32)
+
+    def body(carry, ci):
+        m, l, gold = carry
+        rows = jax.lax.dynamic_slice_in_dim(tbl, ci * chunk, chunk, 0)
+        logits = jnp.einsum("bsd,vd->bsv", x32, rows.astype(jnp.float32))
+        valid = ci * chunk + jnp.arange(chunk) < V
+        logits = jnp.where(valid, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        loc = labels - ci * chunk
+        in_rng = (loc >= 0) & (loc < chunk)
+        gold_c = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        gold = gold + jnp.where(in_rng, gold_c, 0.0)
+        return (m_new, l, gold), None
+
+    B, S, _ = x.shape
+    init = (jnp.full((B, S), -1e30, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, l, gold), _ = jax.lax.scan(body, init, jnp.arange(nc))
+    nll = m + jnp.log(jnp.maximum(l, 1e-30)) - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Token-level cross entropy; logits [..., V] f32, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

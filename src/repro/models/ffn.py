@@ -1,0 +1,46 @@
+"""Dense feed-forward sublayers: SwiGLU (llama-family) and GeLU MLP
+(paper's MoE-GPT experts, HuBERT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wi": dense_init(ks[1], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["wg"])
+    return (g * (x @ params["wi"])) @ params["wo"]
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    return jax.nn.gelu(x @ params["wi"]) @ params["wo"]
+
+
+def ffn_init(key, kind: str, d_model: int, d_ff: int, dtype=jnp.float32):
+    if kind == "swiglu":
+        return swiglu_init(key, d_model, d_ff, dtype)
+    if kind == "gelu":
+        return gelu_mlp_init(key, d_model, d_ff, dtype)
+    raise ValueError(kind)
+
+
+def ffn_apply(kind: str, params, x):
+    return swiglu(params, x) if kind == "swiglu" else gelu_mlp(params, x)

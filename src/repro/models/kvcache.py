@@ -1,0 +1,44 @@
+"""Cache size accounting (decode memory planning / roofline inputs).
+
+Cache construction itself lives in blocks.layer_init_cache; this module
+answers "how many bytes per token does arch X cache?" for the memory
+analysis in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def cache_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Bytes of decode state appended per generated/consumed token."""
+    total = 0
+    for spec in cfg.layer_specs:
+        if spec.mixer == "gqa":
+            total += 2 * cfg.num_kv_heads * cfg.resolved_head_dim * dtype_bytes
+        elif spec.mixer == "mla":
+            total += (cfg.mla.kv_rank + cfg.mla.rope_dim) * dtype_bytes
+        # mamba / mlstm / slstm: O(1) state, nothing per token.
+    return total
+
+
+def state_bytes(cfg: ModelConfig, batch: int, dtype_bytes: int = 4) -> int:
+    """Fixed-size recurrent state (SSM/xLSTM) for a batch."""
+    total = 0
+    for spec in cfg.layer_specs:
+        if spec.mixer == "mamba":
+            di = cfg.mamba.expand * cfg.d_model
+            total += batch * di * (cfg.mamba.d_state + cfg.mamba.d_conv - 1) \
+                * dtype_bytes
+        elif spec.mixer == "mlstm":
+            di = 2 * cfg.d_model
+            dh = di // cfg.mlstm_heads
+            total += batch * cfg.mlstm_heads * (dh * dh + dh + 1) * dtype_bytes
+        elif spec.mixer == "slstm":
+            total += batch * 4 * cfg.d_model * dtype_bytes
+    return total
+
+
+def decode_cache_bytes(cfg: ModelConfig, batch: int, seq_len: int,
+                       dtype_bytes: int = 2) -> int:
+    return batch * seq_len * cache_bytes_per_token(cfg, dtype_bytes) + \
+        state_bytes(cfg, batch)

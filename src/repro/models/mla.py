@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are projected through low-rank latents; only the KV latent
+``c_kv`` [r_kv] and the shared rope key ``k_rope`` [dr] are cached at decode
+(the MLA memory win: 512+64 floats/token instead of 2·H·dh).
+
+Training path materializes full K/V and reuses the chunked attention
+machinery.  Decode path uses the *absorbed* form: q_nope is pushed through
+W_uk so scores are taken directly against the latent cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _chunked, _naive
+from .common import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+def mla_init(key, d_model: int, num_heads: int, *, q_rank: int,
+             kv_rank: int, nope_dim: int, rope_dim: int, v_dim: int,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": dense_init(ks[0], (d_model, q_rank), dtype),
+        "q_norm": rmsnorm_init(q_rank, dtype),
+        "wuq": dense_init(ks[1], (q_rank, num_heads * (nope_dim + rope_dim)), dtype),
+        "wdkv": dense_init(ks[2], (d_model, kv_rank + rope_dim), dtype),
+        "kv_norm": rmsnorm_init(kv_rank, dtype),
+        "wuk": dense_init(ks[3], (kv_rank, num_heads * nope_dim), dtype),
+        "wuv": dense_init(ks[4], (kv_rank, num_heads * v_dim), dtype),
+        "wo": dense_init(ks[5], (num_heads * v_dim, d_model), dtype),
+    }
+
+
+def _latents(params, x, *, kv_rank: int, rope_dim: int):
+    dkv = x @ params["wdkv"]                       # [B,S,r+dr]
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., :kv_rank])
+    k_rope = dkv[..., kv_rank:]                    # [B,S,dr] shared across heads
+    return c_kv, k_rope
+
+
+def _queries(params, x, positions, *, num_heads, nope_dim, rope_dim,
+             rope_theta):
+    B, S, _ = x.shape
+    q = rmsnorm(params["q_norm"], x @ params["wdq"]) @ params["wuq"]
+    q = q.reshape(B, S, num_heads, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params, x, positions, *, num_heads: int, kv_rank: int,
+                  nope_dim: int, rope_dim: int, v_dim: int,
+                  rope_theta: float = 10000.0, causal: bool = True,
+                  impl: str = "auto", q_block: int = 512):
+    """Training/prefill path: materialize K/V, grouped-attention inner."""
+    B, S, _ = x.shape
+    H = num_heads
+    q_nope, q_rope = _queries(params, x, positions, num_heads=H,
+                              nope_dim=nope_dim, rope_dim=rope_dim,
+                              rope_theta=rope_theta)
+    c_kv, k_rope = _latents(params, x, kv_rank=kv_rank, rope_dim=rope_dim)
+    k_rope = apply_rope(k_rope[..., None, :], positions, rope_theta)  # [B,S,1,dr]
+    k_nope = (c_kv @ params["wuk"]).reshape(B, S, H, nope_dim)
+    v = (c_kv @ params["wuv"]).reshape(B, S, H, v_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_dim))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # MLA is effectively MHA (K == H groups of 1): reuse the inner impls
+    # with K=H, G=1.  Scale uses the full (nope+rope) q/k dim.
+    qg = q[:, :, :, None, :]  # [B,S,H,1,dh]
+    scale = (nope_dim + rope_dim) ** -0.5
+    if impl == "auto":
+        impl = "chunked" if S > 2048 else "naive"
+    if impl == "naive":
+        o = _naive(qg, k, v, causal=causal, window=None, scale=scale)
+    else:
+        qb = min(q_block, S)
+        o = _chunked(qg, k, v, causal=causal, window=None, scale=scale,
+                     q_block=qb, kv_block=qb)
+    o = o.reshape(B, S, H * v_dim)
+    return o @ params["wo"]
+
+
+def mla_decode(params, x, cache_ckv, cache_krope, cache_index, *,
+               num_heads: int, kv_rank: int, nope_dim: int, rope_dim: int,
+               v_dim: int, rope_theta: float = 10000.0):
+    """Absorbed decode: cache only (c_kv, k_rope); scores in latent space.
+
+    score_h(t) = q_nope_h · W_uk_h · c_kv(t) + q_rope_h · k_rope(t)
+    out_h     = Σ_t p_h(t) · c_kv(t) · W_uv_h
+    """
+    B, one, _ = x.shape
+    H = num_heads
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    q_nope, q_rope = _queries(params, x, pos, num_heads=H, nope_dim=nope_dim,
+                              rope_dim=rope_dim, rope_theta=rope_theta)
+    c_kv, k_rope = _latents(params, x, kv_rank=kv_rank, rope_dim=rope_dim)
+    k_rope = apply_rope(k_rope[..., None, :], pos, rope_theta)[..., 0, :]
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), cache_index, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope.astype(cache_krope.dtype), cache_index, axis=1)
+
+    wuk = params["wuk"].reshape(kv_rank, H, nope_dim)
+    # Absorb W_uk into q: q_lat [B,H,r]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                       cache_krope.astype(jnp.float32))
+    s = s * (nope_dim + rope_dim) ** -0.5
+    mask = jnp.arange(cache_ckv.shape[1]) <= cache_index
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, cache_ckv.astype(jnp.float32))
+    wuv = params["wuv"].reshape(kv_rank, H, v_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, H * v_dim)
+    return o @ params["wo"], cache_ckv, cache_krope

@@ -1,0 +1,167 @@
+"""Top-level models: decoder LM, encoder (audio), VLM backbone.
+
+The modality frontends for [vlm]/[audio] are stubs per the assignment:
+``input_specs`` supplies precomputed patch/frame embeddings of the right
+shape; this module implements the transformer that consumes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import blocks
+from .common import (cross_entropy_loss, dense_init, embed, embedding_init,
+                     rmsnorm, rmsnorm_init, unembed)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, len(cfg.stages) + 3)
+    p: Dict[str, Any] = {
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "stages": [blocks.stage_init(ks[i], st, cfg, dtype)
+                   for i, st in enumerate(cfg.stages)],
+    }
+    if cfg.modality == "audio":
+        # Frontend stub: frames arrive as embeddings; learn an input proj.
+        p["in_proj"] = dense_init(ks[-3], (cfg.d_model, cfg.d_model), dtype)
+        p["out_proj"] = dense_init(ks[-2], (cfg.d_model, cfg.vocab_size),
+                                   dtype)
+    else:
+        p["embed"] = embedding_init(ks[-3], cfg.vocab_size, cfg.d_model,
+                                    dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[-2], (cfg.d_model, cfg.vocab_size),
+                                      dtype)
+    if cfg.modality == "vlm":
+        # Projector from the (stub) vision embedding space into d_model.
+        p["vision_proj"] = dense_init(ks[-1], (cfg.d_model, cfg.d_model),
+                                      dtype)
+    return p
+
+
+def _split_placements(cfg: ModelConfig, placements):
+    """Split stacked [L_moe, ...] placement arrays into per-stage chunks
+    shaped [repeats, m_moe, ...]."""
+    if placements is None:
+        return [None] * len(cfg.stages)
+    out, off = [], 0
+    for st in cfg.stages:
+        m = len(blocks.moe_positions(st))
+        n = m * st.repeats
+        if m == 0:
+            out.append(None)
+        else:
+            out.append({k: v[off:off + n].reshape((st.repeats, m)
+                                                  + v.shape[1:])
+                        for k, v in placements.items()})
+        off += n
+    return out
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx, *, placements=None,
+            attn_impl: str = "auto", prefix_embeds=None,
+            frame_embeds=None, remat: bool = True,
+            return_hidden: bool = False):
+    """Returns (logits, aux).  aux['counts']: [L_moe, ep, E] or None.
+
+    tokens [B, S] (ignored for audio); prefix_embeds [B, P, d] (vlm);
+    frame_embeds [B, S, d] (audio).
+    """
+    if cfg.modality == "audio":
+        x = frame_embeds @ params["in_proj"]
+    else:
+        x = embed(params["embed"], tokens)
+        if cfg.modality == "vlm":
+            pre = prefix_embeds @ params["vision_proj"]
+            x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = ctx.constrain(x, ctx.batch_spec(3))
+
+    per_stage = _split_placements(cfg, placements)
+    counts: List[Any] = []
+    for st_params, st, pl in zip(params["stages"], cfg.stages, per_stage):
+        x, c = blocks.stage_apply(st_params, x, positions, st, cfg, ctx,
+                                  placements=pl, attn_impl=attn_impl,
+                                  remat=remat)
+        if c is not None:
+            counts.append(c)
+    x = rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, {"counts": jnp.concatenate(counts) if counts else None}
+    if cfg.modality == "audio":
+        logits = (x @ params["out_proj"]).astype(jnp.float32)
+    elif cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+    aux = {"counts": jnp.concatenate(counts) if counts else None}
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx, *, placements=None,
+            attn_impl: str = "auto", remat: bool = True):
+    """batch: tokens/labels (+loss_mask) or frame_embeds/labels/loss_mask
+    (audio) or tokens/prefix_embeds/labels (vlm)."""
+    from repro import flags
+    chunk = flags.xent_chunk()
+    if chunk and cfg.tie_embeddings and cfg.modality != "audio":
+        # §Perf memory lever: fused unembed + streaming xent, no [B,S,V].
+        x, aux = forward(
+            params, batch.get("tokens"), cfg, ctx, placements=placements,
+            attn_impl=attn_impl, prefix_embeds=batch.get("prefix_embeds"),
+            frame_embeds=batch.get("frame_embeds"), remat=remat,
+            return_hidden=True)
+        if cfg.modality == "vlm":
+            x = x[:, cfg.num_prefix_tokens:]
+        from .common import chunked_unembed_xent
+        loss = chunked_unembed_xent(x, params["embed"]["table"],
+                                    batch["labels"], chunk,
+                                    batch.get("loss_mask"))
+        return loss, aux
+    logits, aux = forward(
+        params, batch.get("tokens"), cfg, ctx, placements=placements,
+        attn_impl=attn_impl, prefix_embeds=batch.get("prefix_embeds"),
+        frame_embeds=batch.get("frame_embeds"), remat=remat)
+    labels = batch["labels"]
+    if cfg.modality == "vlm":
+        # Loss only over the text region (labels align with text tokens).
+        logits = logits[:, cfg.num_prefix_tokens:]
+    loss = cross_entropy_loss(logits, labels, batch.get("loss_mask"))
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32):
+    assert cfg.supports_decode, f"{cfg.name} has no decode path"
+    return [blocks.stage_init_cache(st, cfg, batch, max_len, dtype)
+            for st in cfg.stages]
+
+
+def decode_step(params, caches, token, cache_index, cfg: ModelConfig, ctx,
+                *, placements=None):
+    """One-token decode. token [B, 1] int32; cache_index scalar int32.
+    Returns (logits [B, 1, V], new caches)."""
+    x = embed(params["embed"], token)
+    per_stage = _split_placements(cfg, placements)
+    new_caches = []
+    for st_params, st, cache, pl in zip(params["stages"], cfg.stages, caches,
+                                        per_stage):
+        x, nc = blocks.stage_decode(st_params, x, cache, cache_index, st,
+                                    cfg, ctx, placements=pl)
+        new_caches.append(nc)
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_caches

@@ -1,0 +1,353 @@
+"""Expert-parallel MoE layer with Pro-Prophet lightweight placements.
+
+Layout (DESIGN.md §6):
+  * experts sharded over the ``model`` axis (EP groups of size 16),
+  * each expert's matrices FSDP-sharded over ``data`` (and ``pod``) —
+    gathered at use, reduce-scattered in backward (ZeRO-3 style),
+  * tokens flattened and sharded over all mesh axes; dispatch is
+    capacity-bucketed sort-based (no [N, E, C] one-hot), moved by a single
+    tiled ``all_to_all`` over the EP axis.
+
+Pro-Prophet integration (the paper's primitives, traced):
+  * ``Trans``  — shadow-slot parameters materialized by a masked ``psum``
+    over the EP axis (owner contributes, everyone receives).  Static
+    ``s_max`` slots; selection is dynamic (``shadow_idx``).
+  * shadow compute — tokens routed to a shadowed expert on a device inside
+    its placement subset are computed locally and *excluded* from the a2a.
+  * ``Agg``   — falls out of autodiff: the vjp of the masked psum delivers
+    each shadow replica's parameter gradient back to the owner.
+
+All collectives are conditional on axis names so the same code runs
+single-device (axis=None ⇒ identity) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init
+from .ffn import ffn_init
+
+# ---------------------------------------------------------------------------
+# Router (runs in pjit land, outside shard_map)
+# ---------------------------------------------------------------------------
+
+def router_init(key, d_model: int, num_experts: int, dtype=jnp.float32):
+    return {"w": dense_init(key, (d_model, num_experts), dtype)}
+
+
+def router_topk(params, x, k: int, *, renormalize: bool = True):
+    """x [..., d] → (gate [..., k] f32, idx [..., k] i32, probs [..., E])."""
+    logits = (x.astype(jnp.float32) @ params["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    if renormalize:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, idx.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs, idx, num_experts: int):
+    """Switch-style aux loss — OFF by default (Pro-Prophet is system-level
+    and must not perturb convergence); exposed for ablations."""
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    onehot = jax.nn.one_hot(idx[..., 0], num_experts)
+    ce = onehot.mean(axis=tuple(range(onehot.ndim - 1)))
+    return num_experts * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# Sort-based capacity dispatch / combine
+# ---------------------------------------------------------------------------
+
+def capacity_positions(expert: jnp.ndarray, num_buckets: int):
+    """Position of each (token, choice) within its expert bucket.
+
+    expert: int32 [Nk] bucket ids (may include sentinel == num_buckets).
+    Returns pos int32 [Nk] — 0-based arrival order within the bucket.
+    """
+    nk = expert.shape[0]
+    order = jnp.argsort(expert, stable=True)
+    sorted_e = expert[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - first.astype(jnp.int32)
+    return jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted)
+
+
+def capacity_dispatch(xf, expert, capacity: int, num_buckets: int):
+    """Scatter tokens into [num_buckets, capacity, d] (drop over capacity
+    and sentinel buckets).  expert [N, k]; xf [N, d]."""
+    N, k = expert.shape
+    d = xf.shape[-1]
+    flat_e = expert.reshape(-1)
+    pos = capacity_positions(flat_e, num_buckets)
+    xrep = jnp.repeat(xf[:, None], k, axis=1).reshape(N * k, d)
+    buf = jnp.zeros((num_buckets, capacity, d), xf.dtype)
+    buf = buf.at[flat_e, pos].add(xrep, mode="drop")
+    return buf, pos.reshape(N, k)
+
+
+def capacity_combine(buf, expert, pos, gate):
+    """Gather per-(token, choice) outputs and gate-combine. buf [G,C,d]."""
+    vals = buf.at[expert, pos].get(mode="fill", fill_value=0)  # [N,k,d]
+    return jnp.einsum("nkd,nk->nd", vals.astype(jnp.float32),
+                      gate.astype(jnp.float32)).astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN
+# ---------------------------------------------------------------------------
+
+def gmm(x, w):
+    """Grouped matmul [G,T,d]×[G,d,f] → [G,T,f] (jnp baseline; the Pallas
+    TPU kernel in repro.kernels implements the same contract)."""
+    return jnp.einsum("gtd,gdf->gtf", x, w)
+
+
+def expert_ffn(kind: str, x, wi, wo, wg=None):
+    """x [G,T,d] → [G,T,d] through each group's expert."""
+    if kind == "swiglu":
+        h = jax.nn.silu(gmm(x, wg)) * gmm(x, wi)
+    else:  # gelu
+        h = jax.nn.gelu(gmm(x, wi))
+    return gmm(h, wo)
+
+
+# ---------------------------------------------------------------------------
+# The expert-parallel inner function (runs under shard_map, or directly in
+# single-device mode with all axis names None).
+# ---------------------------------------------------------------------------
+
+def _gather_weight(w, dims_axes):
+    """all_gather ``w`` along (dim, axis) pairs; identity for axis=None."""
+    for dim, axis in dims_axes:
+        if axis is not None:
+            w = jax.lax.all_gather(w, axis, axis=dim, tiled=True)
+    return w
+
+
+def _psum(x, axes):
+    for ax in axes:
+        if ax is not None:
+            x = jax.lax.psum(x, ax)
+    return x
+
+
+def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
+              shadow_devs, *, num_experts: int, capacity: int,
+              shadow_capacity: int, ffn_kind: str, ep_axis: Optional[str],
+              fsdp_axis: Optional[str], pod_axis: Optional[str],
+              s_max: int, use_pallas: bool = False):
+    """Expert-parallel MoE on local token shard.
+
+    xf [T_loc, d]; gate/idx [T_loc, k]; wi/wg/wo local expert shards
+    [E_loc, d, f/..]; shadow_* placement arrays (replicated).
+    Returns (y [T_loc, d], counts [E] routing distribution of this EP
+    member, dropped fraction scalar).
+    """
+    T, d = xf.shape
+    k = idx.shape[-1]
+    E = num_experts
+    ep = 1 if ep_axis is None else jax.lax.axis_size(ep_axis)
+    e_loc = E // ep
+    me = 0 if ep_axis is None else jax.lax.axis_index(ep_axis)
+
+    # ---- gather FSDP-sharded expert weights (ZeRO-3 style) --------------
+    gather_spec = [(2, fsdp_axis), (1, pod_axis)]
+    wi_f = _gather_weight(wi, gather_spec)
+    wo_f = _gather_weight(wo, [(1, fsdp_axis), (2, pod_axis)])
+    wg_f = _gather_weight(wg, gather_spec) if wg is not None else None
+
+    # ---- routing bookkeeping --------------------------------------------
+    counts = jnp.zeros((E,), jnp.int32).at[idx.reshape(-1)].add(1, mode="drop")
+    counts = _psum(counts, [fsdp_axis, pod_axis])
+
+    # ---- shadow slot lookup ----------------------------------------------
+    # slot_of[e] = slot index if expert e is shadowed *and this device is in
+    # its placement subset*, else -1.  Padding slots carry idx == E.
+    my_mask = shadow_devs[:, me] * shadow_valid                  # [s_max]
+    slot_ids = jnp.where(my_mask > 0, jnp.arange(s_max, dtype=jnp.int32), -1)
+    slot_of = jnp.full((E + 1,), -1, jnp.int32).at[shadow_idx].max(
+        slot_ids, mode="drop")
+    tok_slot = slot_of[jnp.clip(idx, 0, E)]                      # [T,k]
+    use_local = tok_slot >= 0
+
+    # ---- a2a path ---------------------------------------------------------
+    a2a_expert = jnp.where(use_local, E, idx)                    # sentinel ⇒ drop
+    buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E + 1)
+    buf = buf[:E]                                                # [E,C,d]
+    if ep_axis is not None:
+        recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                  tiled=True)                    # [E_loc, ep*C, d]
+    else:
+        recv = buf
+    hidden = expert_ffn(ffn_kind, recv, wi_f, wo_f, wg_f)
+    if ep_axis is not None:
+        buf_out = jax.lax.all_to_all(hidden, ep_axis, split_axis=1,
+                                     concat_axis=0, tiled=True)  # [E,C,d]
+    else:
+        buf_out = hidden
+    y = capacity_combine(buf_out, jnp.where(use_local, 0, idx),
+                         pos, gate * (~use_local))
+
+    # ---- Pro-Prophet shadow path -----------------------------------------
+    if s_max > 0:
+        # Trans: owners contribute their expert params into the slots; one
+        # psum over the EP axis materializes them everywhere.  (Autodiff of
+        # this psum is the Agg primitive.)
+        from repro import flags
+        my_globals = me * e_loc + jnp.arange(e_loc)              # [E_loc]
+        onehot = (shadow_idx[:, None] == my_globals[None, :])
+        onehot = (onehot * (shadow_valid[:, None] > 0)).astype(wi_f.dtype)
+        if flags.trans_sharded():
+            # Beyond-paper (§Perf): psum the FSDP *shards*, gather after —
+            # the EP-axis all-reduce moves 1/fsdp of the bytes.
+            sh_wi = _gather_weight(
+                _psum(jnp.einsum("se,edf->sdf", onehot.astype(wi.dtype), wi),
+                      [ep_axis]), [(2, fsdp_axis), (1, pod_axis)])
+            sh_wo = _gather_weight(
+                _psum(jnp.einsum("se,efd->sfd", onehot.astype(wo.dtype), wo),
+                      [ep_axis]), [(1, fsdp_axis), (2, pod_axis)])
+            sh_wg = (_gather_weight(
+                _psum(jnp.einsum("se,edf->sdf", onehot.astype(wg.dtype), wg),
+                      [ep_axis]), [(2, fsdp_axis), (1, pod_axis)])
+                if wg is not None else None)
+        else:
+            sh_wi = _psum(jnp.einsum("se,edf->sdf", onehot, wi_f), [ep_axis])
+            sh_wo = _psum(jnp.einsum("se,efd->sfd", onehot, wo_f), [ep_axis])
+            sh_wg = (_psum(jnp.einsum("se,edf->sdf", onehot, wg_f),
+                           [ep_axis]) if wg_f is not None else None)
+
+        s_expert = jnp.where(use_local, tok_slot, s_max)
+        sbuf, spos = capacity_dispatch(xf, s_expert, shadow_capacity,
+                                       s_max + 1)
+        sbuf = sbuf[:s_max]
+        s_hidden = expert_ffn(ffn_kind, sbuf, sh_wi, sh_wo, sh_wg)
+        y = y + capacity_combine(s_hidden,
+                                 jnp.where(use_local, tok_slot, 0),
+                                 spos, gate * use_local)
+
+    # dropped-token fraction (over-capacity), for telemetry
+    total = jnp.maximum(counts.sum(), 1)
+    kept_a2a = jnp.minimum(
+        jnp.zeros((E + 1,), jnp.int32).at[a2a_expert.reshape(-1)].add(
+            1, mode="drop")[:E], capacity).sum()
+    kept_local = jnp.minimum(
+        jnp.zeros((s_max + 1,), jnp.int32).at[
+            jnp.where(use_local, tok_slot, s_max).reshape(-1)].add(
+            1, mode="drop")[:s_max], shadow_capacity).sum() if s_max else 0
+    kept = _psum(kept_a2a + kept_local, [fsdp_axis, pod_axis])
+    dropped = 1.0 - kept.astype(jnp.float32) / total.astype(jnp.float32)
+    # Rank-expand so shard_map out_specs can stack over the EP axis.
+    return y, counts[None, :], dropped[None]
+
+
+# ---------------------------------------------------------------------------
+# Public layer API
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d_model: int, d_expert: int, num_experts: int, *,
+             ffn_kind: str = "swiglu", num_shared: int = 0,
+             shared_d_ff: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    nm = 3 if ffn_kind == "swiglu" else 2
+    wkeys = jax.random.split(ks[0], num_experts)
+    def stack(i, shape):
+        return jnp.stack([dense_init(jax.random.fold_in(wkeys[e], i), shape,
+                                     dtype) for e in range(num_experts)])
+    p = {
+        "router": router_init(ks[1], d_model, num_experts, dtype),
+        "wi": stack(0, (d_model, d_expert)),
+        "wo": stack(1, (d_expert, d_model)),
+    }
+    if ffn_kind == "swiglu":
+        p["wg"] = stack(2, (d_model, d_expert))
+    if num_shared:
+        p["shared"] = ffn_init(ks[2], ffn_kind, d_model,
+                               shared_d_ff or d_expert * num_shared, dtype)
+    return p
+
+
+def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
+              d_expert: int, ffn_kind: str = "swiglu",
+              capacity_factor: float = 1.25,
+              shadow_capacity_factor: float = 2.0, s_max: int = 8):
+    """x [B, S, d] → (y, aux dict with routing counts / drop frac).
+
+    ``placement``: dict of shadow arrays for THIS layer
+    (shadow_idx [s_max] i32 — padded with ``num_experts``;
+     shadow_valid [s_max] f32; shadow_devs [s_max, ep] f32) or None for
+    plain EP.  ``ctx``: repro.parallel.ParallelCtx.
+    """
+    B, S, d = x.shape
+    gate, idx, probs = router_topk(params["router"], x, top_k)
+
+    if placement is None:
+        sidx = jnp.full((s_max,), num_experts, jnp.int32)
+        svalid = jnp.zeros((s_max,), jnp.float32)
+        sdevs = jnp.zeros((s_max, max(ctx.ep_size, 1)), jnp.float32)
+    else:
+        sidx, svalid, sdevs = (placement["shadow_idx"],
+                               placement["shadow_valid"],
+                               placement["shadow_devs"])
+
+    # Flatten tokens and shard over every mesh axis.
+    T = B * S
+    xf = x.reshape(T, d)
+    gf = gate.reshape(T, top_k).astype(jnp.float32)
+    ef = idx.reshape(T, top_k)
+    pad = (-T) % max(ctx.num_devices, 1)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        gf = jnp.pad(gf, ((0, pad), (0, 0)))
+        # sentinel expert id == E routes padded tokens to the drop bucket in
+        # every dispatch path; their gates are zeroed as well.
+        ef = jnp.pad(ef, ((0, pad), (0, 0)), constant_values=num_experts)
+        gf = gf * (jnp.arange(T + pad) < T)[:, None]
+    t_loc = (T + pad) // max(ctx.num_devices, 1)
+    from repro import flags as _flags
+    cf_override = _flags.capacity_factor_override()
+    if cf_override is not None:
+        capacity_factor = cf_override
+    capacity = max(8, int(t_loc * top_k / num_experts * capacity_factor))
+    shadow_capacity = max(8, int(t_loc * top_k / max(s_max, 1)
+                                 * shadow_capacity_factor)) if s_max else 8
+
+    inner = functools.partial(
+        moe_inner, num_experts=num_experts, capacity=capacity,
+        shadow_capacity=shadow_capacity, ffn_kind=ffn_kind,
+        ep_axis=ctx.ep_axis, fsdp_axis=ctx.fsdp_axis, pod_axis=ctx.pod_axis,
+        s_max=s_max)
+
+    wg = params.get("wg")
+    if ctx.mesh is None:
+        y, counts, dropped = inner(xf, gf, ef, params["wi"], wg, params["wo"],
+                                   sidx, svalid, sdevs)
+    else:
+        from jax.experimental.shard_map import shard_map
+        all_axes = ctx.all_axes  # e.g. ("pod","data","model")
+        tok_spec = P(all_axes, None)
+        w_spec = P(ctx.ep_axis, ctx.pod_axis, ctx.fsdp_axis)
+        wo_spec = P(ctx.ep_axis, ctx.fsdp_axis, ctx.pod_axis)
+        f = shard_map(
+            inner, mesh=ctx.mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec, w_spec,
+                      None if wg is None else w_spec, wo_spec,
+                      P(None), P(None), P(None)),
+            out_specs=(tok_spec, P(ctx.ep_axis, None), P(ctx.ep_axis)),
+            check_rep=False)
+        y, counts, dropped = f(xf, gf, ef, params["wi"], wg, params["wo"],
+                               sidx, svalid, sdevs)
+    dropped = jnp.mean(dropped)
+
+    y = y[:T].reshape(B, S, d).astype(x.dtype)
+    if "shared" in params:
+        from .ffn import ffn_apply
+        y = y + ffn_apply(ffn_kind, params["shared"], x)
+    aux = {"counts": counts, "dropped": dropped,
+           "probs_entropy": -jnp.mean(jnp.sum(
+               probs * jnp.log(probs + 1e-9), axis=-1))}
+    return y, aux

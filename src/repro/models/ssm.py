@@ -1,0 +1,110 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer, arXiv:2403.19887).
+
+Training/prefill uses an associative scan (parallel prefix) over the
+sequence; decode is an O(1) state update.  State per layer:
+``h`` [B, d_inner, d_state] plus a depthwise-conv tail [B, K−1, d_inner].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, truncated_normal
+
+
+def mamba_init(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int | None = None,
+               dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(16, d_model // 16)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": truncated_normal(ks[1], (d_conv, d_inner), 0.5, dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": truncated_normal(ks[4], (d_inner,), 0.5, dtype),
+        "a_log": jnp.log(a).astype(dtype),
+        "d": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _ssm_params(params, xz, *, d_state: int, dt_rank: int):
+    """Per-token Δ, B, C from the post-conv activations."""
+    proj = xz @ params["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ params["dt_proj"]
+                         + params["dt_bias"])                 # [.., d_inner]
+    b = proj[..., dt_rank:dt_rank + d_state]                   # [.., d_state]
+    c = proj[..., dt_rank + d_state:]                          # [.., d_state]
+    return dt, b, c
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over seq. x [B,S,C]; w [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba(params, x, *, expand: int = 2, d_state: int = 16, d_conv: int = 4,
+          dt_rank: int | None = None):
+    """Full-sequence forward via associative scan. x [B,S,d]."""
+    B, S, d_model = x.shape
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(16, d_model // 16)
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_w"], params["conv_b"]))
+    dt, b, c = _ssm_params(params, xs, d_state=d_state, dt_rank=dt_rank)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # [d_inner,ds]
+    # Discretize: a_bar [B,S,d_inner,ds], b_bar·x [B,S,d_inner,ds]
+    dta = dt.astype(jnp.float32)[..., None] * a                 # [B,S,di,ds]
+    a_bar = jnp.exp(dta)
+    bx = (dt * xs).astype(jnp.float32)[..., None] * b.astype(jnp.float32)[..., None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    y = y.astype(x.dtype) + params["d"] * xs
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_decode(params, x, state, *, expand: int = 2, d_state: int = 16,
+                 d_conv: int = 4, dt_rank: int | None = None):
+    """Single-token step. x [B,1,d]; state dict {h, conv}."""
+    B, one, d_model = x.shape
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(16, d_model // 16)
+    xz = x[:, 0] @ params["in_proj"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    conv = jnp.concatenate([state["conv"], xs[:, None]], axis=1)  # [B,K,di]
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv, params["conv_w"])
+                     + params["conv_b"])
+    new_conv = conv[:, 1:]
+    dt, b, c = _ssm_params(params, xs, d_state=d_state, dt_rank=dt_rank)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt.astype(jnp.float32)[..., None] * a)       # [B,di,ds]
+    bx = (dt * xs).astype(jnp.float32)[..., None] * b.astype(jnp.float32)[..., None, :]
+    h = state["h"] * a_bar + bx
+    y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32)).astype(x.dtype)
+    y = (y + params["d"] * xs) * jax.nn.silu(z)
+    return (y @ params["out_proj"])[:, None], {"h": h, "conv": new_conv}
+
+
+def mamba_init_state(batch: int, d_model: int, *, expand: int = 2,
+                     d_state: int = 16, d_conv: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    return {"h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype)}

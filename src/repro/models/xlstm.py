@@ -1,0 +1,222 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+mLSTM training uses the stabilized quadratic (attention-like) form for
+short sequences and a chunked recurrent scan for long ones; decode is an
+O(1) matrix-memory update.  sLSTM is a lax.scan over time with
+block-diagonal recurrent weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, *, expand: int = 2,
+               dtype=jnp.float32):
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "wq": dense_init(ks[1], (d_inner, d_inner), dtype),
+        "wk": dense_init(ks[2], (d_inner, d_inner), dtype),
+        "wv": dense_init(ks[3], (d_inner, d_inner), dtype),
+        "w_if": dense_init(ks[4], (d_inner, 2 * num_heads), dtype),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "down_proj": dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _mlstm_qkvif(params, xs, num_heads):
+    B, S, d_inner = xs.shape
+    dh = d_inner // num_heads
+    q = (xs @ params["wq"]).reshape(B, S, num_heads, dh)
+    k = (xs @ params["wk"]).reshape(B, S, num_heads, dh) * dh ** -0.5
+    v = (xs @ params["wv"]).reshape(B, S, num_heads, dh)
+    gates = (xs @ params["w_if"]).reshape(B, S, num_heads, 2).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[..., 0])      # log σ(i)
+    log_f = -jax.nn.softplus(-gates[..., 1])      # log σ(f)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_parallel(params, x, *, num_heads: int, expand: int = 2):
+    """Stabilized quadratic form — O(S²) scores, for short sequences."""
+    B, S, _ = x.shape
+    up = x @ params["up_proj"]
+    d_inner = up.shape[-1] // 2
+    xs, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, xs, num_heads)
+    F = jnp.cumsum(log_f, axis=1)                                 # [B,S,H]
+    # log D[t,s] = F_t − F_s + log i_s  (s ≤ t)
+    logd_ts = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    logd = jnp.where(jnp.arange(S)[:, None] >= jnp.arange(S)[None, :],
+                     logd_ts.transpose(0, 3, 1, 2), NEG_INF)      # [B,H,S,S]
+    m = jnp.max(logd, axis=-1, keepdims=True)
+    d = jnp.exp(logd - jnp.maximum(m, 0.0))
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    num = jnp.einsum("bhts,bhts,bshd->bthd", s, d, v.astype(jnp.float32))
+    den = jnp.abs(jnp.einsum("bhts,bhts->bth", s, d))
+    den = jnp.maximum(den, jnp.exp(-jnp.maximum(m, 0.0))[..., 0].transpose(0, 2, 1))
+    h = (num / den[..., None]).astype(x.dtype)
+    h = h.reshape(B, S, -1)
+    h = rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    return h @ params["down_proj"]
+
+
+def mlstm_recurrent(params, x, *, num_heads: int, expand: int = 2):
+    """lax.scan over time — O(S) memory, for long sequences/prefill."""
+    B, S, _ = x.shape
+    up = x @ params["up_proj"]
+    d_inner = up.shape[-1] // 2
+    xs, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, xs, num_heads)
+    dh = d_inner // num_heads
+
+    def step(carry, inp):
+        C, n, m = carry                     # [B,H,dh,dh], [B,H,dh], [B,H]
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fa = jnp.exp(lf + m - m_new)[..., None]
+        ia = jnp.exp(li - m_new)[..., None]
+        C = C * fa[..., None] + ia[..., None] * (kt[..., :, None] *
+                                                 vt[..., None, :])
+        n = n * fa + ia * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    init = (jnp.zeros((B, num_heads, dh, dh), jnp.float32),
+            jnp.zeros((B, num_heads, dh), jnp.float32),
+            jnp.full((B, num_heads), NEG_INF, jnp.float32))
+    xsT = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, init, (xsT(q), xsT(k), xsT(v),
+                                      xsT(log_i), xsT(log_f)))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype).reshape(B, S, -1)
+    h = rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    return h @ params["down_proj"]
+
+
+def mlstm(params, x, *, num_heads: int, expand: int = 2, impl: str = "auto"):
+    if impl == "auto":
+        impl = "parallel" if x.shape[1] <= 1024 else "recurrent"
+    fn = mlstm_parallel if impl == "parallel" else mlstm_recurrent
+    return fn(params, x, num_heads=num_heads, expand=expand)
+
+
+def mlstm_decode(params, x, state, *, num_heads: int, expand: int = 2):
+    """x [B,1,d]; state {C,n,m}."""
+    B = x.shape[0]
+    up = x[:, 0] @ params["up_proj"]
+    d_inner = up.shape[-1] // 2
+    xs, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, xs[:, None], num_heads)
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]
+    li, lf = log_i[:, 0], log_f[:, 0]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fa = jnp.exp(lf + m - m_new)[..., None]
+    ia = jnp.exp(li - m_new)[..., None]
+    C = C * fa[..., None] + ia[..., None] * (kt.astype(jnp.float32)[..., :, None]
+                                             * vt.astype(jnp.float32)[..., None, :])
+    n = n * fa + ia * kt.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qt.astype(jnp.float32), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                         qt.astype(jnp.float32), n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(x.dtype).reshape(B, -1)
+    h = rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    return (h @ params["down_proj"])[:, None], {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(batch: int, d_model: int, num_heads: int, *,
+                     expand: int = 2):
+    d_inner = expand * d_model
+    dh = d_inner // num_heads
+    return {"C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+            "m": jnp.full((batch, num_heads), NEG_INF, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, dtype=jnp.float32):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input and block-diagonal recurrence.
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        "r": dense_init(ks[1], (num_heads, dh, 4 * dh), dtype, fan_in=dh),
+        "norm": rmsnorm_init(d_model, dtype),
+        "out": dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def _slstm_scan(params, x_gates, h0, c0, n0, m0, num_heads):
+    """x_gates [B,S,4d] precomputed input contributions."""
+    B, S, _ = x_gates.shape
+    d_model = x_gates.shape[-1] // 4
+    dh = d_model // num_heads
+
+    def step(carry, xt):
+        h, c, n, m = carry                       # h [B,H,dh] etc.
+        rec = jnp.einsum("bhd,hde->bhe", h, params["r"].astype(jnp.float32))
+        g = xt.reshape(B, num_heads, 4 * dh).astype(jnp.float32) + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        log_i = -jax.nn.softplus(-gi)
+        log_f = -jax.nn.softplus(-gf)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_a = jnp.exp(log_i - m_new)
+        f_a = jnp.exp(log_f + m - m_new)
+        c = f_a * c + i_a * jnp.tanh(gz)
+        n = f_a * n + i_a
+        h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (h_new, c, n, m_new), h_new
+
+    init = (h0, c0, n0, m0)
+    (_, c, n, m), hs = jax.lax.scan(step, init,
+                                    jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (c, n, m)
+
+
+def slstm(params, x, *, num_heads: int):
+    B, S, d_model = x.shape
+    dh = d_model // num_heads
+    xg = x @ params["w_in"]
+    h0 = jnp.zeros((B, num_heads, dh), jnp.float32)
+    c0 = jnp.zeros_like(h0)
+    n0 = jnp.zeros_like(h0)
+    m0 = jnp.full((B, num_heads, dh), NEG_INF, jnp.float32)
+    hs, _ = _slstm_scan(params, xg, h0, c0, n0, m0, num_heads)
+    y = rmsnorm(params["norm"], hs.reshape(B, S, d_model).astype(x.dtype))
+    return y @ params["out"]
+
+
+def slstm_decode(params, x, state, *, num_heads: int):
+    """x [B,1,d]; state {h,c,n,m}."""
+    B, _, d_model = x.shape
+    xg = x @ params["w_in"]
+    hs, (c, n, m) = _slstm_scan(params, xg, state["h"], state["c"],
+                                state["n"], state["m"], num_heads)
+    dh = d_model // num_heads
+    h_new = hs[:, -1].reshape(B, num_heads, dh)
+    y = rmsnorm(params["norm"], hs.reshape(B, 1, d_model).astype(x.dtype))
+    return y @ params["out"], {"h": h_new, "c": c, "n": n, "m": m}
+
+
+def slstm_init_state(batch: int, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, num_heads, dh), NEG_INF, jnp.float32)}

@@ -1,0 +1,5 @@
+from .adamw import adamw, apply_updates, clip_by_global_norm
+from .schedule import constant, cosine, linear_warmup, wsd
+
+__all__ = ["adamw", "apply_updates", "clip_by_global_norm", "constant",
+           "cosine", "linear_warmup", "wsd"]

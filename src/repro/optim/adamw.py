@@ -1,0 +1,89 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Self-contained (no optax in this environment).  The optimizer is a pair of
+pure functions over pytrees; state dtype is configurable so the big-MoE
+dry-runs can use bf16 moments (see EXPERIMENTS.md memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # scalar int32
+    mu: object            # pytree like params
+    nu: object            # pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[jnp.dtype] = None   # None ⇒ follow param dtype
+
+    def init(self, params) -> AdamWState:
+        def zeros(p):
+            dt = self.state_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+
+        def upd_mu(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype)
+
+        def upd_nu(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(v.dtype)
+
+        mu = jax.tree.map(upd_mu, state.mu, grads)
+        nu = jax.tree.map(upd_nu, state.nu, grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate(step)
+
+        def delta(m, v, p):
+            mh = m.astype(jnp.float32) / c1
+            vh = v.astype(jnp.float32) / c2
+            d = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                d = d + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * d).astype(p.dtype)
+
+        updates = jax.tree.map(delta, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def adamw(learning_rate, **kw) -> AdamW:
+    lr = learning_rate if callable(learning_rate) else (
+        lambda step, v=learning_rate: jnp.asarray(v, jnp.float32))
+    return AdamW(learning_rate=lr, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32)
+                                   * scale).astype(g.dtype), grads)

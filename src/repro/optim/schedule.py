@@ -1,0 +1,44 @@
+"""LR schedules: linear warmup, cosine, constant, and WSD
+(Warmup-Stable-Decay, MiniCPM arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return fn
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(peak: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * warm * cos
+    return fn
+
+
+def wsd(peak: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+        final_frac: float = 0.01):
+    """Warmup → Stable (constant peak) → Decay (exponential-ish linear).
+
+    MiniCPM's schedule: the stable phase allows continual data mixing; the
+    short decay phase recovers the cosine's final loss."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        in_decay = jnp.clip((s - warmup_steps - stable_steps)
+                            / max(decay_steps, 1), 0.0, 1.0)
+        decay = final_frac ** in_decay   # exp decay from 1 → final_frac
+        return peak * warm * decay
+    return fn

@@ -1,0 +1,5 @@
+from .sharding import (ParallelCtx, choose_spec, local_ctx, make_ctx,
+                       param_pspec, param_shardings, zero1_pspec)
+
+__all__ = ["ParallelCtx", "choose_spec", "local_ctx", "make_ctx",
+           "param_pspec", "param_shardings", "zero1_pspec"]

@@ -1,0 +1,220 @@
+"""Mesh context + logical→physical sharding rules.
+
+Meshes (DESIGN.md §6): single-pod ``(16, 16) ("data", "model")``,
+multi-pod ``(2, 16, 16) ("pod", "data", "model")``.
+
+* dense layers: tensor parallel over ``model``, batch over
+  (``pod``,)+``data`` — expressed as parameter shardings + activation
+  constraints, XLA SPMD inserts the collectives.
+* MoE experts: EP over ``model``; each expert FSDP-sharded over ``data``
+  (+``pod``) and gathered at use (see repro.models.moe).
+* optimizer states: ZeRO-1 — additionally sharded over ``data`` on the
+  largest still-unsharded divisible dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Everything model code needs to know about the mesh."""
+
+    mesh: Optional[Mesh]
+    pod_axis: Optional[str] = None
+    data_axis: Optional[str] = None
+    model_axis: Optional[str] = None
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def ep_axis(self) -> Optional[str]:
+        return self.model_axis
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return self.data_axis
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in (self.pod_axis, self.data_axis,
+                                 self.model_axis) if a is not None)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in (self.pod_axis, self.data_axis)
+                     if a is not None)
+
+    def axis_size(self, axis: Optional[str]) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[axis]
+
+    @property
+    def num_devices(self) -> int:
+        return 1 if self.mesh is None else int(np.prod(list(self.mesh.shape.values())))
+
+    @property
+    def ep_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self, ndim: int, batch: Optional[int] = None) -> P:
+        """Shard dim0 over (pod, data); rest replicated.  If ``batch`` is
+        given, fall back to the largest prefix of the batch axes that
+        divides it (B=1 long-context decode ⇒ replicated)."""
+        ba = list(self.batch_axes)
+        if batch is not None:
+            while ba and batch % int(np.prod([self.axis_size(a)
+                                              for a in ba])) != 0:
+                ba.pop(0)
+        if not ba:
+            return P(*([None] * ndim))
+        lead = tuple(ba) if len(ba) != 1 else ba[0]
+        return P(lead, *([None] * (ndim - 1)))
+
+
+def make_ctx(mesh: Mesh) -> ParallelCtx:
+    names = mesh.axis_names
+    return ParallelCtx(
+        mesh=mesh,
+        pod_axis="pod" if "pod" in names else None,
+        data_axis="data" if "data" in names else None,
+        model_axis="model" if "model" in names else None,
+    )
+
+
+def local_ctx() -> ParallelCtx:
+    """No-mesh single-device context (CPU smoke tests / quickstart)."""
+    return ParallelCtx(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def choose_spec(shape: Sequence[int], candidates: Sequence[P],
+                mesh_shape: dict) -> P:
+    """First candidate whose every named axis divides its dim."""
+    for spec in candidates:
+        ok = True
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            ns = names if isinstance(names, tuple) else (names,)
+            size = int(np.prod([mesh_shape[n] for n in ns]))
+            if dim >= len(shape) or shape[dim] % size != 0:
+                ok = False
+                break
+        if ok:
+            return spec
+    return P(*([None] * len(shape)))
+
+
+def _expert_leaf(path: Tuple[str, ...]) -> bool:
+    """Expert-stacked matrices live under a 'wi'/'wg'/'wo' key whose parent
+    chain contains a MoE marker; we detect by rank-3 leaf under 'moe'."""
+    return any(p in ("moe",) for p in path)
+
+
+def param_pspec(path: Tuple[str, ...], shape: Sequence[int],
+                ctx: ParallelCtx, *, stacked_dims: int = 0) -> P:
+    """Sharding spec for one parameter.
+
+    ``stacked_dims``: number of leading scan-stacking dims (replicated).
+    Rules (after stripping stacked dims):
+      embedding [V, d]           → P(model, None)  (vocab-sharded)
+      expert wi/wg [E, d, f]     → P(model, pod, data)
+      expert wo   [E, f, d]      → P(model, data, pod)
+      matmul [in, out]           → shard larger of out/in over model
+      1-D / norms                → replicated
+    """
+    if ctx.mesh is None:
+        return P()
+    mesh_shape = dict(ctx.mesh.shape)
+    core = tuple(shape[stacked_dims:])
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+
+    m, d_ax, p_ax = ctx.model_axis, ctx.data_axis, ctx.pod_axis
+
+    if name == "table":  # embedding
+        spec = choose_spec(core, [P(m, None), P(None, m), P(None, None)],
+                           mesh_shape)
+    elif len(core) == 3 and name in ("wi", "wg", "wo") and _expert_leaf(path):
+        if name == "wo":
+            cands = [P(m, d_ax, p_ax), P(m, d_ax, None), P(m, None, None),
+                     P(None, None, None)]
+        else:
+            cands = [P(m, p_ax, d_ax), P(m, None, d_ax), P(m, None, None),
+                     P(None, None, None)]
+        spec = choose_spec(core, cands, mesh_shape)
+    elif len(core) == 2:
+        # Alternate model-sharding between producer (out-dim) and consumer
+        # (in-dim) matrices to avoid resharding between them.
+        if name in ("wo", "out_proj", "down_proj", "out", "dt_proj", "wuk",
+                    "wuv"):
+            cands = [P(m, None), P(None, m), P(None, None)]
+        else:
+            cands = [P(None, m), P(m, None), P(None, None)]
+        spec = choose_spec(core, cands, mesh_shape)
+    elif len(core) == 3:  # e.g. sLSTM block-diagonal recurrence [H, dh, 4dh]
+        spec = choose_spec(core, [P(m, None, None), P(None, None, None)],
+                           mesh_shape)
+    else:
+        spec = P(*([None] * len(core)))
+    return P(*([None] * stacked_dims), *spec)
+
+
+def zero1_pspec(spec: P, shape: Sequence[int], ctx: ParallelCtx) -> P:
+    """Optimizer-state spec: param spec + ``data`` on the largest
+    still-unsharded divisible dim (ZeRO-1)."""
+    if ctx.mesh is None or ctx.data_axis is None:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if any(e is not None and (e == ctx.data_axis or
+                              (isinstance(e, tuple) and ctx.data_axis in e))
+           for e in entries):
+        return spec
+    data_size = ctx.axis_size(ctx.data_axis)
+    best, best_dim = -1, None
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % data_size == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim is None:
+        return spec
+    entries[best_dim] = ctx.data_axis
+    return P(*entries)
+
+
+def param_shardings(params, ctx: ParallelCtx, *, stacked_dims_fn=None):
+    """Tree of NamedShardings mirroring a param pytree.
+
+    ``stacked_dims_fn(path) -> int`` reports scan-stacking depth (default:
+    paths under a 'stages' subtree have 1 stacked dim)."""
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, params)
+
+    def default_stacked(path):
+        return 1 if any(str(p) == "stages" for p in path) else 0
+
+    fn = stacked_dims_fn or default_stacked
+
+    def leaf_spec(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", str(p)))
+                     for p in path)
+        keys = tuple(str(k) for k in keys)
+        spec = param_pspec(keys, leaf.shape, ctx, stacked_dims=fn(keys))
+        return NamedSharding(ctx.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)

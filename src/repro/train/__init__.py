@@ -1,0 +1,5 @@
+from .trainer import TrainState, Trainer, make_train_step
+from .serve import decode_tokens, make_serve_step, prefill
+
+__all__ = ["TrainState", "Trainer", "make_train_step", "decode_tokens",
+           "make_serve_step", "prefill"]

@@ -1,0 +1,61 @@
+"""Serving: batched autoregressive decode with KV/SSM caches.
+
+``make_serve_step`` builds the jitted single-token step used both by the
+serving example and by the decode-shape dry-runs (decode_32k / long_500k
+lower exactly this function).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.parallel import ParallelCtx
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ParallelCtx) -> Callable:
+    def step(params, caches, token, cache_index, placements=None):
+        logits, caches = model_lib.decode_step(
+            params, caches, token, cache_index, cfg, ctx,
+            placements=placements)
+        return logits, caches
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def prefill(params, caches, tokens, cfg: ModelConfig, ctx: ParallelCtx,
+            serve_step=None):
+    """Feed a prompt through the decode path token-by-token (cache fill).
+
+    A fused prefill kernel is a §Perf item; this sequential fill is the
+    correctness baseline the fused path must match."""
+    serve_step = serve_step or make_serve_step(cfg, ctx)
+    B, S = tokens.shape
+    logits = None
+    for t in range(S):
+        logits, caches = serve_step(params, caches, tokens[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+    return logits, caches
+
+
+def decode_tokens(params, caches, last_logits, start_index: int,
+                  num_tokens: int, cfg: ModelConfig, ctx: ParallelCtx,
+                  *, temperature: float = 0.0, key=None, serve_step=None):
+    """Greedy (or sampled) generation of ``num_tokens`` continuations."""
+    serve_step = serve_step or make_serve_step(cfg, ctx)
+    B = last_logits.shape[0]
+    out = []
+    logits = last_logits
+    for i in range(num_tokens):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        nxt = nxt.astype(jnp.int32)[:, None]
+        out.append(nxt)
+        logits, caches = serve_step(params, caches, nxt,
+                                    jnp.asarray(start_index + i, jnp.int32))
+    return jnp.concatenate(out, axis=1), caches

@@ -1,0 +1,130 @@
+"""Training loop with Pro-Prophet in the loop.
+
+Per iteration (paper Fig. 5, adapted to JAX — DESIGN.md §3):
+
+  1. device: jitted ``train_step(state, batch, placements)`` runs fwd+bwd
+     with the *current* placements; MoE layers return their routing
+     matrices (the profiled input distributions).
+  2. host, overlapped with the next dispatch: the engine ingests the
+     routing matrices, the locality planner (re)plans, and packs the
+     placement arrays for the next step — the ``Plan`` primitive.
+  3. ``Trans`` / shadow-compute / ``Agg`` all live *inside* the jitted
+     step (repro.models.moe), so the placement handoff is the only
+     host↔device traffic Pro-Prophet adds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import EngineConfig, HardwareSpec, ProProphetEngine
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+from repro.parallel import ParallelCtx
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
+                    *, attn_impl: str = "auto", remat: bool = True,
+                    donate: bool = True) -> Callable:
+    """Build the jitted train step.  ``placements`` may be None (plain EP)
+    or the engine's stacked arrays — each choice compiles once."""
+
+    def step(state: TrainState, batch, placements=None):
+        def lf(params):
+            return model_lib.loss_fn(params, batch, cfg, ctx,
+                                     placements=placements,
+                                     attn_impl=attn_impl, remat=remat)
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        updates, opt = optimizer.update(grads, state.opt, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss}
+        if aux.get("counts") is not None:
+            metrics["counts"] = aux["counts"]
+        return TrainState(params, opt), metrics
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ModelConfig
+    ctx: ParallelCtx
+    optimizer: AdamW
+    attn_impl: str = "auto"
+    remat: bool = True
+    # Pro-Prophet wiring (None ⇒ plain EP / dense model).
+    engine: Optional[ProProphetEngine] = None
+
+    def __post_init__(self):
+        self._step_fn = make_train_step(self.cfg, self.ctx, self.optimizer,
+                                        attn_impl=self.attn_impl,
+                                        remat=self.remat)
+
+    def init_state(self, key, dtype=jnp.float32) -> TrainState:
+        params = model_lib.init_params(key, self.cfg, dtype)
+        return TrainState(params, self.optimizer.init(params))
+
+    def run(self, state: TrainState, batches, num_steps: int,
+            log_every: int = 10, log_fn=print) -> tuple:
+        history = []
+        it = iter(batches)
+        t0 = time.perf_counter()
+        for step in range(num_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            placements = None
+            if self.engine is not None:
+                placements = {k: jnp.asarray(v)
+                              for k, v in self.engine.step_arrays().items()}
+            state, metrics = self._step_fn(state, batch, placements)
+            loss = float(metrics["loss"])
+            if self.engine is not None and "counts" in metrics:
+                # counts [L_moe, D_ep, E] observed this step → plan next.
+                counts = np.asarray(metrics["counts"])
+                self.engine.observe([counts[i].T.astype(np.float64).T
+                                     for i in range(counts.shape[0])])
+            history.append(loss)
+            if log_every and step % log_every == 0:
+                dt = time.perf_counter() - t0
+                extra = ""
+                if self.engine is not None:
+                    pt = self.engine.predicted_times()
+                    extra = (f" plan_speedup={pt['speedup']:.2f}x"
+                             f" shadows={sum(p.num_shadowed for p in self.engine.placements)}")
+                log_fn(f"step {step:5d} loss {loss:.4f} "
+                       f"({dt / (step + 1):.3f}s/it){extra}")
+        return state, history
+
+
+def make_engine_for(cfg: ModelConfig, ctx: ParallelCtx, *,
+                    policy: str = "pro_prophet",
+                    replan_interval: int = 1,
+                    bandwidth: float = 25e9,
+                    flops_per_s: float = 70e12) -> Optional[ProProphetEngine]:
+    """Engine wired to a model config (None for non-MoE archs)."""
+    if cfg.moe is None:
+        return None
+    nm = 3 if cfg.ffn_kind == "swiglu" else 2
+    hw = HardwareSpec.from_model_dims(
+        cfg.d_model, cfg.moe.d_expert, bandwidth=bandwidth,
+        flops_per_s=flops_per_s, num_ffn_mats=nm)
+    ec = EngineConfig(
+        num_experts=cfg.moe.num_experts,
+        num_devices=max(ctx.ep_size, 1),
+        num_moe_layers=cfg.num_moe_layers,
+        s_max=cfg.moe.s_max,
+        replan_interval=replan_interval,
+        policy=policy,
+    )
+    return ProProphetEngine(ec, hw)

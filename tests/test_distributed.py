@@ -1,0 +1,30 @@
+"""Multi-device integration tests: spawn subprocesses with 8 host devices
+(XLA device count must be set before jax initializes, hence subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def run_dist_script(name: str, timeout: int = 520) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist", name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"--- stdout ---\n{proc.stdout[-3000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_ep_equivalence_and_training_parity():
+    out = run_dist_script("ep_equivalence.py")
+    assert "EP_EQUIVALENCE_PASS" in out

@@ -1,0 +1,187 @@
+"""Layer-level numerics: attention impl equivalence, decode-vs-forward
+consistency for every mixer family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import ssm, xlstm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, scale=0.5):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+class TestAttentionImpls:
+    @pytest.mark.parametrize("window", [None, 16])
+    @pytest.mark.parametrize("S", [64, 96])
+    def test_chunked_matches_naive(self, S, window):
+        B, H, K, dh = 2, 4, 2, 16
+        p = attn.attention_init(KEY, 32, H, K, dh)
+        x = rand(jax.random.PRNGKey(1), (B, S, 32))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        kw = dict(num_heads=H, num_kv_heads=K, head_dim=dh, window=window)
+        y0 = attn.multihead_attention(p, x, pos, impl="naive", **kw)
+        y1 = attn.multihead_attention(p, x, pos, impl="chunked",
+                                      q_block=32, kv_block=32, **kw)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_banded_matches_naive(self):
+        B, H, K, dh, S, W = 1, 2, 1, 16, 128, 24
+        p = attn.attention_init(KEY, 32, H, K, dh)
+        x = rand(jax.random.PRNGKey(2), (B, S, 32))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        kw = dict(num_heads=H, num_kv_heads=K, head_dim=dh, window=W)
+        y0 = attn.multihead_attention(p, x, pos, impl="naive", **kw)
+        y1 = attn.multihead_attention(p, x, pos, impl="banded",
+                                      q_block=32, kv_block=32, **kw)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_pallas_matches_naive(self):
+        B, H, K, dh, S = 1, 2, 2, 64, 128
+        p = attn.attention_init(KEY, 64, H, K, dh)
+        x = rand(jax.random.PRNGKey(3), (B, S, 64))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        kw = dict(num_heads=H, num_kv_heads=K, head_dim=dh)
+        y0 = attn.multihead_attention(p, x, pos, impl="naive", **kw)
+        y1 = attn.multihead_attention(p, x, pos, impl="pallas", **kw)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_qkv_bias(self):
+        p = attn.attention_init(KEY, 32, 2, 2, 16, qkv_bias=True)
+        assert "bq" in p and "bk" in p and "bv" in p
+        x = rand(KEY, (1, 8, 32))
+        pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+        y = attn.multihead_attention(p, x, pos, num_heads=2, num_kv_heads=2,
+                                     head_dim=16, impl="naive")
+        assert not bool(jnp.any(jnp.isnan(y)))
+
+    @pytest.mark.parametrize("window", [None, 8])
+    def test_decode_matches_forward(self, window):
+        """Token-by-token decode reproduces the full forward's last rows."""
+        B, H, K, dh, S = 2, 4, 2, 16, 24
+        d = 32
+        p = attn.attention_init(KEY, d, H, K, dh)
+        x = rand(jax.random.PRNGKey(4), (B, S, d))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        full = attn.multihead_attention(p, x, pos, num_heads=H,
+                                        num_kv_heads=K, head_dim=dh,
+                                        window=window, impl="naive")
+        ck = jnp.zeros((B, S, K, dh))
+        cv = jnp.zeros((B, S, K, dh))
+        outs = []
+        for t in range(S):
+            y, ck, cv = attn.decode_attention(
+                p, x[:, t:t + 1], ck, cv, t, num_heads=H, num_kv_heads=K,
+                head_dim=dh, window=window)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestMLA:
+    KW = dict(num_heads=4, kv_rank=32, nope_dim=16, rope_dim=8, v_dim=16)
+
+    def _params(self, d=64):
+        return mla_mod.mla_init(KEY, d, 4, q_rank=48, kv_rank=32,
+                                nope_dim=16, rope_dim=8, v_dim=16)
+
+    def test_forward_shapes(self):
+        d, B, S = 64, 2, 16
+        p = self._params(d)
+        x = rand(KEY, (B, S, d))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        y = mla_mod.mla_attention(p, x, pos, impl="naive", **self.KW)
+        assert y.shape == (B, S, d)
+
+    def test_decode_matches_forward(self):
+        """Absorbed-latent decode == materialized training attention."""
+        d, B, S = 64, 2, 12
+        p = self._params(d)
+        x = rand(jax.random.PRNGKey(5), (B, S, d))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        full = mla_mod.mla_attention(p, x, pos, impl="naive", **self.KW)
+        ckv = jnp.zeros((B, S, 32))
+        kr = jnp.zeros((B, S, 8))
+        outs = []
+        for t in range(S):
+            y, ckv, kr = mla_mod.mla_decode(p, x[:, t:t + 1], ckv, kr, t,
+                                            **self.KW)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   rtol=3e-4, atol=3e-5)
+
+    def test_chunked_matches_naive(self):
+        d, B, S = 64, 1, 64
+        p = self._params(d)
+        x = rand(jax.random.PRNGKey(6), (B, S, d))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        y0 = mla_mod.mla_attention(p, x, pos, impl="naive", **self.KW)
+        y1 = mla_mod.mla_attention(p, x, pos, impl="chunked", q_block=16,
+                                   **self.KW)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestMamba:
+    def test_decode_matches_scan(self):
+        d, B, S = 32, 2, 10
+        p = ssm.mamba_init(KEY, d)
+        x = rand(jax.random.PRNGKey(7), (B, S, d))
+        full = ssm.mamba(p, x)
+        st = ssm.mamba_init_state(B, d)
+        outs = []
+        for t in range(S):
+            y, st = ssm.mamba_decode(p, x[:, t:t + 1], st)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   rtol=3e-4, atol=3e-5)
+
+
+class TestXLSTM:
+    def test_mlstm_parallel_matches_recurrent(self):
+        d, B, S, H = 32, 2, 32, 4
+        p = xlstm.mlstm_init(KEY, d, H)
+        x = rand(jax.random.PRNGKey(8), (B, S, d))
+        y0 = xlstm.mlstm(p, x, num_heads=H, impl="parallel")
+        y1 = xlstm.mlstm(p, x, num_heads=H, impl="recurrent")
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_mlstm_decode_matches_recurrent(self):
+        d, B, S, H = 32, 1, 8, 4
+        p = xlstm.mlstm_init(KEY, d, H)
+        x = rand(jax.random.PRNGKey(9), (B, S, d))
+        full = xlstm.mlstm(p, x, num_heads=H, impl="recurrent")
+        st = xlstm.mlstm_init_state(B, d, H)
+        outs = []
+        for t in range(S):
+            y, st = xlstm.mlstm_decode(p, x[:, t:t + 1], st, num_heads=H)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_slstm_decode_matches_scan(self):
+        d, B, S, H = 32, 2, 8, 4
+        p = xlstm.slstm_init(KEY, d, H)
+        x = rand(jax.random.PRNGKey(10), (B, S, d))
+        full = xlstm.slstm(p, x, num_heads=H)
+        st = xlstm.slstm_init_state(B, d, H)
+        outs = []
+        for t in range(S):
+            y, st = xlstm.slstm_decode(p, x[:, t:t + 1], st, num_heads=H)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   rtol=3e-4, atol=3e-4)

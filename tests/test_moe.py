@@ -1,0 +1,137 @@
+"""MoE dispatch/combine correctness + router + shadow-path invariants
+(single device; the multi-device equivalence lives in test_distributed)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe
+from repro.parallel import local_ctx
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestDispatch:
+    @given(st.integers(1, 40), st.integers(1, 3), st.integers(2, 8),
+           st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_positions_are_dense_ranks(self, n, k, e, seed):
+        rng = np.random.default_rng(seed)
+        expert = jnp.asarray(rng.integers(0, e, size=(n * k,)), jnp.int32)
+        pos = np.asarray(moe.capacity_positions(expert, e))
+        for b in range(e):
+            sel = pos[np.asarray(expert) == b]
+            assert sorted(sel.tolist()) == list(range(len(sel)))
+
+    def test_dispatch_combine_roundtrip(self):
+        """With no drops, dispatch→identity-experts→combine == gate-sum."""
+        n, k, e, d, cap = 16, 2, 4, 8, 32
+        x = jax.random.normal(KEY, (n, d))
+        expert = jax.random.randint(jax.random.PRNGKey(1), (n, k), 0, e)
+        gate = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (n, k)))
+        buf, pos = moe.capacity_dispatch(x, expert, cap, e)
+        y = moe.capacity_combine(buf, expert, pos, gate)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(x * gate.sum(-1, keepdims=True)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_capacity_drop(self):
+        n, d = 8, 4
+        x = jnp.ones((n, d))
+        expert = jnp.zeros((n, 1), jnp.int32)       # all to expert 0
+        gate = jnp.ones((n, 1))
+        buf, pos = moe.capacity_dispatch(x, expert, 4, 2)
+        assert float(buf[0].sum()) == 4 * d          # only 4 kept
+        y = moe.capacity_combine(buf, expert, pos, gate)
+        assert float((y.sum(-1) > 0).sum()) == 4     # dropped → zero output
+
+    def test_sentinel_bucket_dropped(self):
+        n, d, e = 6, 4, 3
+        x = jnp.ones((n, d))
+        expert = jnp.full((n, 1), e, jnp.int32)      # sentinel == e
+        buf, pos = moe.capacity_dispatch(x, expert, 8, e + 1)
+        assert float(buf[:e].sum()) == 0
+
+
+class TestRouter:
+    def test_topk_renormalized(self):
+        p = moe.router_init(KEY, 16, 8)
+        x = jax.random.normal(jax.random.PRNGKey(3), (5, 16))
+        gate, idx, probs = moe.router_topk(p, x, 2)
+        np.testing.assert_allclose(np.asarray(gate.sum(-1)), 1.0, rtol=1e-5)
+        assert idx.shape == (5, 2) and probs.shape == (5, 8)
+
+    def test_load_balance_loss_uniform_is_one(self):
+        probs = jnp.full((100, 4), 0.25)
+        idx = jnp.tile(jnp.arange(4), 25)[:, None]
+        lb = moe.load_balance_loss(probs, idx, 4)
+        assert float(lb) == pytest.approx(1.0, rel=1e-5)
+
+
+class TestShadowInvariance:
+    """Shadowing must change WHERE compute happens, never the math."""
+
+    def _setup(self, e=4, k=2, n=32, d=16, f=32, s_max=2):
+        ks = jax.random.split(KEY, 3)
+        params = moe.moe_init(ks[0], d, f, e, ffn_kind="swiglu")
+        x = 0.5 * jax.random.normal(ks[1], (2, n // 2, d))
+        return params, x
+
+    def _apply(self, params, x, placement, s_max=2, e=4):
+        ctx = local_ctx()
+        y, aux = moe.moe_apply(params, x, placement, ctx, num_experts=e,
+                               top_k=2, d_expert=32, ffn_kind="swiglu",
+                               capacity_factor=float(e),
+                               shadow_capacity_factor=4.0, s_max=s_max)
+        return y, aux
+
+    def test_shadow_noop_numerics(self):
+        params, x = self._setup()
+        y0, aux0 = self._apply(params, x, None)
+        placement = {
+            "shadow_idx": jnp.array([1, 4], jnp.int32),
+            "shadow_valid": jnp.array([1.0, 0.0], jnp.float32),
+            "shadow_devs": jnp.array([[1.0], [0.0]], jnp.float32),
+        }
+        y1, aux1 = self._apply(params, x, placement)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(aux0["counts"]),
+                                      np.asarray(aux1["counts"]))
+
+    def test_gradients_match_with_shadow(self):
+        params, x = self._setup()
+        placement = {
+            "shadow_idx": jnp.array([0, 4], jnp.int32),
+            "shadow_valid": jnp.array([1.0, 0.0], jnp.float32),
+            "shadow_devs": jnp.array([[1.0], [0.0]], jnp.float32),
+        }
+
+        def loss(p, pl):
+            y, _ = self._apply(p, x, pl)
+            return jnp.sum(y ** 2)
+
+        g0 = jax.grad(loss)(params, None)
+        g1 = jax.grad(loss)(params, placement)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=1e-5)
+
+    def test_counts_reported(self):
+        params, x = self._setup()
+        _, aux = self._apply(params, x, None)
+        counts = np.asarray(aux["counts"])
+        assert counts.shape == (1, 4)
+        assert counts.sum() == x.shape[0] * x.shape[1] * 2  # n tokens × k
+
+    def test_shared_expert(self):
+        ks = jax.random.split(KEY, 2)
+        params = moe.moe_init(ks[0], 16, 32, 4, ffn_kind="swiglu",
+                              num_shared=1, shared_d_ff=32)
+        assert "shared" in params
+        x = 0.5 * jax.random.normal(ks[1], (2, 8, 16))
+        y, _ = self._apply(params, x, None)
+        assert y.shape == x.shape

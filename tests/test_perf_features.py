@@ -1,0 +1,85 @@
+"""§Perf levers must be numerically inert: chunked xent, attention-impl
+switches; plus the dry-run HLO collective parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import (chunked_unembed_xent, cross_entropy_loss,
+                                 embedding_init, unembed)
+
+
+class TestChunkedXent:
+    @pytest.mark.parametrize("chunk", [7, 64, 512, 1000])
+    def test_matches_dense(self, chunk):
+        V, d, B, S = 300, 32, 2, 9
+        key = jax.random.PRNGKey(0)
+        emb = embedding_init(key, V, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+        dense = cross_entropy_loss(unembed(emb, x), labels)
+        chunked = chunked_unembed_xent(x, emb["table"], labels, chunk)
+        np.testing.assert_allclose(float(dense), float(chunked), rtol=1e-5)
+
+    def test_mask(self):
+        V, d, B, S = 64, 16, 2, 8
+        emb = embedding_init(jax.random.PRNGKey(0), V, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+        labels = jnp.zeros((B, S), jnp.int32)
+        mask = jnp.zeros((B, S)).at[:, :3].set(1.0)
+        dense = cross_entropy_loss(unembed(emb, x), labels, mask)
+        chunked = chunked_unembed_xent(x, emb["table"], labels, 16, mask)
+        np.testing.assert_allclose(float(dense), float(chunked), rtol=1e-5)
+
+    def test_grads_match(self):
+        V, d, B, S = 128, 16, 1, 6
+        emb = embedding_init(jax.random.PRNGKey(0), V, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+        g1 = jax.grad(lambda e: cross_entropy_loss(unembed(e, x), labels))(emb)
+        g2 = jax.grad(lambda e: chunked_unembed_xent(x, e["table"], labels,
+                                                     32))(emb)
+        np.testing.assert_allclose(np.asarray(g1["table"]),
+                                   np.asarray(g2["table"]),
+                                   rtol=2e-4, atol=1e-6)
+
+
+class TestCollectiveParser:
+    def test_parses_kinds_and_bytes(self):
+        from repro.launch.dryrun import collective_bytes
+        hlo = """
+  %all-gather.1 = f32[16,4096,128]{2,1,0} all-gather(%x), dimensions={0}
+  %ar = bf16[8,1024]{1,0} all-reduce(%y), to_apply=%add
+  ROOT %out = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b)
+  %rs = f32[2,2]{1,0} reduce-scatter(%c), dimensions={0}
+  %cp.2 = u32[10]{0} collective-permute-start(%d)
+  %notacoll = f32[4]{0} add(%e, %f)
+"""
+        got = collective_bytes(hlo)
+        assert got["all-gather"] == 16 * 4096 * 128 * 4
+        assert got["all-reduce"] == 8 * 1024 * 2
+        assert got["all-to-all"] == 2 * 16 * 4
+        assert got["reduce-scatter"] == 4 * 4
+        assert got["collective-permute"] == 10 * 4
+        assert got["count"] == 5
+
+
+class TestAttnImplFlag:
+    def test_naive_max_env(self):
+        from repro.models import attention as attn
+        key = jax.random.PRNGKey(0)
+        p = attn.attention_init(key, 32, 2, 2, 16)
+        x = 0.3 * jax.random.normal(key, (1, 96, 32))
+        pos = jnp.broadcast_to(jnp.arange(96), (1, 96))
+        kw = dict(num_heads=2, num_kv_heads=2, head_dim=16)
+        os.environ["REPRO_ATTN_NAIVE_MAX"] = "64"
+        try:
+            y_chunk_path = attn.multihead_attention(p, x, pos, impl="auto",
+                                                    **kw)
+        finally:
+            del os.environ["REPRO_ATTN_NAIVE_MAX"]
+        y_naive = attn.multihead_attention(p, x, pos, impl="naive", **kw)
+        np.testing.assert_allclose(np.asarray(y_chunk_path),
+                                   np.asarray(y_naive), rtol=2e-4, atol=2e-5)
