@@ -1,0 +1,125 @@
+"""Ragged-GMM microbenchmark: FLOP utilization of the MoE expert FFN as a
+function of expert-load skew (repro.kernels.ragged_gmm vs the dense
+capacity-buffer einsum).
+
+Loads are drawn from a Zipf-style power law over experts (``alpha``
+controls skew; measured skew = max load / mean load).  The capacity
+buffer is sized like the model does (capacity_factor × mean load), hot
+experts drop over-capacity tokens exactly like the dispatch path, and
+modeled work is counted at the kernel's tile granularity — the same
+predicate the kernel uses to skip MXU tiles, so the numbers are the
+compute the hardware actually runs.
+
+Rows (``derived`` column):
+  moe_ffn/a<alpha>/skew            measured max/mean load ratio
+  moe_ffn/a<alpha>/utilization     ragged FLOPs / dense FLOPs  (≤ 1)
+  moe_ffn/a<alpha>/ragged_speedup  dense / ragged — the modeled FEC win
+
+On TPU the per-call wall time of the fused pallas path is measured into
+``us_per_call``; on other backends (interpret mode) timing is
+meaningless and reported as 0.0.
+"""
+import time
+
+import numpy as np
+
+# Model-ish layer constants (small enough that the optional TPU timing
+# pass stays cheap; modeled ratios are shape-independent up to tiling).
+E, D, F = 16, 256, 512
+TOKENS = 8192                 # total routed token-choices (512/expert mean,
+                              # several MXU row tiles, so tile rounding is
+                              # second-order in the modeled ratios)
+CAPACITY_FACTOR = 1.25
+ALPHAS = (0.0, 0.5, 1.0, 1.5, 2.0)
+
+
+def skewed_loads(alpha: float, total: int = TOKENS, e: int = E):
+    """Power-law expert loads summing to ``total`` (alpha=0 ⇒ uniform)."""
+    w = (1.0 / np.arange(1, e + 1)) ** alpha
+    loads = np.floor(w / w.sum() * total).astype(int)
+    loads[0] += total - loads.sum()          # remainder to the hot expert
+    return loads
+
+
+def _time_pallas(loads, capacity):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    if jax.default_backend() != "tpu":
+        return 0.0               # interpret-mode timing is meaningless
+    x = jnp.zeros((E, capacity, D), jnp.bfloat16)
+    wg = jnp.zeros((E, D, F), jnp.bfloat16)
+    wi = jnp.zeros((E, D, F), jnp.bfloat16)
+    wo = jnp.zeros((E, F, D), jnp.bfloat16)
+    gs = jnp.asarray(loads, jnp.int32)
+
+    def ffn():
+        h = ops.gmm_swiglu(x, wg, wi, gs)
+        return ops.ragged_gmm(h, wo, gs)
+
+    ffn().block_until_ready()    # compile
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        out = ffn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(measure: bool = True):
+    """``measure=False`` skips the (TPU-only) wall-time pass — the
+    modeled rows are pure arithmetic and safe to call from report
+    generation without compiling anything."""
+    from repro.core.perfmodel import (V5E_ICI_BW, V5E_PEAK_FLOPS,
+                                      HardwareSpec, PerfModel)
+    from repro.kernels.ragged_gmm import modeled_flops
+
+    # Perfmodel view of the same layer: per-device FEC time under the
+    # straggler max (eq. 2) vs a dense capacity-padded kernel — the
+    # time-domain counterpart of the tile-level utilization below.
+    hw = HardwareSpec.from_model_dims(D, F, bandwidth=V5E_ICI_BW,
+                                      flops_per_s=V5E_PEAK_FLOPS,
+                                      num_ffn_mats=3)
+    pm = PerfModel(hw, E)        # one expert per device for this sweep
+
+    rows = []
+    mean = TOKENS / E
+    capacity = int(mean * CAPACITY_FACTOR)
+    for alpha in ALPHAS:
+        loads = skewed_loads(alpha)
+        skew = float(loads.max() / mean)
+        kept = np.minimum(loads, capacity)   # dispatch drops the rest
+        # Expert FFN = 2 up-projections (fused) + 1 down-projection, all
+        # ragged on the same counts.
+        up_r, up_d = modeled_flops(capacity, D, F, kept, capacity,
+                                   num_mats=2)
+        dn_r, dn_d = modeled_flops(capacity, F, D, kept, capacity)
+        ragged, dense = up_r + dn_r, up_d + dn_d
+        util = ragged / dense
+        us = _time_pallas(kept, capacity) if measure else 0.0
+        rows.append((f"moe_ffn/a{alpha}/skew", 0.0, skew))
+        rows.append((f"moe_ffn/a{alpha}/utilization", us, util))
+        rows.append((f"moe_ffn/a{alpha}/ragged_speedup", 0.0,
+                     dense / max(ragged, 1)))
+        rows.append((f"moe_ffn/a{alpha}/perfmodel_fec_util",
+                     pm.t_fec(kept) * 1e6,
+                     pm.fec_utilization(kept, capacity)))
+    return rows
+
+
+def table():
+    """Markdown rows for benchmarks.report — modeled numbers only (no
+    kernel compilation or timing)."""
+    lines = ["| alpha | skew (max/mean) | utilization | ragged speedup |"
+             " perfmodel FEC util |",
+             "|---|---|---|---|---|"]
+    by_alpha = {}
+    for name, _, val in run(measure=False):
+        a = name.split("/")[1][1:]
+        by_alpha.setdefault(a, {})[name.rsplit("/", 1)[1]] = val
+    for a, vals in by_alpha.items():
+        lines.append(f"| {a} | {vals['skew']:.2f} "
+                     f"| {vals['utilization']:.3f} "
+                     f"| {vals['ragged_speedup']:.2f}× "
+                     f"| {vals['perfmodel_fec_util']:.3f} |")
+    return "\n".join(lines)

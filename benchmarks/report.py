@@ -128,11 +128,35 @@ def perf_section():
     return "\n".join(lines)
 
 
+def moe_ffn_section():
+    from .moe_ffn import CAPACITY_FACTOR, table
+    return "\n".join([
+        "## §Ragged GMM", "",
+        "Modeled FLOP utilization of the ragged Pallas expert FFN "
+        "(`repro.kernels.ragged_gmm`, enabled by `REPRO_MOE_PALLAS`) vs "
+        "the dense capacity-buffer einsum, as a function of expert-load "
+        f"skew (power-law loads, capacity factor {CAPACITY_FACTOR}).  "
+        "Counted at the kernel's MXU-tile granularity — `ragged speedup` "
+        "is the modeled FEC/BEC win the load balancer's measurements "
+        "ride on.  `perfmodel FEC util` is the eq.-2 straggler view "
+        "(PerfModel.fec_utilization): once the hot expert saturates "
+        "capacity the straggler device gains nothing from raggedness — "
+        "the fleet-wide FLOP savings in `utilization` land on the other "
+        "devices, which is exactly the imbalance Pro-Prophet's placement "
+        "then moves.  Run `python -m benchmarks.run` (or "
+        "`benchmarks.moe_ffn` directly) for the raw rows incl. measured "
+        "µs on TPU.", "",
+        table(), ""])
+
+
 def main():
-    print(open(os.path.join(os.path.dirname(__file__), "..",
-                            "EXPERIMENTS.header.md")).read())
+    header = os.path.join(os.path.dirname(__file__), "..",
+                          "EXPERIMENTS.header.md")
+    print(open(header).read() if os.path.exists(header)
+          else "# EXPERIMENTS\n")
     print(dryrun_section())
     print(roofline_section())
+    print(moe_ffn_section())
     print(perf_section())
 
 

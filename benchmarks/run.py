@@ -11,10 +11,11 @@ import time
 
 def main() -> None:
     from . import (ablation, balance, breakdown, cadence, end_to_end,
-                   fine_grained, locality, perfmodel_accuracy, policies,
-                   roofline)
+                   fine_grained, locality, moe_ffn, perfmodel_accuracy,
+                   policies, roofline)
     modules = [
         ("locality(Fig4)", locality),
+        ("moe_ffn(ragged-GMM)", moe_ffn),
         ("breakdown(TableI)", breakdown),
         ("end_to_end(TablesIV-V,Fig10)", end_to_end),
         ("fine_grained(Figs11-12)", fine_grained),

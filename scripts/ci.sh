@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the single entry point CI and humans share (ROADMAP.md).
+# Extra args pass through to pytest, e.g.  scripts/ci.sh -m 'not slow'
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

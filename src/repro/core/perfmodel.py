@@ -100,6 +100,24 @@ class PerfModel:
     def t_bec(self, H: Array) -> float:
         return 2.0 * self.t_fec(H)
 
+    # -- ragged vs dense FEC (beyond-paper; repro.kernels.ragged_gmm) -----
+    # eq. 2 implicitly assumes the expert kernel's cost follows the actual
+    # per-device load H — true for the ragged kernel, false for a dense
+    # kernel over the [E, C, d] capacity buffer, which always computes
+    # every slot.  The dense term makes that waste explicit so placements
+    # can be scored against what the hardware would really run.
+    def t_fec_dense(self, capacity_slots: float) -> float:
+        """FEC of a dense (capacity-padded) kernel: ``capacity_slots`` =
+        experts-per-device × per-expert capacity, load-independent."""
+        return float(capacity_slots) / self.hw.throughput
+
+    def fec_utilization(self, H: Array, capacity_slots: float) -> float:
+        """Useful fraction of dense-kernel FLOPs — the straggler device's
+        actual load over the capacity slots it computes.  The ragged
+        kernel's win factor is 1 / utilization."""
+        dense = self.t_fec_dense(capacity_slots)
+        return self.t_fec(H) / dense if dense > 0 else 1.0
+
     # -- eqs. 4/5 ---------------------------------------------------------
     def _t_transfer(self, s: int, n: int, size: float) -> float:
         if s <= 0:

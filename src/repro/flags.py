@@ -14,6 +14,12 @@ REPRO_SEQ_PARALLEL=1    Sequence-parallel activation constraints between
 REPRO_CAPACITY_FACTOR=x Override MoE capacity factor (a2a volume lever).
 REPRO_GQA_FLASH=1       Route big-shape attention through the chunked
                         online-softmax path with a larger q_block.
+REPRO_MOE_PALLAS=0/1    Expert FFN through the ragged Pallas kernels
+                        (repro.kernels.ragged_gmm): grouped matmul skips
+                        tiles past each expert's actual token count and
+                        the SwiGLU gate is fused into the epilogue.
+                        Unset ⇒ on for TPU backends, off elsewhere
+                        (=1 forces it on anywhere via interpret mode).
 """
 import os
 
@@ -37,6 +43,15 @@ def seq_parallel() -> bool:
 def capacity_factor_override():
     v = _flag("REPRO_CAPACITY_FACTOR", "")
     return float(v) if v else None
+
+
+def moe_pallas() -> bool:
+    """Ragged-Pallas expert FFN: default on for TPU, opt-in elsewhere."""
+    v = _flag("REPRO_MOE_PALLAS", "")
+    if v == "":
+        import jax
+        return jax.default_backend() == "tpu"
+    return v == "1"
 
 
 def pin_residual() -> bool:

@@ -1,11 +1,26 @@
 """Pallas TPU kernels for the compute hot spots:
 
-* ``gmm``             — grouped expert matmul (the MoE FEC/BEC the paper's
-                        load balancing targets),
+* ``gmm``             — dense grouped expert matmul (kept as the
+                        capacity-padded baseline),
+* ``ragged_gmm``      — load-proportional grouped matmul: takes the
+                        per-(group, segment) token counts produced by the
+                        MoE router (``group_sizes``) and skips MXU tiles
+                        past each occupancy prefix, so FEC/BEC cost
+                        follows the *actual* expert load the paper's
+                        balancer is shaping rather than the capacity
+                        bound.  Carries a custom VJP (ragged backward).
+* ``gmm_swiglu``      — ragged_gmm with the SwiGLU gate fused into the
+                        epilogue: ``silu(x@wg) * (x@wi)`` accumulates
+                        both products from one VMEM-resident ``x`` tile
+                        (one HBM read of the activations instead of two).
+                        VMEM/step at 128³ tiles is ≈224 KiB — see
+                        ragged_gmm.py for the budget breakdown.
 * ``flash_attention`` — block-wise online-softmax attention (prefill and
                         sliding-window layers).
 
-``ops`` exposes jit'd wrappers (interpret=True off-TPU); ``ref`` holds the
-pure-jnp oracles the tests sweep against.
+``ops`` exposes jit'd wrappers (interpret=True off-TPU — the same call
+sites run everywhere, incl. CPU CI); ``ref`` holds the pure-jnp oracles
+the tests sweep against.  The model enables the ragged MoE path via
+``REPRO_MOE_PALLAS`` (repro.flags.moe_pallas — default on for TPU).
 """
 from . import ops, ref  # noqa: F401

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import gmm as _gmm
+from . import ragged_gmm as _rg
 
 
 def _interpret() -> bool:
@@ -20,6 +21,21 @@ def _interpret() -> bool:
 def gmm(x, w, *, bt: int = 128, bf: int = 128, bd: int = 128):
     """Grouped expert matmul [G,T,D]×[G,D,F]→[G,T,F]."""
     return _gmm.gmm(x, w, bt=bt, bf=bf, bd=bd, interpret=_interpret())
+
+
+def ragged_gmm(x, w, group_sizes, *, seg_len: int = None, bt: int = 128,
+               bf: int = 128, bd: int = 128):
+    """Load-proportional grouped matmul: only the occupied prefix of each
+    ``seg_len`` row segment is computed (see kernels.ragged_gmm)."""
+    return _rg.ragged_gmm(x, w, group_sizes, seg_len=seg_len, bt=bt, bf=bf,
+                          bd=bd, interpret=_interpret())
+
+
+def gmm_swiglu(x, wg, wi, group_sizes, *, seg_len: int = None, bt: int = 128,
+               bf: int = 128, bd: int = 128):
+    """Fused ragged ``silu(x@wg) * (x@wi)`` — x is read from HBM once."""
+    return _rg.gmm_swiglu(x, wg, wi, group_sizes, seg_len=seg_len, bt=bt,
+                          bf=bf, bd=bd, interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -1,0 +1,381 @@
+"""Ragged (load-proportional) grouped matmul + fused SwiGLU epilogue.
+
+The MoE capacity buffers are ``[G, T, d]`` with only a *prefix* of each
+group's rows occupied (tokens actually routed there); after the EP
+``all_to_all`` the occupied rows are a prefix of each of the ``S`` peer
+*segments* of length ``seg_len`` (``T == S * seg_len``).  The dense
+``gmm`` kernel burns MXU cycles on every padded slot regardless of load —
+exactly the waste Pro-Prophet's load balancing is supposed to eliminate —
+so these kernels take the per-(group, segment) occupancy counts
+(``group_sizes`` ``[G, S]`` int32, scalar-prefetched into SMEM) and
+
+* skip the MXU dot entirely for output tiles that overlap no occupied
+  rows (compute cost ∝ actual load, tile-granular), and
+* mask the rows beyond each segment's count in the epilogue, so the op
+  is well-defined (``out[g, i] = 0``) even when the padded slots hold
+  garbage.
+
+``gmm_swiglu`` additionally fuses the SwiGLU gate: both ``x @ wg`` and
+``x @ wi`` accumulate from the *same* VMEM-resident ``x`` tile, and
+``silu(a) * b`` runs as the epilogue — the activation buffer is read
+from HBM once instead of twice and the intermediate never round-trips.
+
+VMEM budget per grid step (defaults bt = bf = bd = 128, bf16 inputs):
+``bt·bd + bd·bf + bt·bf`` tile bytes + one (``gmm_swiglu``: two) f32
+``bt×bf`` accumulators ≈ 160–224 KiB — far inside the ~16 MiB/core VMEM,
+leaving headroom for the pipeline's double buffering.
+
+Both ops carry custom VJPs so the backward pass (the paper's BEC) gets
+the same ragged savings: dx is another ragged gmm on the swapped
+weights, dw accumulates only over occupied row tiles, and the SwiGLU
+backward recomputes the two projections ragged instead of saving them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gmm import _pad_to
+
+
+# ---------------------------------------------------------------------------
+# Occupancy predicates (shared by all kernels)
+# ---------------------------------------------------------------------------
+
+def _tile_active(gs_ref, g, t_start: int, bt: int, seg_len: int, S: int):
+    """Scalar: does row tile [t_start, t_start+bt) overlap any occupied
+    prefix [p*seg_len, p*seg_len + gs[g, p])?  S is static ⇒ unrolled."""
+    act = jnp.bool_(False)
+    for p in range(S):
+        lo = p * seg_len
+        hi = lo + gs_ref[g, p]
+        act = act | (jnp.minimum(t_start + bt, hi) > jnp.maximum(t_start, lo))
+    return act
+
+
+def _rows_active(gs_ref, g, t_start: int, bt: int, seg_len: int, S: int):
+    """[bt, 1] bool mask of occupied rows within this tile (padded rows
+    past S*seg_len fall in no segment and come out False)."""
+    rows = t_start + jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+    act = jnp.zeros((bt, 1), jnp.bool_)
+    for p in range(S):
+        lo = p * seg_len
+        act = act | ((rows >= lo) & (rows < lo + gs_ref[g, p]))
+    return act
+
+
+def _normalize_group_sizes(group_sizes, T: int, seg_len):
+    """→ (gs [G, S] int32 clipped to [0, seg_len], seg_len) with
+    S * seg_len == T.  A 1-D [G] input means one segment per group."""
+    gs = jnp.asarray(group_sizes, jnp.int32)
+    if gs.ndim == 1:
+        gs = gs[:, None]
+    S = gs.shape[1]
+    if seg_len is None:
+        assert T % S == 0, (T, S)
+        seg_len = T // S
+    assert S * seg_len == T, (S, seg_len, T)
+    return jnp.clip(gs, 0, seg_len), int(seg_len)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernels
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                nd: int, bt: int, seg_len: int, S: int):
+    g, t, d = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    t0 = t * bt
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(_tile_active(gs_ref, g, t0, bt, seg_len, S))
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _done():
+        mask = _rows_active(gs_ref, g, t0, bt, seg_len, S)
+        o_ref[0] = jnp.where(mask, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def _swiglu_kernel(gs_ref, x_ref, wg_ref, wi_ref, o_ref, accg_ref, acci_ref,
+                   *, nd: int, bt: int, seg_len: int, S: int):
+    g, t, d = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    t0 = t * bt
+
+    @pl.when(d == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    @pl.when(_tile_active(gs_ref, g, t0, bt, seg_len, S))
+    def _accum():
+        x = x_ref[0]  # one VMEM read feeds both MXU passes
+        accg_ref[...] += jnp.dot(x, wg_ref[0],
+                                 preferred_element_type=jnp.float32)
+        acci_ref[...] += jnp.dot(x, wi_ref[0],
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _done():
+        mask = _rows_active(gs_ref, g, t0, bt, seg_len, S)
+        h = jax.nn.silu(accg_ref[...]) * acci_ref[...]
+        o_ref[0] = jnp.where(mask, h, 0.0).astype(o_ref.dtype)
+
+
+def _dw_kernel(gs_ref, x_ref, dy_ref, o_ref, acc_ref, *,
+               nt: int, bt: int, seg_len: int, S: int):
+    """dw[g] = Σ_valid rows x[g]ᵀ dy[g]; the row-tile loop is innermost so
+    empty tiles are skipped the same way as in the forward."""
+    g, t = pl.program_id(0), pl.program_id(3)
+    t0 = t * bt
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(_tile_active(gs_ref, g, t0, bt, seg_len, S))
+    def _accum():
+        mask = _rows_active(gs_ref, g, t0, bt, seg_len, S)
+        xm = jnp.where(mask, x_ref[0], 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            xm, dy_ref[0], dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call plumbing
+# ---------------------------------------------------------------------------
+
+def _fwd_impl(x, w, gs, seg_len, bt, bf, bd, interpret):
+    G, T, D = x.shape
+    F = w.shape[2]
+    S = gs.shape[1]
+    x, _ = _pad_to(x, 1, bt)
+    x, _ = _pad_to(x, 2, bd)
+    w, _ = _pad_to(w, 1, bd)
+    w, _ = _pad_to(w, 2, bf)
+    Tp, Dp, Fp = x.shape[1], x.shape[2], w.shape[2]
+    nt, nf, nd = Tp // bt, Fp // bf, Dp // bd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, nt, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda g, t, f, d, gs_ref: (g, t, d)),
+            pl.BlockSpec((1, bd, bf), lambda g, t, f, d, gs_ref: (g, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf),
+                               lambda g, t, f, d, gs_ref: (g, t, f)),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, nd=nd, bt=bt, seg_len=seg_len, S=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, Tp, Fp), x.dtype),
+        interpret=interpret,
+    )(gs, x, w)
+    return out[:, :T, :F]
+
+
+def _swiglu_impl(x, wg, wi, gs, seg_len, bt, bf, bd, interpret):
+    G, T, D = x.shape
+    F = wg.shape[2]
+    S = gs.shape[1]
+    x, _ = _pad_to(x, 1, bt)
+    x, _ = _pad_to(x, 2, bd)
+    wg, _ = _pad_to(wg, 1, bd)
+    wg, _ = _pad_to(wg, 2, bf)
+    wi, _ = _pad_to(wi, 1, bd)
+    wi, _ = _pad_to(wi, 2, bf)
+    Tp, Dp, Fp = x.shape[1], x.shape[2], wg.shape[2]
+    nt, nf, nd = Tp // bt, Fp // bf, Dp // bd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, nt, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda g, t, f, d, gs_ref: (g, t, d)),
+            pl.BlockSpec((1, bd, bf), lambda g, t, f, d, gs_ref: (g, d, f)),
+            pl.BlockSpec((1, bd, bf), lambda g, t, f, d, gs_ref: (g, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf),
+                               lambda g, t, f, d, gs_ref: (g, t, f)),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32),
+                        pltpu.VMEM((bt, bf), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_swiglu_kernel, nd=nd, bt=bt, seg_len=seg_len, S=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, Tp, Fp), x.dtype),
+        interpret=interpret,
+    )(gs, x, wg, wi)
+    return out[:, :T, :F]
+
+
+def _dw_impl(x, dy, gs, seg_len, bt, bf, bd, interpret):
+    G, T, D = x.shape
+    F = dy.shape[2]
+    S = gs.shape[1]
+    x, _ = _pad_to(x, 1, bt)
+    x, _ = _pad_to(x, 2, bd)
+    dy, _ = _pad_to(dy, 1, bt)
+    dy, _ = _pad_to(dy, 2, bf)
+    Tp, Dp, Fp = x.shape[1], x.shape[2], dy.shape[2]
+    nt, nk, nf = Tp // bt, Dp // bd, Fp // bf
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, nk, nf, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda g, k, f, t, gs_ref: (g, t, k)),
+            pl.BlockSpec((1, bt, bf), lambda g, k, f, t, gs_ref: (g, t, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, bf),
+                               lambda g, k, f, t, gs_ref: (g, k, f)),
+        scratch_shapes=[pltpu.VMEM((bd, bf), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, nt=nt, bt=bt, seg_len=seg_len, S=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, Dp, Fp), jnp.float32),
+        interpret=interpret,
+    )(gs, x, dy)
+    return out[:, :D, :F]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJPs (the ragged BEC)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _ragged_gmm(x, w, gs, seg_len, bt, bf, bd, interpret):
+    return _fwd_impl(x, w, gs, seg_len, bt, bf, bd, interpret)
+
+
+def _ragged_gmm_fwd(x, w, gs, seg_len, bt, bf, bd, interpret):
+    return _fwd_impl(x, w, gs, seg_len, bt, bf, bd, interpret), (x, w, gs)
+
+
+def _ragged_gmm_bwd(seg_len, bt, bf, bd, interpret, res, dy):
+    x, w, gs = res
+    # dx: ragged over the same row occupancy, contraction now over F.
+    dx = _fwd_impl(dy, jnp.swapaxes(w, 1, 2), gs, seg_len,
+                   bt, bd, bf, interpret)
+    dw = _dw_impl(x, dy, gs, seg_len, bt, bf, bd, interpret)
+    return (dx.astype(x.dtype), dw.astype(w.dtype),
+            np.zeros(gs.shape, jax.dtypes.float0))
+
+
+_ragged_gmm.defvjp(_ragged_gmm_fwd, _ragged_gmm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _gmm_swiglu(x, wg, wi, gs, seg_len, bt, bf, bd, interpret):
+    return _swiglu_impl(x, wg, wi, gs, seg_len, bt, bf, bd, interpret)
+
+
+def _gmm_swiglu_fwd(x, wg, wi, gs, seg_len, bt, bf, bd, interpret):
+    out = _swiglu_impl(x, wg, wi, gs, seg_len, bt, bf, bd, interpret)
+    return out, (x, wg, wi, gs)
+
+
+def _gmm_swiglu_bwd(seg_len, bt, bf, bd, interpret, res, dy):
+    x, wg, wi, gs = res
+    # Recompute both projections ragged (cheaper than saving two [G,T,F]
+    # activations across the backward a2a window).
+    a = _fwd_impl(x, wg, gs, seg_len, bt, bf, bd, interpret)
+    b = _fwd_impl(x, wi, gs, seg_len, bt, bf, bd, interpret)
+    a32, b32, dy32 = (a.astype(jnp.float32), b.astype(jnp.float32),
+                      dy.astype(jnp.float32))
+    s = jax.nn.sigmoid(a32)
+    da = (dy32 * b32 * (s * (1.0 + a32 * (1.0 - s)))).astype(x.dtype)
+    db = (dy32 * (a32 * s)).astype(x.dtype)
+    dx = (_fwd_impl(da, jnp.swapaxes(wg, 1, 2), gs, seg_len,
+                    bt, bd, bf, interpret)
+          + _fwd_impl(db, jnp.swapaxes(wi, 1, 2), gs, seg_len,
+                      bt, bd, bf, interpret))
+    dwg = _dw_impl(x, da, gs, seg_len, bt, bf, bd, interpret)
+    dwi = _dw_impl(x, db, gs, seg_len, bt, bf, bd, interpret)
+    return (dx.astype(x.dtype), dwg.astype(wg.dtype), dwi.astype(wi.dtype),
+            np.zeros(gs.shape, jax.dtypes.float0))
+
+
+_gmm_swiglu.defvjp(_gmm_swiglu_fwd, _gmm_swiglu_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_len", "bt", "bf", "bd", "interpret"))
+def ragged_gmm(x, w, group_sizes, *, seg_len: int = None, bt: int = 128,
+               bf: int = 128, bd: int = 128, interpret: bool = False):
+    """[G,T,D] × [G,D,F] → [G,T,F], only the occupied prefix of each
+    ``seg_len`` segment computed; rows past the count come out zero.
+
+    ``group_sizes``: [G] (one segment) or [G, S] (S segments of
+    ``seg_len`` rows each, ``S*seg_len == T``) occupancy counts.
+    """
+    gs, seg = _normalize_group_sizes(group_sizes, x.shape[1], seg_len)
+    return _ragged_gmm(x, w, gs, seg, bt, bf, bd, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_len", "bt", "bf", "bd", "interpret"))
+def gmm_swiglu(x, wg, wi, group_sizes, *, seg_len: int = None, bt: int = 128,
+               bf: int = 128, bd: int = 128, interpret: bool = False):
+    """Fused ragged ``silu(x @ wg) * (x @ wi)`` — one pass over ``x``."""
+    gs, seg = _normalize_group_sizes(group_sizes, x.shape[1], seg_len)
+    return _gmm_swiglu(x, wg, wi, gs, seg, bt, bf, bd, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Modeled cost (mirrors the kernels' tile predication exactly — feeds the
+# perfmodel ragged-FEC term and the moe_ffn microbenchmark)
+# ---------------------------------------------------------------------------
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def active_row_tiles(T: int, group_sizes, seg_len: int = None,
+                     *, bt: int = 128):
+    """(active, total) row tiles across groups for the given occupancy."""
+    gs = np.asarray(group_sizes)
+    if gs.ndim == 1:
+        gs = gs[:, None]
+        seg_len = T if seg_len is None else seg_len
+    G, S = gs.shape
+    if seg_len is None:
+        seg_len = T // S
+    nt = _ceil_to(T, bt) // bt
+    active = 0
+    for g in range(G):
+        for t in range(nt):
+            t0, t1 = t * bt, t * bt + bt
+            if any(min(t1, p * seg_len + int(gs[g, p])) > max(t0, p * seg_len)
+                   for p in range(S)):
+                active += 1
+    return active, G * nt
+
+
+def modeled_flops(T: int, D: int, F: int, group_sizes, seg_len: int = None,
+                  *, bt: int = 128, bf: int = 128, bd: int = 128,
+                  num_mats: int = 1):
+    """(ragged_flops, dense_flops) for ``num_mats`` [T,D]×[D,F] grouped
+    matmuls under this occupancy, at the kernel's tile granularity."""
+    active, total = active_row_tiles(T, group_sizes, seg_len, bt=bt)
+    per_tile = 2 * bt * _ceil_to(D, bd) * _ceil_to(F, bf)
+    return num_mats * active * per_tile, num_mats * total * per_tile

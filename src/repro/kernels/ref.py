@@ -13,6 +13,38 @@ def gmm_ref(x, w):
                       w.astype(jnp.float32)).astype(x.dtype)
 
 
+def row_mask_ref(T: int, group_sizes, seg_len: int = None):
+    """[G, T] bool — occupied rows under the segmented-prefix layout of
+    repro.kernels.ragged_gmm (True ⇔ row within its segment's count)."""
+    gs = jnp.asarray(group_sizes, jnp.int32)
+    if gs.ndim == 1:
+        gs = gs[:, None]
+    S = gs.shape[1]
+    seg_len = T // S if seg_len is None else seg_len
+    rows = jnp.arange(T)
+    seg = jnp.minimum(rows // seg_len, S - 1)
+    within = rows - seg * seg_len
+    # padded rows (>= S*seg_len) must come out False
+    return (within < gs[:, seg]) & (rows < S * seg_len)[None, :]
+
+
+def ragged_gmm_ref(x, w, group_sizes, seg_len: int = None):
+    """Oracle for ragged_gmm: masked rows contribute/receive zeros."""
+    mask = row_mask_ref(x.shape[1], group_sizes, seg_len)[..., None]
+    xm = jnp.where(mask, x.astype(jnp.float32), 0.0)
+    return jnp.einsum("gtd,gdf->gtf", xm,
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def gmm_swiglu_ref(x, wg, wi, group_sizes, seg_len: int = None):
+    """Oracle for the fused SwiGLU epilogue: silu(x@wg) * (x@wi), ragged."""
+    mask = row_mask_ref(x.shape[1], group_sizes, seg_len)[..., None]
+    xm = jnp.where(mask, x.astype(jnp.float32), 0.0)
+    a = jnp.einsum("gtd,gdf->gtf", xm, wg.astype(jnp.float32))
+    b = jnp.einsum("gtd,gdf->gtf", xm, wi.astype(jnp.float32))
+    return jnp.where(mask, jax.nn.silu(a) * b, 0.0).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """q,k,v [BH,S,dh] → [BH,S,dh]; naive masked softmax attention."""
     BH, S, dh = q.shape

@@ -17,7 +17,17 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
     }
 
 
-def swiglu(params, x):
+def swiglu(params, x, *, use_pallas: bool = False):
+    if use_pallas:
+        # Fused Pallas epilogue (one HBM read of x for both projections);
+        # a dense layer is the G=1, fully-occupied case of the ragged MoE
+        # kernels.  Only safe outside pjit-partitioned meshes.
+        from repro.kernels import ops
+        shape = x.shape
+        xf = x.reshape(1, -1, shape[-1])
+        gs = jnp.full((1, 1), xf.shape[1], jnp.int32)
+        h = ops.gmm_swiglu(xf, params["wg"][None], params["wi"][None], gs)
+        return ops.ragged_gmm(h, params["wo"][None], gs).reshape(shape)
     g = jax.nn.silu(x @ params["wg"])
     return (g * (x @ params["wi"])) @ params["wo"]
 
@@ -42,5 +52,7 @@ def ffn_init(key, kind: str, d_model: int, d_ff: int, dtype=jnp.float32):
     raise ValueError(kind)
 
 
-def ffn_apply(kind: str, params, x):
-    return swiglu(params, x) if kind == "swiglu" else gelu_mlp(params, x)
+def ffn_apply(kind: str, params, x, *, use_pallas: bool = False):
+    if kind == "swiglu":
+        return swiglu(params, x, use_pallas=use_pallas)
+    return gelu_mlp(params, x)

@@ -97,6 +97,16 @@ def capacity_combine(buf, expert, pos, gate):
                       gate.astype(jnp.float32)).astype(buf.dtype)
 
 
+def kept_counts(expert, num_buckets: int, cap: int):
+    """[num_buckets] occupied slots per bucket after capacity clamping —
+    dispatch fills a contiguous prefix of each bucket, so these are both
+    the ragged kernels' group_sizes and the kept-token telemetry.
+    ``expert`` may carry the sentinel id == num_buckets (dropped)."""
+    hist = jnp.zeros((num_buckets + 1,), jnp.int32).at[
+        expert.reshape(-1)].add(1, mode="drop")[:num_buckets]
+    return jnp.minimum(hist, cap)
+
+
 # ---------------------------------------------------------------------------
 # Grouped expert FFN
 # ---------------------------------------------------------------------------
@@ -107,8 +117,24 @@ def gmm(x, w):
     return jnp.einsum("gtd,gdf->gtf", x, w)
 
 
-def expert_ffn(kind: str, x, wi, wo, wg=None):
-    """x [G,T,d] → [G,T,d] through each group's expert."""
+def expert_ffn(kind: str, x, wi, wo, wg=None, *, group_sizes=None,
+               seg_len: Optional[int] = None, use_pallas: bool = False):
+    """x [G,T,d] → [G,T,d] through each group's expert.
+
+    With ``use_pallas`` and per-group occupancy ``group_sizes`` ([G] or
+    [G, S] with S segments of ``seg_len`` rows — the post-a2a peer
+    layout), both matmuls run through the ragged Pallas kernels: MXU
+    work ∝ actual tokens per expert instead of the full capacity buffer,
+    and the SwiGLU gate is fused into the first kernel's epilogue.
+    """
+    if use_pallas and group_sizes is not None:
+        from repro.kernels import ops
+        if kind == "swiglu":
+            h = ops.gmm_swiglu(x, wg, wi, group_sizes, seg_len=seg_len)
+        else:  # gelu
+            h = jax.nn.gelu(ops.ragged_gmm(x, wi, group_sizes,
+                                           seg_len=seg_len))
+        return ops.ragged_gmm(h, wo, group_sizes, seg_len=seg_len)
     if kind == "swiglu":
         h = jax.nn.silu(gmm(x, wg)) * gmm(x, wi)
     else:  # gelu
@@ -145,13 +171,16 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
 
     xf [T_loc, d]; gate/idx [T_loc, k]; wi/wg/wo local expert shards
     [E_loc, d, f/..]; shadow_* placement arrays (replicated).
+    ``use_pallas`` routes both expert FFNs (a2a and shadow buffers)
+    through the ragged Pallas kernels with the routing counts as
+    group_sizes (REPRO_MOE_PALLAS; see repro.kernels.ragged_gmm).
     Returns (y [T_loc, d], counts [E] routing distribution of this EP
     member, dropped fraction scalar).
     """
     T, d = xf.shape
     k = idx.shape[-1]
     E = num_experts
-    ep = 1 if ep_axis is None else jax.lax.axis_size(ep_axis)
+    ep = 1 if ep_axis is None else jax.lax.psum(1, ep_axis)  # static int
     e_loc = E // ep
     me = 0 if ep_axis is None else jax.lax.axis_index(ep_axis)
 
@@ -177,14 +206,23 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
 
     # ---- a2a path ---------------------------------------------------------
     a2a_expert = jnp.where(use_local, E, idx)                    # sentinel ⇒ drop
+    a2a_counts = kept_counts(a2a_expert, E, capacity)            # [E]
     buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E + 1)
     buf = buf[:E]                                                # [E,C,d]
     if ep_axis is not None:
         recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
                                   tiled=True)                    # [E_loc, ep*C, d]
+        # Each peer's segment of the recv buffer has its own occupancy:
+        # gather everyone's counts, keep the columns for my local experts.
+        gs_all = jax.lax.all_gather(a2a_counts, ep_axis)         # [ep, E]
+        recv_sizes = jax.lax.dynamic_slice_in_dim(
+            gs_all, me * e_loc, e_loc, axis=1).T                 # [E_loc, ep]
     else:
         recv = buf
-    hidden = expert_ffn(ffn_kind, recv, wi_f, wo_f, wg_f)
+        recv_sizes = a2a_counts[:, None]                         # [E, 1]
+    hidden = expert_ffn(ffn_kind, recv, wi_f, wo_f, wg_f,
+                        group_sizes=recv_sizes, seg_len=capacity,
+                        use_pallas=use_pallas)
     if ep_axis is not None:
         buf_out = jax.lax.all_to_all(hidden, ep_axis, split_axis=1,
                                      concat_axis=0, tiled=True)  # [E,C,d]
@@ -222,23 +260,22 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
                            [ep_axis]) if wg_f is not None else None)
 
         s_expert = jnp.where(use_local, tok_slot, s_max)
+        s_counts = kept_counts(s_expert, s_max, shadow_capacity)  # [s_max]
         sbuf, spos = capacity_dispatch(xf, s_expert, shadow_capacity,
                                        s_max + 1)
         sbuf = sbuf[:s_max]
-        s_hidden = expert_ffn(ffn_kind, sbuf, sh_wi, sh_wo, sh_wg)
+        s_hidden = expert_ffn(ffn_kind, sbuf, sh_wi, sh_wo, sh_wg,
+                              group_sizes=s_counts[:, None],
+                              seg_len=shadow_capacity,
+                              use_pallas=use_pallas)
         y = y + capacity_combine(s_hidden,
                                  jnp.where(use_local, tok_slot, 0),
                                  spos, gate * use_local)
 
     # dropped-token fraction (over-capacity), for telemetry
     total = jnp.maximum(counts.sum(), 1)
-    kept_a2a = jnp.minimum(
-        jnp.zeros((E + 1,), jnp.int32).at[a2a_expert.reshape(-1)].add(
-            1, mode="drop")[:E], capacity).sum()
-    kept_local = jnp.minimum(
-        jnp.zeros((s_max + 1,), jnp.int32).at[
-            jnp.where(use_local, tok_slot, s_max).reshape(-1)].add(
-            1, mode="drop")[:s_max], shadow_capacity).sum() if s_max else 0
+    kept_a2a = a2a_counts.sum()
+    kept_local = s_counts.sum() if s_max else 0
     kept = _psum(kept_a2a + kept_local, [fsdp_axis, pod_axis])
     dropped = 1.0 - kept.astype(jnp.float32) / total.astype(jnp.float32)
     # Rank-expand so shard_map out_specs can stack over the EP axis.
@@ -320,7 +357,7 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
         moe_inner, num_experts=num_experts, capacity=capacity,
         shadow_capacity=shadow_capacity, ffn_kind=ffn_kind,
         ep_axis=ctx.ep_axis, fsdp_axis=ctx.fsdp_axis, pod_axis=ctx.pod_axis,
-        s_max=s_max)
+        s_max=s_max, use_pallas=_flags.moe_pallas())
 
     wg = params.get("wg")
     if ctx.mesh is None:
@@ -346,7 +383,8 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
     y = y[:T].reshape(B, S, d).astype(x.dtype)
     if "shared" in params:
         from .ffn import ffn_apply
-        y = y + ffn_apply(ffn_kind, params["shared"], x)
+        y = y + ffn_apply(ffn_kind, params["shared"], x,
+                          use_pallas=_flags.moe_pallas() and ctx.mesh is None)
     aux = {"counts": counts, "dropped": dropped,
            "probs_entropy": -jnp.mean(jnp.sum(
                probs * jnp.log(probs + 1e-9), axis=-1))}

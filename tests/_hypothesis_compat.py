@@ -1,0 +1,81 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The property tests import this as a fallback when hypothesis is not
+installed (see requirements-dev.txt), so the suite still collects and
+exercises many pseudo-random examples per test — it just loses real
+hypothesis features (shrinking, example database, edge-case heuristics).
+
+Only the surface this suite uses is implemented: ``@given``/``@settings``
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``builds``
+strategies.  Draws come from a fixed-seed ``random.Random`` so failures
+reproduce across runs.
+"""
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _builds(target, *args, **kwargs):
+    def draw(rng):
+        pa = [a.example_from(rng) if isinstance(a, _Strategy) else a
+              for a in args]
+        pk = {k: (v.example_from(rng) if isinstance(v, _Strategy) else v)
+              for k, v in kwargs.items()}
+        return target(*pa, **pk)
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from,
+    builds=_builds)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*args, *[s.example_from(rng) for s in strats], **kwargs)
+
+        # Hide the generated parameters from pytest's fixture resolution
+        # (like hypothesis does), leaving only e.g. ``self``.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        return wrapper
+    return deco

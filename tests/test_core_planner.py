@@ -1,7 +1,10 @@
 """Planner/performance-model unit + property tests (paper §IV)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback shim — see requirements-dev.txt
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (GatingTrace, GreedyPlanner, HardwareSpec,
                         LocalityPlanner, PerfModel, balance_degree,
@@ -28,6 +31,17 @@ class TestPerfModel:
         H = np.array([100, 400, 50, 1])
         assert pm.t_fec(H) == pytest.approx(400 / pm.hw.throughput)
         assert pm.t_bec(H) == pytest.approx(2 * pm.t_fec(H))
+
+    def test_ragged_vs_dense_fec(self):
+        """Dense capacity-padded FEC is load-independent; utilization is
+        straggler load over capacity slots (ragged win = 1/util)."""
+        pm = PerfModel(hw(), 4)
+        H = np.array([100, 400, 50, 1])
+        assert pm.t_fec_dense(512) == pytest.approx(512 / pm.hw.throughput)
+        assert pm.fec_utilization(H, 512) == pytest.approx(400 / 512)
+        # at full load the ragged kernel has no advantage
+        assert pm.fec_utilization(np.full(4, 512), 512) == pytest.approx(1.0)
+        assert pm.fec_utilization(H, 0) == 1.0
 
     def test_eq4_eq5_trans_agg_p2p(self):
         pm = PerfModel(hw(), trans_mode="p2p", num_devices=8)

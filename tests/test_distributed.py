@@ -28,3 +28,12 @@ def run_dist_script(name: str, timeout: int = 520) -> str:
 def test_ep_equivalence_and_training_parity():
     out = run_dist_script("ep_equivalence.py")
     assert "EP_EQUIVALENCE_PASS" in out
+    assert "TRAINING_PARITY_PASS" in out
+
+
+@pytest.mark.slow
+def test_moe_pallas_mesh_equivalence():
+    """REPRO_MOE_PALLAS on/off parity through shard_map over skewed
+    routing (the ragged Pallas FEC/BEC vs the dense einsum)."""
+    out = run_dist_script("moe_pallas_equivalence.py")
+    assert "MOE_PALLAS_MESH_EQUIVALENCE_PASS" in out

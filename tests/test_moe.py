@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback shim — see requirements-dev.txt
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models import moe
 from repro.parallel import local_ctx

@@ -2,7 +2,10 @@
 ordering, sub-operator splitting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback shim — see requirements-dev.txt
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import BlockCosts, build_graph, iteration_time, list_schedule, simulate, split_trans
 
