@@ -1,7 +1,13 @@
 """Tables IV/V + Fig. 10 analog: end-to-end speedups of Pro-Prophet vs
 DeepSpeed-MoE-style plain EP and FasterMoE-style shadowing, across the five
-MoE-GPT models, k ∈ {1,2}, and three cluster profiles."""
-from .simlib import CLUSTERS, SimConfig, simulate, speedup
+MoE-GPT models, k ∈ {1,2}, and three cluster profiles.
+
+The ``host_plan`` rows consume the async runtime's overlap telemetry
+(see repro.train.runtime): measured Plan latency for the model's engine
+vs that model's simulated iteration time — ``us_per_call`` is the mean
+host Plan latency, ``derived`` the fraction hidden under the device step
+by the pipelined runtime."""
+from .simlib import CLUSTERS, SimConfig, host_overlap, simulate, speedup
 
 MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
 
@@ -25,4 +31,9 @@ def run(iters: int = 20):
                              pp.mean_iter * 1e6, speedup(ds, pp)))
                 rows.append((f"e2e/{cluster}/{model}/k{k}/vs_fastermoe",
                              pp.mean_iter * 1e6, speedup(fm, pp)))
+                if k == 1:
+                    ov = host_overlap(sim, pp.mean_iter)
+                    rows.append((f"e2e/{cluster}/{model}/host_plan",
+                                 ov["mean_plan_s"] * 1e6,
+                                 ov["hidden_frac"]))
     return rows

@@ -160,3 +160,63 @@ def simulate(policy: str, sim: SimConfig, *, scheduled: Optional[bool] = None,
 def speedup(a: SimResult, b: SimResult) -> float:
     """How much faster is b than a."""
     return a.mean_iter / b.mean_iter
+
+
+def measure_plan_overlap(engine, traces, step_window_fn, iters: int,
+                         top_k: int = 1):
+    """Shared pipelined-runtime measurement harness: per iteration,
+    wall-clock the Plan primitive (``engine.observe`` over all layers)
+    and the placement pack (paid only on a ``placements_version`` bump —
+    exactly the :class:`repro.train.runtime.PlacementCache` policy),
+    score it against ``step_window_fn(engine)``'s device window, and
+    record into an :class:`~repro.train.runtime.OverlapTelemetry` (the
+    async runtime exposes ``max(0, plan − step) + upload``; the serial
+    baseline exposes ``plan + upload`` every step).
+
+    Returns ``(telemetry, uploads)``.
+    """
+    import time
+
+    from repro.train.runtime import OverlapTelemetry
+
+    tel = OverlapTelemetry()
+    uploads, version = 0, -1
+    for _ in range(iters):
+        gs = [t.step() * top_k for t in traces]
+        t0 = time.perf_counter()
+        engine.observe(gs)
+        t1 = time.perf_counter()
+        upload = 0.0
+        if engine.placements_version != version:
+            engine.step_arrays()
+            version = engine.placements_version
+            uploads += 1
+            upload = time.perf_counter() - t1
+        step = step_window_fn(engine)
+        tel.record(plan=t1 - t0, step=step,
+                   exposed=max(0.0, (t1 - t0) - step), upload=upload)
+    return tel, uploads
+
+
+def host_overlap(sim: SimConfig, device_step: float,
+                 iters: int = 10) -> Dict[str, float]:
+    """Pipelined-runtime telemetry for this model/cluster: measured
+    wall-clock Plan latency of a real engine (all MoE layers) against the
+    given simulated device-step window.  Returns
+    :meth:`repro.train.runtime.OverlapTelemetry.summary` — plan latency,
+    step latency, hidden fraction, and host overhead (exposed plan +
+    placement pack, paid only when the placements changed) vs the serial
+    baseline's plan-every-step cost."""
+    from repro.core import EngineConfig, ProProphetEngine
+
+    cfg = get_config(sim.model)
+    E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
+    ec = EngineConfig(num_experts=E, num_devices=D, num_moe_layers=L,
+                      s_max=sim.s_max, n=sim.n, scheduled=True)
+    eng = ProProphetEngine(ec, _hw_for(cfg, sim))
+    traces = [GatingTrace(D, E, sim.tokens // D, skew=sim.skew,
+                          drift=sim.drift, seed=sim.seed * 1000 + li)
+              for li in range(L)]
+    tel, _ = measure_plan_overlap(eng, traces, lambda _: device_step,
+                                  iters, top_k=sim.top_k)
+    return tel.summary()

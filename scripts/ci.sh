@@ -1,6 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the single entry point CI and humans share (ROADMAP.md).
-# Extra args pass through to pytest, e.g.  scripts/ci.sh -m 'not slow'
+#
+#   scripts/ci.sh             full suite (~8.5 min)
+#   scripts/ci.sh --fast      fast lane: skips @slow (multi-device
+#                             subprocesses, long end-to-end trainer runs)
+#                             but keeps the async≡sync equivalence tests
+#                             (tests/test_async_runtime.py is not slow)
+#
+# Extra args pass through to pytest, e.g.  scripts/ci.sh -k planner
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  set -- -m "not slow" "$@"
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

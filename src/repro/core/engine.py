@@ -13,7 +13,18 @@ The engine is the piece the trainer talks to.  Per iteration it
 This is the paper's Fig. 5 "execution engine" realized for a JAX runtime:
 the *Plan* primitive runs here on host, overlapped with device execution of
 the current step (the locality property is what makes planning one step
-ahead sound).
+ahead sound).  ``observe`` may fan the independent per-layer searches out
+over a caller-supplied thread pool, and placements are *versioned*:
+``placements_version`` bumps only when a placement actually changed, so the
+trainer's :class:`~repro.train.runtime.PlacementCache` re-packs and
+re-uploads the device arrays only on change (``step_arrays`` re-packs just
+the layers that moved).
+
+Threading contract: ``observe`` is the only mutator.  Callers running it on
+a background thread (the async runtime) must order every ``step_arrays`` /
+``placements_version`` / ``predicted_times`` read after the observe that
+produced it — :meth:`repro.train.runtime.PlanPipeline.wait` provides that
+edge.
 """
 from __future__ import annotations
 
@@ -61,47 +72,88 @@ class ProProphetEngine:
             for _ in range(cfg.num_moe_layers)
         ]
         self.last_results: List[Optional[PlanResult]] = [None] * cfg.num_moe_layers
+        self._version = 0
+        self._dirty = set(range(cfg.num_moe_layers))
+        self._cache: Optional[Dict[str, Array]] = None
 
     # ------------------------------------------------------------------
-    def observe(self, per_layer_g: Sequence[Array]) -> None:
+    @property
+    def placements_version(self) -> int:
+        """Bumps exactly when some layer's placement changed — the
+        trainer re-uploads device arrays only on a version change."""
+        return self._version
+
+    def _plan_layer(self, li: int, g: Array):
+        """One layer's planning step → (placement, PlanResult|None).
+        Layers are independent, so these may run on a thread pool."""
+        from .baselines import fastermoe_plan, topk_policy
+        if self.cfg.policy == "pro_prophet":
+            res = self.planners[li].maybe_plan(g)
+            return res.placement, res
+        if self.cfg.policy == "fastermoe":
+            res = fastermoe_plan(self.perf, g, max_shadows=self.cfg.s_max)
+            return res.placement, res
+        if self.cfg.policy in ("top2", "top3"):
+            k = int(self.cfg.policy[-1])
+            return topk_policy(g, min(k, self.cfg.s_max)), None
+        raise ValueError(f"unknown policy {self.cfg.policy}")
+
+    def observe(self, per_layer_g: Sequence[Array], *, pool=None) -> None:
         """Feed routing matrices observed in the step that just finished;
-        plans the placements to use next step."""
+        plans the placements to use next step.  ``pool`` (an optional
+        ``ThreadPoolExecutor``) fans the per-layer searches out in
+        parallel; results are merged in layer order either way, so the
+        outcome is identical to the serial path."""
         assert len(per_layer_g) == self.cfg.num_moe_layers
         if self.cfg.policy == "none":
             return
-        from .baselines import fastermoe_plan, topk_policy
-        for li, g in enumerate(per_layer_g):
-            if self.cfg.policy == "pro_prophet":
-                res = self.planners[li].maybe_plan(g)
-                self._placements[li] = res.placement
+        if pool is not None:
+            futures = [pool.submit(self._plan_layer, li, g)
+                       for li, g in enumerate(per_layer_g)]
+            results = [f.result() for f in futures]
+        else:
+            results = [self._plan_layer(li, g)
+                       for li, g in enumerate(per_layer_g)]
+        changed = False
+        for li, (placement, res) in enumerate(results):
+            if res is not None:
                 self.last_results[li] = res
-            elif self.cfg.policy == "fastermoe":
-                res = fastermoe_plan(self.perf, g, max_shadows=self.cfg.s_max)
-                self._placements[li] = res.placement
-                self.last_results[li] = res
-            elif self.cfg.policy in ("top2", "top3"):
-                k = int(self.cfg.policy[-1])
-                self._placements[li] = topk_policy(g, min(k, self.cfg.s_max))
-            else:
-                raise ValueError(f"unknown policy {self.cfg.policy}")
+            if placement != self._placements[li]:
+                self._placements[li] = placement
+                self._dirty.add(li)
+                changed = True
+        if changed:
+            self._version += 1
 
     @property
     def placements(self) -> List[ExpertPlacement]:
         return list(self._placements)
 
     def step_arrays(self) -> Dict[str, Array]:
-        """Stacked static-shape placement arrays for the jitted step."""
+        """Stacked static-shape placement arrays for the jitted step.
+
+        Incremental: only layers whose placement changed since the last
+        call are re-packed; the returned arrays are copies, safe to hand
+        to ``jnp.asarray`` while the engine keeps replanning."""
         cfg = self.cfg
-        idx = np.zeros((cfg.num_moe_layers, cfg.s_max), dtype=np.int32)
-        valid = np.zeros((cfg.num_moe_layers, cfg.s_max), dtype=np.float32)
-        devs = np.zeros((cfg.num_moe_layers, cfg.s_max, cfg.num_devices),
-                        dtype=np.float32)
-        for li, pl in enumerate(self._placements):
-            arrs = pl.to_device_arrays(cfg.s_max)
-            idx[li] = arrs["shadow_idx"]
-            valid[li] = arrs["shadow_valid"]
-            devs[li] = arrs["shadow_devs"]
-        return {"shadow_idx": idx, "shadow_valid": valid, "shadow_devs": devs}
+        if self._cache is None:
+            self._cache = {
+                "shadow_idx": np.zeros((cfg.num_moe_layers, cfg.s_max),
+                                       dtype=np.int32),
+                "shadow_valid": np.zeros((cfg.num_moe_layers, cfg.s_max),
+                                         dtype=np.float32),
+                "shadow_devs": np.zeros(
+                    (cfg.num_moe_layers, cfg.s_max, cfg.num_devices),
+                    dtype=np.float32),
+            }
+            self._dirty = set(range(cfg.num_moe_layers))
+        for li in sorted(self._dirty):
+            arrs = self._placements[li].to_device_arrays(cfg.s_max)
+            self._cache["shadow_idx"][li] = arrs["shadow_idx"]
+            self._cache["shadow_valid"][li] = arrs["shadow_valid"]
+            self._cache["shadow_devs"][li] = arrs["shadow_devs"]
+        self._dirty.clear()
+        return {k: v.copy() for k, v in self._cache.items()}
 
     def predicted_times(self) -> Dict[str, float]:
         ts = [r.predicted_time for r in self.last_results if r is not None]

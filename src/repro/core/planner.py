@@ -108,7 +108,21 @@ class GreedyPlanner:
 
             cur = cur.with_shadow(e, shadow_devs)
             moves.append((e, shadow_devs))
-            H, R = cur.compute_loads(g)  # Replace_Inputs
+            # Replace_Inputs, incrementally: e was not previously shadowed,
+            # so exactly the tokens g[d, e] for d in shadow_devs move from
+            # remote-on-owner to local-on-d.  O(|shadow_devs|) instead of a
+            # full O(D·E) compute_loads.  With the "last" predictor g holds
+            # integral counts and the running sums match a fresh
+            # recomputation bit-for-bit; fractional g (the "ema" predictor)
+            # may drift by float rounding in the last ulp, which only
+            # matters on exact ties of the heuristic's comparisons.
+            own = int(owner[e])
+            sd = np.fromiter(shadow_devs, dtype=np.intp)
+            moved = g[sd, e]
+            H[sd] += moved
+            tot = float(moved.sum())
+            H[own] -= tot
+            R[own] -= tot
             t = eval_time(R, H, len(moves), self.n)
             if t < t_best:
                 t_best = t

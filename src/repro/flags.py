@@ -20,6 +20,18 @@ REPRO_MOE_PALLAS=0/1    Expert FFN through the ragged Pallas kernels
                         the SwiGLU gate is fused into the epilogue.
                         Unset ⇒ on for TPU backends, off elsewhere
                         (=1 forces it on anywhere via interpret mode).
+REPRO_ASYNC_PLAN=0/1    Trainer runtime selection (escape hatch).  Unset
+                        or 1 ⇒ the pipelined async runtime: the Plan
+                        primitive (engine.observe + the per-layer greedy
+                        searches) runs on a background planner thread
+                        overlapped with device execution, placements are
+                        uploaded only when they change, and loss
+                        consumption is one step delayed.  =0 forces the
+                        serial baseline (dispatch → block on loss → plan
+                        inline).  Both runtimes are bit-identical in
+                        losses and placements — planning is one-step-
+                        delayed by design — so this only moves *when*
+                        host work happens (tests/test_async_runtime.py).
 """
 import os
 
@@ -52,6 +64,12 @@ def moe_pallas() -> bool:
         import jax
         return jax.default_backend() == "tpu"
     return v == "1"
+
+
+def async_plan() -> bool:
+    """Pipelined trainer runtime: default on; REPRO_ASYNC_PLAN=0 forces
+    the fully-serial baseline (see module docstring)."""
+    return _flag("REPRO_ASYNC_PLAN", "1") != "0"
 
 
 def pin_residual() -> bool:

@@ -7,6 +7,24 @@ from __future__ import annotations
 
 import jax
 
+# Canonical axis names by mesh rank.  A single axis is the EP/tensor
+# ("model") axis — that is what exercises the Pro-Prophet engine and what
+# `--mesh 8` means on an 8-device host.
+MESH_AXIS_NAMES = {
+    1: ("model",),
+    2: ("data", "model"),
+    3: ("pod", "data", "model"),
+}
+
+
+def mesh_axis_names(ndim: int):
+    """Axis-name tuple for an ``ndim``-axis mesh (1, 2 or 3 axes)."""
+    try:
+        return MESH_AXIS_NAMES[ndim]
+    except KeyError:
+        raise ValueError(
+            f"mesh must have 1, 2 or 3 axes, got {ndim}") from None
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 v5e pod (256 chips) or 2 pods (512 chips).

@@ -25,9 +25,16 @@ def main() -> None:
                     choices=["pro_prophet", "fastermoe", "top2", "top3",
                              "none"])
     ap.add_argument("--replan-interval", type=int, default=1)
+    ap.add_argument("--async-plan", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="pipelined runtime: plan on a background thread "
+                         "overlapped with device execution (default on; "
+                         "REPRO_ASYNC_PLAN=0 is the env escape hatch)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default=None,
-                    help="e.g. '2,4' for a (data, model) device mesh")
+                    help="device mesh shape: '8' (model/EP axis), "
+                         "'2,4' (data, model) or '2,2,2' "
+                         "(pod, data, model)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -46,10 +53,9 @@ def main() -> None:
         cfg = reduced(cfg)
 
     if args.mesh:
+        from repro.launch.mesh import mesh_axis_names
         shape = tuple(int(x) for x in args.mesh.split(","))
-        mesh = jax.make_mesh(shape, ("data", "model")[-len(shape):]
-                             if len(shape) == 2
-                             else ("pod", "data", "model"))
+        mesh = jax.make_mesh(shape, mesh_axis_names(len(shape)))
         ctx = make_ctx(mesh)
     else:
         mesh = None
@@ -64,15 +70,25 @@ def main() -> None:
         engine = make_engine_for(cfg, ctx, policy=args.policy,
                                  replan_interval=args.replan_interval)
     trainer = Trainer(cfg, ctx, adamw(sched), attn_impl="auto",
-                      remat=not args.reduced, engine=engine)
+                      remat=not args.reduced, engine=engine,
+                      async_plan=args.async_plan)
     state = trainer.init_state(jax.random.PRNGKey(0))
     data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
 
+    from repro.train.runtime import OverlapTelemetry
+    telemetry = OverlapTelemetry()
     ctxmgr = mesh if mesh is not None else _null()
     with ctxmgr:
         state, hist = trainer.run(state, data, num_steps=args.steps,
-                                  log_every=args.log_every)
+                                  log_every=args.log_every,
+                                  telemetry=telemetry)
     print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
+    if engine is not None:
+        s = telemetry.summary()
+        print(f"overlap: plan {s['mean_plan_s'] * 1e3:.2f}ms/step "
+              f"({s['hidden_frac']:.0%} hidden), host overhead "
+              f"{s['host_overhead_s'] * 1e3:.2f}ms/step "
+              f"(serial would pay {s['serial_overhead_s'] * 1e3:.2f}ms)")
     if args.ckpt:
         from repro.checkpoint import save_train_state
         save_train_state(state, args.ckpt, step=args.steps,

@@ -1,5 +1,8 @@
+from .runtime import (OverlapTelemetry, PlacementCache, PlanEvent,
+                      PlanPipeline, StepStats)
 from .trainer import TrainState, Trainer, make_train_step
 from .serve import decode_tokens, make_serve_step, prefill
 
 __all__ = ["TrainState", "Trainer", "make_train_step", "decode_tokens",
-           "make_serve_step", "prefill"]
+           "make_serve_step", "prefill", "OverlapTelemetry",
+           "PlacementCache", "PlanEvent", "PlanPipeline", "StepStats"]

@@ -1,0 +1,300 @@
+"""Pipelined training runtime: overlap host planning with device execution.
+
+The paper's execution engine (Fig. 5, §V.A) hides the *Plan* primitive
+under device execution — the locality property makes planning one step
+ahead sound.  This module supplies the host-side machinery the trainer
+uses to realize that overlap on a JAX runtime:
+
+* :class:`PlanPipeline` — a single background planner thread.  After the
+  trainer dispatches step *j* it submits that step's (still in-flight)
+  routing-count array; the worker blocks on the device transfer (the
+  counts materialize once the forward pass finishes, well before the
+  backward + optimizer half of the step), runs ``engine.observe`` — the
+  per-layer :class:`~repro.core.planner.LocalityPlanner` searches fan out
+  over a small thread pool — and leaves the engine holding the placements
+  for step *j+1*.  The dispatch path only touches the future at the top
+  of the next iteration, so Plan runs under the device's backward pass.
+
+* :class:`PlacementCache` — double-buffered placement handoff.  The
+  engine's ``step_arrays`` are re-packed and re-uploaded to the device
+  only when a placement actually changed (the engine bumps
+  ``placements_version``); at ``replan_interval > 1`` the upload
+  disappears from the steady-state step entirely.
+
+* :class:`StepStats` / :class:`OverlapTelemetry` — the overlap telemetry
+  surface (plan latency, step latency, hidden fraction, host overhead)
+  consumed by the trainer's logging and by ``benchmarks/cadence.py`` /
+  ``benchmarks/end_to_end.py``.
+
+Threading contract: the engine is mutated only by the planner worker
+between ``submit()`` and the matching ``wait()``; the trainer reads
+``step_arrays()`` / ``placements_version`` only after ``wait()``
+returns.  ``wait()`` therefore also provides the happens-before edge
+that makes torn placement reads impossible (unit-tested in
+``tests/test_async_runtime.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+Array = np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepStats:
+    """Per-step telemetry emitted by the runtime (replaces ad-hoc metric
+    recomputation inside logging f-strings)."""
+
+    step: int
+    loss: float
+    step_time: float                 # dispatch-to-dispatch wall time [s]
+    plan_time: float = 0.0           # host Plan latency for this step's counts
+    exposed_plan_time: float = 0.0   # part of plan_time on the dispatch path
+    upload_time: float = 0.0         # placement host→device upload [s]
+    plan_speedup: float = 1.0        # engine-predicted speedup vs plain EP
+    num_shadowed: int = 0            # total shadow slots across MoE layers
+    placements_version: int = 0      # engine version consumed at dispatch
+    placements_fingerprint: str = "" # digest of the dispatched arrays
+
+    @property
+    def hidden_frac(self) -> float:
+        """Fraction of this step's Plan latency hidden under device
+        execution (0 when there was nothing to plan or nothing hid)."""
+        if self.plan_time <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.exposed_plan_time / self.plan_time)
+
+    def log_line(self, avg_step: float) -> str:
+        extra = ""
+        if self.plan_time > 0.0:
+            extra = (f" plan={self.plan_time * 1e3:.1f}ms"
+                     f" hidden={self.hidden_frac:.0%}"
+                     f" plan_speedup={self.plan_speedup:.2f}x"
+                     f" shadows={self.num_shadowed}")
+        return (f"step {self.step:5d} loss {self.loss:.4f} "
+                f"({avg_step:.3f}s/it){extra}")
+
+
+class OverlapTelemetry:
+    """Accumulates plan/step/upload timings and summarizes the overlap.
+
+    ``exposed`` is the portion of each step's plan latency that sat on
+    the dispatch critical path: equal to ``plan`` for a serial runtime,
+    ``max(0, plan - device_window)`` for a perfectly pipelined one.
+    """
+
+    def __init__(self) -> None:
+        self.plan_times: List[float] = []
+        self.step_times: List[float] = []
+        self.exposed_times: List[float] = []
+        self.upload_times: List[float] = []
+
+    def record(self, *, plan: float, step: float, exposed: float,
+               upload: float = 0.0) -> None:
+        self.plan_times.append(float(plan))
+        self.step_times.append(float(step))
+        self.exposed_times.append(float(exposed))
+        self.upload_times.append(float(upload))
+
+    def record_stats(self, stats: StepStats) -> None:
+        self.record(plan=stats.plan_time, step=stats.step_time,
+                    exposed=stats.exposed_plan_time,
+                    upload=stats.upload_time)
+
+    @property
+    def hidden_frac(self) -> float:
+        total = sum(self.plan_times)
+        if total <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - sum(self.exposed_times) / total)
+
+    def summary(self) -> Dict[str, float]:
+        n = max(len(self.step_times), 1)
+        plan = sum(self.plan_times)
+        upload = sum(self.upload_times)
+        exposed = sum(self.exposed_times)
+        return {
+            "steps": float(len(self.step_times)),
+            "mean_step_s": sum(self.step_times) / n,
+            "mean_plan_s": plan / n,
+            "mean_upload_s": upload / n,
+            "hidden_frac": self.hidden_frac,
+            # Host-side per-step overhead on the dispatch path, vs what a
+            # fully serial runtime would pay (plan + upload every step).
+            "host_overhead_s": (exposed + upload) / n,
+            "serial_overhead_s": (plan + upload) / n,
+        }
+
+
+def fingerprint_arrays(arrays: Optional[Dict[str, Array]]) -> str:
+    """Stable digest of a dict of numpy arrays (placement handoff id)."""
+    if arrays is None:
+        return ""
+    h = hashlib.sha1()
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(np.asarray(arrays[k]))
+        h.update(k.encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Placement handoff (double-buffered, cadence-aware)
+# ---------------------------------------------------------------------------
+
+class PlacementCache:
+    """Upload the engine's placement arrays only when they changed.
+
+    The jitted step consumes the same device buffers across steps while
+    the placements are stable; a version bump from the engine triggers a
+    re-pack + re-upload (the double buffer: the device keeps executing
+    from the old arrays until the next dispatch hands over the new ones).
+    """
+
+    def __init__(self, engine) -> None:
+        self._engine = engine
+        self._version = -1
+        self._arrays = None
+        self.fingerprint = ""
+        self.last_upload_time = 0.0
+        self.uploads = 0
+
+    @property
+    def version(self) -> int:
+        """Version of the arrays handed out by the last
+        ``arrays_for_dispatch`` (NOT the live engine version, which a
+        background planner may already have bumped past it)."""
+        return self._version
+
+    def arrays_for_dispatch(self):
+        """Device placement arrays for the next dispatch (None ⇒ no MoE
+        engine).  Sets ``last_upload_time`` to the upload cost actually
+        paid this step (0.0 on the cached path)."""
+        if self._engine is None:
+            self.last_upload_time = 0.0
+            return None
+        import jax.numpy as jnp
+        v = self._engine.placements_version
+        if self._arrays is None or v != self._version:
+            t0 = time.perf_counter()
+            host = self._engine.step_arrays()
+            self.fingerprint = fingerprint_arrays(host)
+            self._arrays = {k: jnp.asarray(a) for k, a in host.items()}
+            self._version = v
+            self.uploads += 1
+            self.last_upload_time = time.perf_counter() - t0
+        else:
+            self.last_upload_time = 0.0
+        return self._arrays
+
+
+# ---------------------------------------------------------------------------
+# Background planner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanEvent:
+    """Timing + outcome of one ``engine.observe`` call."""
+
+    plan_time: float          # observe + telemetry, after counts were ready
+    fetch_time: float         # worker time blocked on the device transfer
+    counts_ready: float       # perf_counter() when the counts materialized
+    done: float               # perf_counter() when observe finished
+    plan_speedup: float
+    num_shadowed: int
+    version: int              # engine placements_version after observe
+    exposed: float = 0.0      # filled in by wait(): plan time the dispatch
+                              # path actually waited for
+
+
+def counts_to_layers(counts: Array) -> List[Array]:
+    """Split the stacked ``[L, D, E]`` device counts into the per-layer
+    float64 routing matrices the engine ingests."""
+    counts = np.asarray(counts)
+    return [counts[i].astype(np.float64) for i in range(counts.shape[0])]
+
+
+def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
+    """Execute one Plan primitive: fetch the (possibly in-flight) device
+    counts, run ``engine.observe`` (per-layer searches on ``layer_pool``
+    when given), and collect the telemetry.  Shared by the background
+    worker and the serial runtime so both report identical numbers."""
+    t0 = time.perf_counter()
+    counts = np.asarray(counts_device)   # blocks the *calling thread*
+    t1 = time.perf_counter()             # until the device fwd pass is done
+    engine.observe(counts_to_layers(counts), pool=layer_pool)
+    pt = engine.predicted_times()
+    shadows = sum(p.num_shadowed for p in engine.placements)
+    t2 = time.perf_counter()
+    return PlanEvent(plan_time=t2 - t1, fetch_time=t1 - t0,
+                     counts_ready=t1, done=t2,
+                     plan_speedup=pt["speedup"], num_shadowed=shadows,
+                     version=engine.placements_version)
+
+
+class PlanPipeline:
+    """One in-flight Plan at a time, off the dispatch path.
+
+    ``submit(counts)`` hands the (possibly still device-resident) routing
+    counts of the just-dispatched step to the worker; ``wait()`` joins the
+    worker before the next dependent dispatch and reports how much of the
+    plan latency was exposed.  The strict submit→wait alternation is
+    asserted — it is what rules out torn placement reads.
+    """
+
+    def __init__(self, engine, *, layer_workers: Optional[int] = None):
+        self._engine = engine
+        self._exec = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="repro-plan")
+        n_layers = int(engine.cfg.num_moe_layers)
+        if layer_workers is None:
+            layer_workers = min(4, n_layers)
+        self._layer_pool = (ThreadPoolExecutor(
+            max_workers=layer_workers, thread_name_prefix="repro-plan-layer")
+            if layer_workers > 1 and n_layers > 1 else None)
+        self._future: Optional[Future] = None
+
+    # -- worker side ----------------------------------------------------
+    def _job(self, counts_device) -> PlanEvent:
+        return run_plan(self._engine, counts_device, self._layer_pool)
+
+    # -- dispatch side ---------------------------------------------------
+    def submit(self, counts_device) -> None:
+        assert self._future is None, "previous plan was never consumed"
+        self._future = self._exec.submit(self._job, counts_device)
+
+    def wait(self) -> Optional[PlanEvent]:
+        """Join the in-flight plan (no-op if none).  Must run before any
+        dispatch that depends on the planned placements."""
+        if self._future is None:
+            return None
+        t_wait = time.perf_counter()
+        event = self._future.result()
+        self._future = None
+        # Plan time the dispatch path spent waiting: overlap of
+        # [t_wait, now] with the worker's [counts_ready, done] window.
+        event.exposed = max(0.0, event.done - max(t_wait, event.counts_ready))
+        return event
+
+    def close(self) -> None:
+        self._exec.shutdown(wait=True)
+        if self._layer_pool is not None:
+            self._layer_pool.shutdown(wait=True)
+
+    def __enter__(self) -> "PlanPipeline":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

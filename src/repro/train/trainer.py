@@ -5,29 +5,51 @@ Per iteration (paper Fig. 5, adapted to JAX — DESIGN.md §3):
   1. device: jitted ``train_step(state, batch, placements)`` runs fwd+bwd
      with the *current* placements; MoE layers return their routing
      matrices (the profiled input distributions).
-  2. host, overlapped with the next dispatch: the engine ingests the
+  2. host, overlapped with the device step: the engine ingests the
      routing matrices, the locality planner (re)plans, and packs the
      placement arrays for the next step — the ``Plan`` primitive.
   3. ``Trans`` / shadow-compute / ``Agg`` all live *inside* the jitted
      step (repro.models.moe), so the placement handoff is the only
      host↔device traffic Pro-Prophet adds.
+
+Two runtimes drive the same jitted step (``REPRO_ASYNC_PLAN`` /
+``Trainer.async_plan`` select one; async is the default):
+
+* **sync** — the serial baseline: dispatch step *j*, block on its loss,
+  ingest its counts and plan inline, then dispatch *j+1*.  Host planning
+  sits fully on the critical path.
+* **async** — the pipelined runtime: dispatch step *j* with the
+  placements the planner finished by dispatch time, hand step *j*'s
+  in-flight count array to a background planner thread
+  (:class:`repro.train.runtime.PlanPipeline` — the per-layer searches
+  fan out as futures on a small pool), and consume step *j−1*'s loss
+  only after dispatching *j* (deferred ``device_get``).  Plan overlaps
+  the device's backward half; the placement upload happens only when a
+  placement actually changed (:class:`~repro.train.runtime.PlacementCache`).
+
+Planning is one-step-delayed by design (the locality property), so both
+runtimes compute *identical* losses and placements — the async mode only
+changes when the host work happens.  ``tests/test_async_runtime.py``
+asserts bit-identical histories.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import flags
 from repro.configs.base import ModelConfig
 from repro.core import EngineConfig, HardwareSpec, ProProphetEngine
 from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.optim.adamw import AdamW, AdamWState, apply_updates
 from repro.parallel import ParallelCtx
+from repro.train.runtime import (OverlapTelemetry, PlacementCache, PlanEvent,
+                                 PlanPipeline, StepStats, run_plan)
 
 
 class TrainState(NamedTuple):
@@ -58,6 +80,19 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
 
 
 @dataclasses.dataclass
+class _Pending:
+    """A dispatched step whose metrics have not been consumed yet."""
+
+    step: int
+    metrics: Dict[str, Any]
+    t_dispatch: float
+    upload_time: float
+    version: int
+    fingerprint: str
+    plan: Optional[PlanEvent] = None
+
+
+@dataclasses.dataclass
 class Trainer:
     cfg: ModelConfig
     ctx: ParallelCtx
@@ -66,6 +101,8 @@ class Trainer:
     remat: bool = True
     # Pro-Prophet wiring (None ⇒ plain EP / dense model).
     engine: Optional[ProProphetEngine] = None
+    # None ⇒ flags.async_plan() (REPRO_ASYNC_PLAN, default on).
+    async_plan: Optional[bool] = None
 
     def __post_init__(self):
         self._step_fn = make_train_step(self.cfg, self.ctx, self.optimizer,
@@ -76,34 +113,123 @@ class Trainer:
         params = model_lib.init_params(key, self.cfg, dtype)
         return TrainState(params, self.optimizer.init(params))
 
+    # ------------------------------------------------------------------
     def run(self, state: TrainState, batches, num_steps: int,
-            log_every: int = 10, log_fn=print) -> tuple:
-        history = []
-        it = iter(batches)
+            log_every: int = 10, log_fn=print,
+            stats_sink: Optional[List[StepStats]] = None,
+            telemetry: Optional[OverlapTelemetry] = None) -> tuple:
+        """Train for ``num_steps``; returns ``(state, history)`` where
+        ``history`` is the per-step float loss — identical between the
+        sync and async runtimes.  ``stats_sink``/``telemetry`` collect the
+        per-step :class:`StepStats` / aggregate overlap telemetry."""
+        use_async = (self.async_plan if self.async_plan is not None
+                     else flags.async_plan())
+        runner = self._run_async if use_async else self._run_sync
+        return runner(state, iter(batches), num_steps, log_every, log_fn,
+                      stats_sink, telemetry)
+
+    # -- shared pieces ---------------------------------------------------
+    def _emit(self, stats: StepStats, history, t0, log_every, log_fn,
+              stats_sink, telemetry) -> None:
+        history.append(stats.loss)
+        if stats_sink is not None:
+            stats_sink.append(stats)
+        if telemetry is not None:
+            telemetry.record_stats(stats)
+        if log_every and stats.step % log_every == 0:
+            avg = (time.perf_counter() - t0) / (stats.step + 1)
+            log_fn(stats.log_line(avg))
+
+    def _observe_inline(self, counts_device) -> PlanEvent:
+        """Sync-mode Plan: fetch counts and plan on the dispatch path."""
+        event = run_plan(self.engine, counts_device)
+        event.exposed = event.plan_time      # serial: fully exposed
+        return event
+
+    @staticmethod
+    def _stats_for(pending: _Pending, loss: float, t_next: float) -> StepStats:
+        ev = pending.plan
+        return StepStats(
+            step=pending.step, loss=loss,
+            step_time=t_next - pending.t_dispatch,
+            plan_time=ev.plan_time if ev else 0.0,
+            exposed_plan_time=ev.exposed if ev else 0.0,
+            upload_time=pending.upload_time,
+            plan_speedup=ev.plan_speedup if ev else 1.0,
+            num_shadowed=ev.num_shadowed if ev else 0,
+            placements_version=pending.version,
+            placements_fingerprint=pending.fingerprint,
+        )
+
+    # -- serial baseline -------------------------------------------------
+    def _run_sync(self, state, it, num_steps, log_every, log_fn,
+                  stats_sink, telemetry) -> tuple:
+        history: List[float] = []
+        cache = PlacementCache(self.engine)
         t0 = time.perf_counter()
         for step in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            placements = None
-            if self.engine is not None:
-                placements = {k: jnp.asarray(v)
-                              for k, v in self.engine.step_arrays().items()}
+            placements = cache.arrays_for_dispatch()
+            t_dispatch = time.perf_counter()
             state, metrics = self._step_fn(state, batch, placements)
-            loss = float(metrics["loss"])
+            loss = float(metrics["loss"])          # blocks on the device
+            plan = None
             if self.engine is not None and "counts" in metrics:
-                # counts [L_moe, D_ep, E] observed this step → plan next.
-                counts = np.asarray(metrics["counts"])
-                self.engine.observe([counts[i].T.astype(np.float64).T
-                                     for i in range(counts.shape[0])])
-            history.append(loss)
-            if log_every and step % log_every == 0:
-                dt = time.perf_counter() - t0
-                extra = ""
-                if self.engine is not None:
-                    pt = self.engine.predicted_times()
-                    extra = (f" plan_speedup={pt['speedup']:.2f}x"
-                             f" shadows={sum(p.num_shadowed for p in self.engine.placements)}")
-                log_fn(f"step {step:5d} loss {loss:.4f} "
-                       f"({dt / (step + 1):.3f}s/it){extra}")
+                plan = self._observe_inline(metrics["counts"])
+            pending = _Pending(step, metrics, t_dispatch,
+                               cache.last_upload_time, cache.version,
+                               cache.fingerprint, plan)
+            self._emit(self._stats_for(pending, loss, time.perf_counter()),
+                       history, t0, log_every, log_fn, stats_sink, telemetry)
+        return state, history
+
+    # -- pipelined runtime -----------------------------------------------
+    def _run_async(self, state, it, num_steps, log_every, log_fn,
+                   stats_sink, telemetry) -> tuple:
+        history: List[float] = []
+        cache = PlacementCache(self.engine)
+        pipeline = (PlanPipeline(self.engine)
+                    if self.engine is not None else None)
+        pending: Optional[_Pending] = None
+        t0 = time.perf_counter()
+        try:
+            for step in range(num_steps):
+                batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+                # Join the plan derived from the previous step's counts —
+                # the dependent dispatch below must see its placements.
+                event = pipeline.wait() if pipeline is not None else None
+                if pending is not None:
+                    pending.plan = event
+                placements = cache.arrays_for_dispatch()
+                t_dispatch = time.perf_counter()
+                state, metrics = self._step_fn(state, batch, placements)
+                if pipeline is not None and "counts" in metrics:
+                    pipeline.submit(metrics["counts"])
+                # Consume the *previous* step's loss only now — the device
+                # already has this step queued, so the host never blocks
+                # the dispatch path on a device_get.
+                if pending is not None:
+                    loss = float(pending.metrics["loss"])
+                    self._emit(self._stats_for(pending, loss, t_dispatch),
+                               history, t0, log_every, log_fn, stats_sink,
+                               telemetry)
+                pending = _Pending(step, metrics, t_dispatch,
+                                   cache.last_upload_time, cache.version,
+                                   cache.fingerprint)
+            # Drain: the final step's loss and its (now unused) plan.
+            if pipeline is not None:
+                final_event = pipeline.wait()
+                if pending is not None:
+                    pending.plan = final_event
+            if pending is not None:
+                loss = float(pending.metrics["loss"])
+                self._emit(self._stats_for(pending, loss,
+                                           time.perf_counter()),
+                           history, t0, log_every, log_fn, stats_sink,
+                           telemetry)
+        finally:
+            if pipeline is not None:
+                pipeline.close()
         return state, history
 
 

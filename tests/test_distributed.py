@@ -32,6 +32,14 @@ def test_ep_equivalence_and_training_parity():
 
 
 @pytest.mark.slow
+def test_async_runtime_mesh_equivalence():
+    """Async pipelined runtime ≡ serial baseline on a (2, 4) mesh:
+    identical loss history and per-step placement arrays."""
+    out = run_dist_script("async_equivalence.py")
+    assert "ASYNC_EQUIVALENCE_MESH_PASS" in out
+
+
+@pytest.mark.slow
 def test_moe_pallas_mesh_equivalence():
     """REPRO_MOE_PALLAS on/off parity through shard_map over skewed
     routing (the ragged Pallas FEC/BEC vs the dense einsum)."""

@@ -18,8 +18,11 @@ from repro.train import Trainer, decode_tokens, make_serve_step, prefill
 from repro.train.trainer import TrainState, make_engine_for
 
 
+@pytest.mark.slow
 def test_training_decreases_loss_moe_gpt():
-    """The paper's MoE-GPT-S family (reduced) learns on the synthetic LM."""
+    """The paper's MoE-GPT-S family (reduced) learns on the synthetic LM
+    (long end-to-end trainer run — the fast lane covers the same loop via
+    tests/test_async_runtime.py's 22-step equivalence runs)."""
     cfg = reduced(get_config("moe-gpt-s"))
     ctx = local_ctx()
     tr = Trainer(cfg, ctx, adamw(cosine(3e-3, 10, 200)), attn_impl="naive",
