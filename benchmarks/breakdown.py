@@ -1,8 +1,12 @@
 """Table I analog: load-balancing overhead (Search/Place/Reduce) of a
-prior-art blocked method (FasterMoE-style) as a fraction of step time."""
-from .simlib import SimConfig, simulate
+prior-art blocked method (FasterMoE-style) as a fraction of step time,
+plus the chunked a2a↔FEC K-sweep: per-layer expert-path makespan and
+timeline hidden-comm fraction vs the chunk count the device path runs
+with (repro.models.moe; K chosen by repro.core.scheduler)."""
+from .simlib import SimConfig, chunk_sweep, simulate
 
 MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
+CHUNK_KS = (1, 2, 4, 8)
 
 
 def run(iters: int = 12):
@@ -20,4 +24,12 @@ def run(iters: int = 12):
         rows.append((f"breakdown/{model}/search", 0.0, search))
         rows.append((f"breakdown/{model}/place", 0.0, place))
         rows.append((f"breakdown/{model}/reduce", 0.0, reduce_))
+        # K-sweep: us = mean per-layer expert path (fwd+bwd), derived =
+        # mean hidden-comm fraction of the chunked timeline.
+        sweep = chunk_sweep(SimConfig(model=model, iters=min(iters, 6)),
+                            ks=CHUNK_KS)
+        for k in CHUNK_KS:
+            rows.append((f"breakdown/{model}/chunk_k{k}",
+                         sweep[k]["layer_s"] * 1e6,
+                         sweep[k]["hidden_frac"]))
     return rows

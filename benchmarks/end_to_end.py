@@ -6,10 +6,18 @@ The ``host_plan`` rows consume the async runtime's overlap telemetry
 (see repro.train.runtime): measured Plan latency for the model's engine
 vs that model's simulated iteration time — ``us_per_call`` is the mean
 host Plan latency, ``derived`` the fraction hidden under the device step
-by the pipelined runtime."""
-from .simlib import CLUSTERS, SimConfig, host_overlap, simulate, speedup
+by the pipelined runtime.
+
+The ``a2a_chunks_k*`` rows are the chunked a2a↔FEC K-sweep (the device
+pipeline in repro.models.moe): simulated iteration time with both expert
+paths chunked at K, derived = step speedup over the serial K=1 timeline
+(strictly > 1 for K > 1 on these skewed loads — the chunked-overlap
+acceptance shape)."""
+from .simlib import (CLUSTERS, SimConfig, chunk_sweep, host_overlap,
+                     simulate, speedup)
 
 MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
+CHUNK_KS = (1, 2, 4, 8)
 
 
 def run(iters: int = 20):
@@ -36,4 +44,14 @@ def run(iters: int = 20):
                     rows.append((f"e2e/{cluster}/{model}/host_plan",
                                  ov["mean_plan_s"] * 1e6,
                                  ov["hidden_frac"]))
+                    sweep = chunk_sweep(
+                        SimConfig(model=model, cluster=cluster,
+                                  devices=devices, tokens=tokens,
+                                  top_k=k, iters=min(iters, 6)),
+                        ks=CHUNK_KS)
+                    for ck in CHUNK_KS:
+                        rows.append((
+                            f"e2e/{cluster}/{model}/a2a_chunks_k{ck}",
+                            sweep[ck]["iter_s"] * 1e6,
+                            sweep[1]["iter_s"] / sweep[ck]["iter_s"]))
     return rows

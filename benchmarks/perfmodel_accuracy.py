@@ -61,6 +61,26 @@ def run():
     rows.append(("perfmodel/trans_mean_err", tref * 1e6,
                  float(np.mean(errs))))
 
+    # --- chunked-overlap term vs the §V timeline -----------------------
+    # PerfModel.chunked_path_time is the closed form of the scheduler's
+    # list-scheduled chunked a2a↔FEC pipeline (same graph, same program
+    # order) — validate it against core/scheduler.py for the same K grid
+    # the engine chooses from.  Target: exact (err ≈ float eps).
+    from repro.core import scheduler as _sched
+    from repro.core.perfmodel import PerfModel as _PM
+    cerrs = []
+    for a2a_t in (1e-4, 1e-3, 5e-3):
+        for fec_t in (1e-4, 2e-3, 1e-2):
+            for k in (1, 2, 4, 8):
+                for oh in (0.0, 2e-5):
+                    tl = _sched.chunked_makespan(a2a_t, fec_t, k,
+                                                 chunk_overhead=oh)
+                    cf = _PM.chunked_path_time(a2a_t, fec_t, k,
+                                               chunk_overhead=oh)
+                    cerrs.append(abs(cf - tl) / tl)
+    rows.append(("perfmodel/chunked_overlap_err", 0.0,
+                 float(np.mean(cerrs))))
+
     # --- A2A stand-in: token permutation, linear in max R_i (eq. 1) ----
     perm = jax.jit(lambda x, i: x[i])
     nref = 8192

@@ -82,6 +82,25 @@ def _hw_for(cfg, sim: SimConfig) -> HardwareSpec:
         t_fnec=t_fnec, t_bnec=2 * t_fnec)
 
 
+def _planner_setup(sim: SimConfig, *, plan_scheduled: bool,
+                   trans_mode: str = "p2p"):
+    """Shared harness: (cfg, hw, perf, per-layer LocalityPlanners,
+    per-layer GatingTraces) for a SimConfig — one construction used by
+    both the policy simulator and the chunk K-sweep, so their rows stay
+    comparable by design."""
+    cfg = get_config(sim.model)
+    E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
+    hw = _hw_for(cfg, sim)
+    perf = PerfModel(hw, D, trans_mode=trans_mode)
+    greedy = GreedyPlanner(perf, n=sim.n, alpha=0.25, s_max=sim.s_max,
+                           scheduled=plan_scheduled)
+    planners = [LocalityPlanner(greedy, D, E) for _ in range(L)]
+    traces = [GatingTrace(D, E, sim.tokens // D, skew=sim.skew,
+                          drift=sim.drift, seed=sim.seed * 1000 + li)
+              for li in range(L)]
+    return cfg, hw, perf, planners, traces
+
+
 def simulate(policy: str, sim: SimConfig, *, scheduled: Optional[bool] = None,
              trans_mode: str = "p2p") -> SimResult:
     """policy ∈ {deepspeed, fastermoe, top2, top3, planner, scheduler,
@@ -94,25 +113,12 @@ def simulate(policy: str, sim: SimConfig, *, scheduled: Optional[bool] = None,
     scheduler    — FasterMoE placement + block-wise overlap (eq. 8 resid).
     pro_prophet  — planner×scheduler coupling (plans against eq. 8).
     """
-    cfg = get_config(sim.model)
-    E = cfg.moe.num_experts
-    D = sim.devices
-    assert E == D or E % D == 0
-    hw = _hw_for(cfg, sim)
-    perf = PerfModel(hw, D, trans_mode=trans_mode)
-    L = cfg.num_moe_layers
-
     use_sched = scheduled if scheduled is not None else policy in (
         "scheduler", "pro_prophet")
-    plan_scheduled = policy == "pro_prophet"
-
-    greedy = GreedyPlanner(perf, n=sim.n, alpha=0.25, s_max=sim.s_max,
-                           scheduled=plan_scheduled)
-    planners = [LocalityPlanner(greedy, D, E) for _ in range(L)]
-
-    traces = [GatingTrace(D, E, sim.tokens // D // (1 if sim.top_k == 1 else 1),
-                          skew=sim.skew, drift=sim.drift,
-                          seed=sim.seed * 1000 + li) for li in range(L)]
+    cfg, hw, perf, planners, traces = _planner_setup(
+        sim, plan_scheduled=policy == "pro_prophet", trans_mode=trans_mode)
+    E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
+    assert E == D or E % D == 0
     # top-k routing: k choices per token ⇒ k× entries in G
     iter_times, rbs, layer_ts = [], [], []
     breakdown = {"a2a": 0.0, "fec": 0.0, "bec": 0.0, "trans": 0.0,
@@ -160,6 +166,49 @@ def simulate(policy: str, sim: SimConfig, *, scheduled: Optional[bool] = None,
 def speedup(a: SimResult, b: SimResult) -> float:
     """How much faster is b than a."""
     return a.mean_iter / b.mean_iter
+
+
+def chunk_sweep(sim: SimConfig, ks=(1, 2, 4, 8),
+                chunk_overhead: float = 0.0) -> Dict[int, Dict[str, float]]:
+    """K-sweep of the chunked a2a↔FEC pipeline under Pro-Prophet
+    placements (the device path in repro.models.moe; timeline in
+    repro.core.scheduler).  Per chunk count K returns the mean per-layer
+    expert-path time (fwd+bwd, ``PerfModel.layer_time_chunked``), the
+    mean simulated iteration time, and the mean timeline hidden-comm
+    fraction.  K=1 reproduces the eq. 8 serial numbers exactly."""
+    from repro.core import scheduler as sched
+
+    cfg, hw, perf, planners, traces = _planner_setup(sim,
+                                                     plan_scheduled=True)
+    D, L = sim.devices, cfg.num_moe_layers
+    prev_g: List[Optional[np.ndarray]] = [None] * L
+    layer_t = {k: [] for k in ks}
+    iter_t = {k: [] for k in ks}
+    hidden = {k: [] for k in ks}
+    for _ in range(sim.iters):
+        totals = {k: 0.0 for k in ks}
+        for li in range(L):
+            g = traces[li].step() * sim.top_k
+            res = planners[li].maybe_plan(prev_g[li] if prev_g[li]
+                                          is not None else g)
+            prev_g[li] = g
+            pl = res.placement
+            H, R = pl.compute_loads(g)
+            n = perf.effective_n(pl)
+            for k in ks:
+                t = perf.layer_time_chunked(R, H, pl.num_shadowed, n, k,
+                                            chunk_overhead=chunk_overhead)
+                layer_t[k].append(t)
+                totals[k] += t + hw.t_fnec + hw.t_bnec
+                hidden[k].append(sched.hidden_comm_fraction(
+                    perf.t_a2a(R), perf.t_fec(H), k,
+                    chunk_overhead=chunk_overhead))
+        for k in ks:
+            iter_t[k].append(totals[k])
+    return {k: {"layer_s": float(np.mean(layer_t[k])),
+                "iter_s": float(np.mean(iter_t[k])),
+                "hidden_frac": float(np.mean(hidden[k]))}
+            for k in ks}
 
 
 def measure_plan_overlap(engine, traces, step_window_fn, iters: int,

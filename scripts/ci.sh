@@ -6,6 +6,11 @@
 #                             subprocesses, long end-to-end trainer runs)
 #                             but keeps the async≡sync equivalence tests
 #                             (tests/test_async_runtime.py is not slow)
+#                             and the chunked a2a↔FEC equivalence sweep
+#                             (tests/test_moe.py::TestChunkedA2aPipeline
+#                             runs K∈{1,2,3,4} single-device; the (2,4)
+#                             mesh subprocess sweep is @slow in
+#                             tests/test_distributed.py)
 #
 # Extra args pass through to pytest, e.g.  scripts/ci.sh -k planner
 set -euo pipefail

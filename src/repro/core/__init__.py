@@ -13,8 +13,10 @@ from .perfmodel import (V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS, HardwareSpec,
                         PerfModel)
 from .placement import ExpertPlacement, default_owner, shadow_to_all, traditional
 from .planner import GreedyPlanner, LocalityPlanner, PlanResult
-from .scheduler import (BlockCosts, Timeline, build_graph, iteration_time,
-                        list_schedule, simulate, split_trans)
+from .scheduler import (BlockCosts, Timeline, build_graph, choose_chunks,
+                        chunked_expert_graph, chunked_makespan,
+                        hidden_comm_fraction, iteration_time, list_schedule,
+                        simulate, split_trans)
 from .synthetic import GatingTrace
 from . import baselines
 
@@ -25,6 +27,7 @@ __all__ = [
     "HardwareSpec", "PerfModel", "V5E_PEAK_FLOPS", "V5E_HBM_BW", "V5E_ICI_BW",
     "ExpertPlacement", "default_owner", "shadow_to_all", "traditional",
     "GreedyPlanner", "LocalityPlanner", "PlanResult", "BlockCosts",
-    "Timeline", "build_graph", "iteration_time", "list_schedule", "simulate",
-    "split_trans", "GatingTrace", "baselines",
+    "Timeline", "build_graph", "choose_chunks", "chunked_expert_graph",
+    "chunked_makespan", "hidden_comm_fraction", "iteration_time",
+    "list_schedule", "simulate", "split_trans", "GatingTrace", "baselines",
 ]

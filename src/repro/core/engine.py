@@ -29,10 +29,11 @@ edge.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import scheduler
 from .perfmodel import HardwareSpec, PerfModel
 from .placement import ExpertPlacement, traditional
 from .planner import GreedyPlanner, LocalityPlanner, PlanResult
@@ -53,6 +54,12 @@ class EngineConfig:
     scheduled: bool = True        # plan against eq. 8 (planner×scheduler)
     trans_mode: str = "ring"      # TPU adaptation; "p2p" = paper-faithful
     policy: str = "pro_prophet"   # pro_prophet | fastermoe | top2 | top3 | none
+    # Chunked a2a↔FEC pipelining (repro.models.moe): candidate chunk
+    # counts the scheduler timeline picks from, and the modeled per-chunk
+    # launch cost (collective setup + kernel dispatch) that keeps the
+    # chooser at K=1 when the a2a is too small to be worth splitting.
+    a2a_chunk_candidates: Tuple[int, ...] = (1, 2, 4, 8)
+    a2a_chunk_overhead: float = 20e-6
 
 
 class ProProphetEngine:
@@ -75,6 +82,11 @@ class ProProphetEngine:
         self._version = 0
         self._dirty = set(range(cfg.num_moe_layers))
         self._cache: Optional[Dict[str, Array]] = None
+        # Last observed routing matrix per layer — the profiled stats the
+        # chunk chooser (and the modeled overlap telemetry) run on.
+        self._last_g: List[Optional[Array]] = [None] * cfg.num_moe_layers
+        self._obs_count = 0
+        self._costs_cache = None  # (token, [per-layer costs]) memo
 
     # ------------------------------------------------------------------
     @property
@@ -105,6 +117,9 @@ class ProProphetEngine:
         parallel; results are merged in layer order either way, so the
         outcome is identical to the serial path."""
         assert len(per_layer_g) == self.cfg.num_moe_layers
+        self._last_g = [np.asarray(g, dtype=np.float64)
+                        for g in per_layer_g]
+        self._obs_count += 1
         if self.cfg.policy == "none":
             return
         if pool is not None:
@@ -154,6 +169,81 @@ class ProProphetEngine:
             self._cache["shadow_devs"][li] = arrs["shadow_devs"]
         self._dirty.clear()
         return {k: v.copy() for k, v in self._cache.items()}
+
+    # ------------------------------------------------------------------
+    # Chunked a2a↔FEC pipelining (§V realized on-device)
+    # ------------------------------------------------------------------
+    def _layer_costs(self, li: int) -> Optional[Tuple[float, float, float]]:
+        """(t_a2a, t_fec, received_tokens) of layer ``li`` under its
+        current placement and last observed routing stats, or None
+        before any observe.  One ``compute_loads`` serves the chunk
+        chooser and the telemetry — this runs on the dispatch path."""
+        g = self._last_g[li]
+        if g is None:
+            return None
+        H, R = self._placements[li].compute_loads(g)
+        return self.perf.t_a2a(R), self.perf.t_fec(H), float(np.sum(R))
+
+    def _all_layer_costs(self) -> List[Optional[Tuple[float, float, float]]]:
+        """Per-layer costs, memoized until the next observe/replan (the
+        trainer calls chunk_plan and chunk_stats back to back on the
+        dispatch path; one compute_loads per layer serves both)."""
+        token = (self._version, self._obs_count)
+        if self._costs_cache is None or self._costs_cache[0] != token:
+            costs = [self._layer_costs(li)
+                     for li in range(self.cfg.num_moe_layers)]
+            self._costs_cache = (token, costs)
+        return self._costs_cache[1]
+
+    def chunk_plan(self) -> List[int]:
+        """Per-layer a2a↔FEC chunk count K, chosen by the scheduler's
+        analytical timeline (:func:`repro.core.scheduler.choose_chunks`)
+        on each layer's profiled stats.  Layers with no stats yet get the
+        bit-identical K=1 path.  ``REPRO_A2A_CHUNKS`` overrides."""
+        from repro import flags
+        override = flags.a2a_chunks()
+        if override is not None:
+            return [override] * self.cfg.num_moe_layers
+        plan = []
+        for costs in self._all_layer_costs():
+            if costs is None:
+                plan.append(1)
+                continue
+            t_a2a, t_fec, _ = costs
+            plan.append(scheduler.choose_chunks(
+                t_a2a, t_fec, candidates=self.cfg.a2a_chunk_candidates,
+                chunk_overhead=self.cfg.a2a_chunk_overhead))
+        return plan
+
+    def chunk_stats(self, plan: Optional[Sequence[int]] = None
+                    ) -> Dict[str, float]:
+        """Modeled chunked-overlap telemetry for the given per-layer plan
+        (default: :meth:`chunk_plan`), summed over MoE layers:
+
+        ``serial_s`` / ``chunked_s`` — K=1 vs chunked timeline makespan of
+        the forward expert paths; ``comm_hidden_frac`` — fraction of a2a
+        wire time hidden under the ragged FEC (structural overlap of the
+        timeline; the per-chunk launch overhead only steers the chooser);
+        ``a2a_gbytes`` — modeled bytes all four a2as move per step (fwd
+        send/return, ×2 for bwd).
+        """
+        if plan is None:
+            plan = self.chunk_plan()
+        serial = chunked = a2a_time = 0.0
+        gbytes = 0.0
+        for k, costs in zip(plan, self._all_layer_costs()):
+            if costs is None:
+                continue
+            t_a2a, t_fec, recv_tokens = costs
+            serial += scheduler.chunked_makespan_closed(t_a2a, t_fec, 1)
+            chunked += scheduler.chunked_makespan_closed(t_a2a, t_fec, k)
+            a2a_time += 2.0 * t_a2a
+            gbytes += 4.0 * recv_tokens * self.perf.hw.input_bytes / 1e9
+        frac = max(0.0, min(1.0, (serial - chunked) / a2a_time)) \
+            if a2a_time > 0 else 0.0
+        return {"serial_s": serial, "chunked_s": chunked,
+                "comm_hidden_frac": frac, "a2a_gbytes": gbytes,
+                "mean_chunks": float(np.mean(plan)) if len(plan) else 1.0}
 
     def predicted_times(self) -> Dict[str, float]:
         ts = [r.predicted_time for r in self.last_results if r is not None]

@@ -150,20 +150,58 @@ class PerfModel:
         p_agg = max(0.0, self.t_agg(s, n) - t_bec - self.hw.t_bnec)
         return 4.0 * self.t_a2a(R) + 3.0 * t_fec + p_trans + p_agg
 
+    # -- chunked a2a↔FEC overlap (§V realized on-device; repro.models.moe)
+    @staticmethod
+    def chunked_path_time(t_a2a: float, t_comp: float, num_chunks: int, *,
+                          chunk_overhead: float = 0.0) -> float:
+        """Makespan of one K-chunk a2a→compute→a2a software pipeline:
+        the closed form of the scheduler's sends-first list schedule
+        (:func:`repro.core.scheduler.chunked_makespan_closed`; asserted
+        equal to the graph timeline in ``benchmarks/perfmodel_accuracy``).
+        K=1 degenerates to the serial chain ``2·t_a2a + t_comp``."""
+        from . import scheduler
+        return scheduler.chunked_makespan_closed(
+            t_a2a, t_comp, num_chunks, chunk_overhead=chunk_overhead)
+
+    def chunked_expert_time(self, R: Array, H: Array, num_chunks: int, *,
+                            chunk_overhead: float = 0.0) -> float:
+        """Forward expert path (a2a → ragged FEC → a2a) under K chunks."""
+        return self.chunked_path_time(self.t_a2a(R), self.t_fec(H),
+                                      num_chunks,
+                                      chunk_overhead=chunk_overhead)
+
+    def layer_time_chunked(self, R: Array, H: Array, s: int, n: int,
+                           num_chunks: int, *,
+                           chunk_overhead: float = 0.0) -> float:
+        """eq. 8 with both expert paths replaced by their chunked-pipeline
+        makespans (the backward pipeline computes BEC = 2·FEC per chunk).
+        ``num_chunks == 1`` reproduces :meth:`layer_time_scheduled`
+        exactly — the device path's bit-identity has a model analog."""
+        t_a2a = self.t_a2a(R)
+        t_fec = self.t_fec(H)
+        fwd = self.chunked_path_time(t_a2a, t_fec, num_chunks,
+                                     chunk_overhead=chunk_overhead)
+        bwd = self.chunked_path_time(t_a2a, self.t_bec(H), num_chunks,
+                                     chunk_overhead=chunk_overhead)
+        p_trans = max(0.0, self.t_trans(s, n) - t_fec - self.hw.t_fnec)
+        p_agg = max(0.0, self.t_agg(s, n) - self.t_bec(H) - self.hw.t_bnec)
+        return fwd + bwd + p_trans + p_agg
+
     # -- convenience -------------------------------------------------------
+    def effective_n(self, placement) -> int:
+        """The paper's n (devices NOT transferred to) implied by a
+        placement with possibly non-uniform shadow sets: the paper's n is
+        uniform, so take the mean shadow-set size, rounded."""
+        sizes = [len(d) for d in placement.shadows.values() if d]
+        return int(round(self.D - 1 - float(np.mean(sizes)))) if sizes else 0
+
     def layer_time_for(self, placement, g: Array, *, scheduled: bool = False,
                        n: int | None = None) -> float:
         """Evaluate a placement on routing matrix ``G`` directly."""
         H, R = placement.compute_loads(g)
         s = placement.num_shadowed
         if n is None:
-            # Effective mean "not transferred to" count across shadowed
-            # experts (the paper's n is uniform; placements may not be).
-            if s:
-                sizes = [len(d) for d in placement.shadows.values() if d]
-                n = int(round(self.D - 1 - float(np.mean(sizes))))
-            else:
-                n = 0
+            n = self.effective_n(placement)
         fn = self.layer_time_scheduled if scheduled else self.layer_time
         return fn(R, H, s, n)
 
@@ -171,8 +209,7 @@ class PerfModel:
         """Term-by-term dict — feeds the Table-I style benchmark."""
         H, R = placement.compute_loads(g)
         s = placement.num_shadowed
-        sizes = [len(d) for d in placement.shadows.values() if d]
-        n = int(round(self.D - 1 - float(np.mean(sizes)))) if sizes else 0
+        n = self.effective_n(placement)
         t_a2a = self.t_a2a(R)
         t_fec = self.t_fec(H)
         t_trans = self.t_trans(s, n)

@@ -22,10 +22,22 @@ layer and the transferring overhead of an expert's parameters are static").
 
 Everything here is an analytical timeline over two serial resources per
 device group — one comm stream, one comp stream — which is exactly the
-abstraction the paper's figures use.  The TPU runtime realization of the
-same idea (hoisting shadow collectives so XLA's async scheduler can overlap
-them) lives in :mod:`repro.parallel.ep`; this module is what the planner's
+abstraction the paper's figures use.  This module is what the planner's
 eq. 8 coupling and the ablation/overlap benchmarks reason with.
+
+Scheduler → runtime: this scheduling space is no longer only analytical.
+The device-side hot path (:mod:`repro.models.moe`) realizes it directly —
+the expert a2a→FEC→a2a path is split into K capacity-axis chunks whose
+send/compute/return ops carry no cross-chunk dependencies, so XLA's async
+collective scheduler overlaps a2a(chunk k+1) with the ragged FEC of chunk
+k (forward and backward), and the shadow ``Trans`` psum is hoisted ahead
+of the a2a path so it rides under the first chunk.  The chunk count K is
+chosen *here*: :func:`choose_chunks` minimizes the list-scheduled makespan
+of :func:`chunked_expert_graph` on the engine's profiled per-layer stats
+(``REPRO_A2A_CHUNKS`` overrides; K=1 reproduces the serial path
+bit-identically).  :meth:`repro.core.perfmodel.PerfModel.chunked_expert_time`
+is the closed form of the same timeline (validated against it in
+``benchmarks/perfmodel_accuracy.py``).
 """
 from __future__ import annotations
 
@@ -237,3 +249,89 @@ def split_trans(trans: float, fec: float, fnec: float) -> tuple[float, float]:
     remainder into the FNEC window.  Returns (subtrans1, subtrans2)."""
     s1 = min(trans, fec)
     return s1, trans - s1
+
+
+# ---------------------------------------------------------------------------
+# Chunked a2a↔FEC pipeline (the device-side realization's planning half)
+# ---------------------------------------------------------------------------
+
+def chunked_expert_graph(t_a2a: float, t_fec: float, num_chunks: int, *,
+                         chunk_overhead: float = 0.0,
+                         prefix: str = "") -> List[Op]:
+    """Op graph of one chunked expert path: K send-a2a chunks, K FEC
+    chunks, K return-a2a chunks on the (comm, comp) resources.
+
+    ``t_a2a`` is ONE a2a of the full buffer (each chunk costs
+    ``t_a2a/K + chunk_overhead``; likewise FEC).  Program order is
+    sends-first — all send chunks are emitted before the fec/return
+    pairs — which is the order the list scheduler arbitrates resource
+    ties with, and the order the closed form in
+    :meth:`repro.core.perfmodel.PerfModel.chunked_expert_time` models.
+    """
+    K = max(1, int(num_chunks))
+    a = t_a2a / K + chunk_overhead
+    f = t_fec / K + chunk_overhead
+    ops = [Op(f"{prefix}a2a1_c{k}", "comm", a, []) for k in range(K)]
+    for k in range(K):
+        ops.append(Op(f"{prefix}fec_c{k}", "comp", f,
+                      [f"{prefix}a2a1_c{k}"]))
+        ops.append(Op(f"{prefix}a2a2_c{k}", "comm", a,
+                      [f"{prefix}fec_c{k}"]))
+    return ops
+
+
+def chunked_makespan(t_a2a: float, t_fec: float, num_chunks: int, *,
+                     chunk_overhead: float = 0.0) -> float:
+    """List-scheduled makespan of the K-chunk a2a→FEC→a2a pipeline.
+    K=1 degenerates to the serial chain ``2·t_a2a + t_fec``.  This is
+    the reference implementation (graph + validation); the per-step hot
+    path uses :func:`chunked_makespan_closed`."""
+    g = chunked_expert_graph(t_a2a, t_fec, num_chunks,
+                             chunk_overhead=chunk_overhead)
+    tl = list_schedule(g)
+    tl.validate(g)
+    return tl.makespan
+
+
+def chunked_makespan_closed(t_a2a: float, t_fec: float, num_chunks: int, *,
+                            chunk_overhead: float = 0.0) -> float:
+    """Closed form of :func:`chunked_makespan` — exact for the
+    sends-first program order (asserted equal in tests/test_scheduler.py
+    and benchmarks/perfmodel_accuracy.py).  With per-chunk costs
+    ``a = t_a2a/K + h`` and ``f = t_fec/K + h`` the binding constraint
+    is the serial comm stream (``2Ka``), the send-pipeline fill plus one
+    compute chunk (``(K+1)a + f``), or the serial compute stream plus
+    fill/drain a2a chunks (``Kf + 2a``).  This is what the engine's
+    per-dispatch chunk choice and telemetry evaluate."""
+    K = max(1, int(num_chunks))
+    a = t_a2a / K + chunk_overhead
+    f = t_fec / K + chunk_overhead
+    return max(2.0 * K * a, (K + 1) * a + f, K * f + 2.0 * a)
+
+
+def choose_chunks(t_a2a: float, t_fec: float, *,
+                  candidates: Sequence[int] = (1, 2, 4, 8),
+                  chunk_overhead: float = 0.0) -> int:
+    """Chunk count minimizing the pipeline makespan (smallest K on ties,
+    so zero-benefit loads — tiny a2a, or overhead-dominated chunking —
+    keep the bit-identical K=1 path)."""
+    best_k, best_t = 1, float("inf")
+    for k in sorted(set(int(c) for c in candidates if c >= 1)):
+        t = chunked_makespan_closed(t_a2a, t_fec, k,
+                                    chunk_overhead=chunk_overhead)
+        if t < best_t - 1e-15:
+            best_k, best_t = k, t
+    return best_k
+
+
+def hidden_comm_fraction(t_a2a: float, t_fec: float, num_chunks: int, *,
+                         chunk_overhead: float = 0.0) -> float:
+    """Fraction of the path's a2a time (2·t_a2a) the K-chunk pipeline
+    hides under expert compute, per the timeline: 0 at K=1, up to 1 when
+    the ragged FEC fully covers the communication."""
+    if t_a2a <= 0.0:
+        return 0.0
+    serial = chunked_makespan_closed(t_a2a, t_fec, 1)
+    m = chunked_makespan_closed(t_a2a, t_fec, num_chunks,
+                                chunk_overhead=chunk_overhead)
+    return max(0.0, min(1.0, (serial - m) / (2.0 * t_a2a)))

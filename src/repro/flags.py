@@ -20,6 +20,21 @@ REPRO_MOE_PALLAS=0/1    Expert FFN through the ragged Pallas kernels
                         the SwiGLU gate is fused into the epilogue.
                         Unset ⇒ on for TPU backends, off elsewhere
                         (=1 forces it on anywhere via interpret mode).
+REPRO_A2A_CHUNKS=K      Manual override of the a2a↔FEC chunk count: the
+                        MoE expert path splits its [E, C, d] capacity
+                        buffer into K chunks along the capacity axis and
+                        software-pipelines all_to_all(chunk k+1) against
+                        expert_ffn(chunk k) — forward and backward — so
+                        the data-dependent communication hides under the
+                        ragged Pallas gmm (paper §V, realized on-device
+                        in repro.models.moe).  K=1 reproduces the
+                        unchunked path bit-identically.  Unset ⇒ the
+                        engine picks K per layer from the scheduler's
+                        analytical timeline on the profiled routing stats
+                        (core/scheduler.py choose_chunks).  Read at trace
+                        time like all flags here: set it before the
+                        process jits (the trainer re-reads it per
+                        dispatch and re-keys its jit cache).
 REPRO_ASYNC_PLAN=0/1    Trainer runtime selection (escape hatch).  Unset
                         or 1 ⇒ the pipelined async runtime: the Plan
                         primitive (engine.observe + the per-layer greedy
@@ -64,6 +79,14 @@ def moe_pallas() -> bool:
         import jax
         return jax.default_backend() == "tpu"
     return v == "1"
+
+
+def a2a_chunks():
+    """REPRO_A2A_CHUNKS=K: force the a2a↔FEC chunk count everywhere
+    (None ⇒ unset; the engine's scheduler-driven per-layer choice, or 1
+    where no engine runs).  See the module docstring."""
+    v = _flag("REPRO_A2A_CHUNKS", "")
+    return max(1, int(v)) if v else None
 
 
 def async_plan() -> bool:

@@ -69,6 +69,16 @@ def _rows_active(gs_ref, g, t_start: int, bt: int, seg_len: int, S: int):
     return act
 
 
+def chunk_occupancy(counts, lo: int, hi: int):
+    """Occupancy of capacity rows ``[lo, hi)`` given full-buffer prefix
+    counts: prefix-filled buffers chunk into prefix-filled sub-buffers,
+    ``clip(counts - lo, 0, hi - lo)``.  This is what the chunked a2a↔FEC
+    pipeline (repro.models.moe) threads as per-chunk ``group_sizes`` so
+    tile-skipping stays exact chunk-locally — a chunk past a group's
+    prefix costs zero MXU tiles."""
+    return jnp.clip(counts - lo, 0, hi - lo)
+
+
 def _normalize_group_sizes(group_sizes, T: int, seg_len):
     """→ (gs [G, S] int32 clipped to [0, seg_len], seg_len) with
     S * seg_len == T.  A 1-D [G] input means one segment per group."""

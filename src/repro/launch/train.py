@@ -30,6 +30,11 @@ def main() -> None:
                     help="pipelined runtime: plan on a background thread "
                          "overlapped with device execution (default on; "
                          "REPRO_ASYNC_PLAN=0 is the env escape hatch)")
+    ap.add_argument("--a2a-chunks", type=int, default=None,
+                    help="force the MoE a2a↔FEC chunk count (sets "
+                         "REPRO_A2A_CHUNKS; default: the engine picks K "
+                         "per layer from the scheduler timeline, K=1 is "
+                         "the bit-identical serial path)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default=None,
                     help="device mesh shape: '8' (model/EP axis), "
@@ -38,6 +43,8 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.a2a_chunks is not None:
+        os.environ["REPRO_A2A_CHUNKS"] = str(args.a2a_chunks)
 
     import jax
 
@@ -89,6 +96,10 @@ def main() -> None:
               f"({s['hidden_frac']:.0%} hidden), host overhead "
               f"{s['host_overhead_s'] * 1e3:.2f}ms/step "
               f"(serial would pay {s['serial_overhead_s'] * 1e3:.2f}ms)")
+        if s["mean_a2a_gbytes"] > 0.0:
+            print(f"a2a: {s['mean_a2a_gbytes']:.3g}GB/step, "
+                  f"{s['comm_hidden_frac']:.0%} hidden under the chunked "
+                  f"expert pipeline (modeled)")
     if args.ckpt:
         from repro.checkpoint import save_train_state
         save_train_state(state, args.ckpt, step=args.steps,

@@ -127,7 +127,8 @@ def _pin_norm(y, ctx):
 
 
 def layer_apply(params, x, positions, spec: LayerSpec, cfg: ModelConfig,
-                ctx, placement=None, attn_impl: str = "auto"):
+                ctx, placement=None, attn_impl: str = "auto",
+                a2a_chunks: int = 1):
     """Pre-LN residual layer. Returns (x, moe_aux or None)."""
     x = _pin(x, ctx)
     x = x + _mixer_apply(params, _pin_norm(rmsnorm(params["norm1"], x), ctx),
@@ -145,7 +146,7 @@ def layer_apply(params, x, positions, spec: LayerSpec, cfg: ModelConfig,
             d_expert=mo.d_expert, ffn_kind=cfg.ffn_kind,
             capacity_factor=mo.capacity_factor,
             shadow_capacity_factor=mo.shadow_capacity_factor,
-            s_max=mo.s_max)
+            s_max=mo.s_max, a2a_chunks=a2a_chunks)
         x = x + y
     return x, aux
 
@@ -251,10 +252,12 @@ def moe_positions(stage: Stage) -> List[int]:
 
 def stage_apply(params, x, positions, stage: Stage, cfg: ModelConfig, ctx,
                 placements=None, attn_impl: str = "auto",
-                remat: bool = True):
+                remat: bool = True, a2a_chunks: int = 1):
     """placements: dict of arrays with leading dims [repeats, m_moe, ...]
-    (m_moe = MoE layers per macro) or None.  Returns (x, counts
-    [repeats*m_moe, ep, E] or None)."""
+    (m_moe = MoE layers per macro) or None.  ``a2a_chunks`` is one static
+    chunk count for every MoE layer in the stage (layers share a single
+    scanned trace, so a per-layer K cannot vary inside a stage).
+    Returns (x, counts [repeats*m_moe, ep, E] or None)."""
     mpos = moe_positions(stage)
 
     def body(carry, per_layer):
@@ -267,7 +270,7 @@ def stage_apply(params, x, positions, stage: Stage, cfg: ModelConfig, ctx,
                 j = mpos.index(i)
                 pl = {k: v[j] for k, v in pl_slice.items()}
             x, aux = layer_apply(layer_params[str(i)], x, positions, spec,
-                                 cfg, ctx, pl, attn_impl)
+                                 cfg, ctx, pl, attn_impl, a2a_chunks)
             if aux is not None:
                 counts_out.append(aux["counts"])
         stacked = jnp.stack(counts_out) if counts_out else jnp.zeros((0, 1, 1),

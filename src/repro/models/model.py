@@ -66,11 +66,12 @@ def _split_placements(cfg: ModelConfig, placements):
 def forward(params, tokens, cfg: ModelConfig, ctx, *, placements=None,
             attn_impl: str = "auto", prefix_embeds=None,
             frame_embeds=None, remat: bool = True,
-            return_hidden: bool = False):
+            return_hidden: bool = False, a2a_chunks: int = 1):
     """Returns (logits, aux).  aux['counts']: [L_moe, ep, E] or None.
 
     tokens [B, S] (ignored for audio); prefix_embeds [B, P, d] (vlm);
-    frame_embeds [B, S, d] (audio).
+    frame_embeds [B, S, d] (audio).  ``a2a_chunks``: static MoE a2a↔FEC
+    chunk count (repro.models.moe module docstring).
     """
     if cfg.modality == "audio":
         x = frame_embeds @ params["in_proj"]
@@ -88,7 +89,7 @@ def forward(params, tokens, cfg: ModelConfig, ctx, *, placements=None,
     for st_params, st, pl in zip(params["stages"], cfg.stages, per_stage):
         x, c = blocks.stage_apply(st_params, x, positions, st, cfg, ctx,
                                   placements=pl, attn_impl=attn_impl,
-                                  remat=remat)
+                                  remat=remat, a2a_chunks=a2a_chunks)
         if c is not None:
             counts.append(c)
     x = rmsnorm(params["final_norm"], x)
@@ -105,7 +106,8 @@ def forward(params, tokens, cfg: ModelConfig, ctx, *, placements=None,
 
 
 def loss_fn(params, batch, cfg: ModelConfig, ctx, *, placements=None,
-            attn_impl: str = "auto", remat: bool = True):
+            attn_impl: str = "auto", remat: bool = True,
+            a2a_chunks: int = 1):
     """batch: tokens/labels (+loss_mask) or frame_embeds/labels/loss_mask
     (audio) or tokens/prefix_embeds/labels (vlm)."""
     from repro import flags
@@ -116,7 +118,7 @@ def loss_fn(params, batch, cfg: ModelConfig, ctx, *, placements=None,
             params, batch.get("tokens"), cfg, ctx, placements=placements,
             attn_impl=attn_impl, prefix_embeds=batch.get("prefix_embeds"),
             frame_embeds=batch.get("frame_embeds"), remat=remat,
-            return_hidden=True)
+            return_hidden=True, a2a_chunks=a2a_chunks)
         if cfg.modality == "vlm":
             x = x[:, cfg.num_prefix_tokens:]
         from .common import chunked_unembed_xent
@@ -127,7 +129,8 @@ def loss_fn(params, batch, cfg: ModelConfig, ctx, *, placements=None,
     logits, aux = forward(
         params, batch.get("tokens"), cfg, ctx, placements=placements,
         attn_impl=attn_impl, prefix_embeds=batch.get("prefix_embeds"),
-        frame_embeds=batch.get("frame_embeds"), remat=remat)
+        frame_embeds=batch.get("frame_embeds"), remat=remat,
+        a2a_chunks=a2a_chunks)
     labels = batch["labels"]
     if cfg.modality == "vlm":
         # Loss only over the text region (labels align with text tokens).

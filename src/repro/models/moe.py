@@ -17,6 +17,21 @@ Pro-Prophet integration (the paper's primitives, traced):
   * ``Agg``   — falls out of autodiff: the vjp of the masked psum delivers
     each shadow replica's parameter gradient back to the owner.
 
+Chunked a2a↔FEC pipelining (paper §V, realized on-device): the expert
+path optionally splits its ``[E, C, d]`` capacity buffer into K chunks
+along the capacity axis.  Each chunk's send ``all_to_all``, ragged FEC,
+and return ``all_to_all`` carry **no cross-chunk data dependencies**, so
+XLA's async collective scheduler overlaps a2a(chunk k+1) with
+expert_ffn(chunk k) — forward and, through autodiff, backward.  The
+shadow ``Trans`` psum is hoisted ahead of the a2a path (and its ``Agg``
+cotangent correspondingly trails the backward chunks) so the shadow
+collective rides under the first chunk instead of serializing with it.
+K comes from the engine's scheduler timeline on profiled stats
+(``ProProphetEngine.chunk_plan``; ``REPRO_A2A_CHUNKS`` overrides); K=1
+reproduces the unchunked path bit-identically.  Per-chunk occupancies
+are threaded as ``group_sizes`` into the ragged Pallas kernels so tile
+skipping still applies chunk-locally.
+
 All collectives are conditional on axis names so the same code runs
 single-device (axis=None ⇒ identity) for CPU smoke tests.
 """
@@ -162,11 +177,53 @@ def _psum(x, axes):
     return x
 
 
+def _trans_weights(onehot, shards, fulls, *, ep_axis, fsdp_axis, pod_axis):
+    """The ``Trans`` primitive for all expert matrices at once: owners
+    contribute their expert params into the shadow slots, one psum over
+    the EP axis materializes them everywhere (autodiff of this psum is
+    ``Agg``).  ``shards``/``fulls`` are (wi, wg, wo) tuples of the local
+    FSDP shards and the gathered weights; entries may be None (no gate).
+
+    With ``REPRO_TRANS_SHARDED`` (beyond-paper §Perf) the psum runs on
+    the FSDP *shards* and the gather happens after — the EP-axis
+    all-reduce moves 1/fsdp of the bytes.
+    """
+    from repro import flags
+    # (einsum spec, gather (dim, axis) pairs) per matrix: wi/wg are
+    # [E, d, f] (gather f over fsdp, d over pod); wo is [E, f, d].
+    plans = (("se,edf->sdf", [(2, fsdp_axis), (1, pod_axis)]),   # wi
+             ("se,edf->sdf", [(2, fsdp_axis), (1, pod_axis)]),   # wg
+             ("se,efd->sfd", [(1, fsdp_axis), (2, pod_axis)]))   # wo
+    out = []
+    for (spec, gather), shard, full in zip(plans, shards, fulls):
+        if full is None:
+            out.append(None)
+        elif flags.trans_sharded():
+            out.append(_gather_weight(
+                _psum(jnp.einsum(spec, onehot.astype(shard.dtype), shard),
+                      [ep_axis]), gather))
+        else:
+            out.append(_psum(jnp.einsum(spec, onehot.astype(full.dtype),
+                                        full), [ep_axis]))
+    return tuple(out)
+
+
+def _chunk_bounds(capacity: int, num_chunks: int):
+    """Static [lo, hi) ranges splitting the capacity axis into exactly
+    ``min(num_chunks, capacity)`` balanced chunks (sizes differ by at
+    most one row) — the device always runs the K the chooser scored and
+    the telemetry reports, and the sizes stay as close to the timeline's
+    equal-chunk model as integer rows allow."""
+    k = max(1, min(int(num_chunks), capacity))
+    edges = [(i * capacity) // k for i in range(k + 1)]
+    return list(zip(edges, edges[1:]))
+
+
 def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
               shadow_devs, *, num_experts: int, capacity: int,
               shadow_capacity: int, ffn_kind: str, ep_axis: Optional[str],
               fsdp_axis: Optional[str], pod_axis: Optional[str],
-              s_max: int, use_pallas: bool = False):
+              s_max: int, use_pallas: bool = False, num_chunks: int = 1):
     """Expert-parallel MoE on local token shard.
 
     xf [T_loc, d]; gate/idx [T_loc, k]; wi/wg/wo local expert shards
@@ -174,6 +231,9 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     ``use_pallas`` routes both expert FFNs (a2a and shadow buffers)
     through the ragged Pallas kernels with the routing counts as
     group_sizes (REPRO_MOE_PALLAS; see repro.kernels.ragged_gmm).
+    ``num_chunks`` splits the a2a path along the capacity axis into a
+    dependency-free software pipeline (module docstring); 1 is the
+    bit-identical serial path.
     Returns (y [T_loc, d], counts [E] routing distribution of this EP
     member, dropped fraction scalar).
     """
@@ -204,61 +264,61 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     tok_slot = slot_of[jnp.clip(idx, 0, E)]                      # [T,k]
     use_local = tok_slot >= 0
 
-    # ---- a2a path ---------------------------------------------------------
+    # ---- shadow Trans, hoisted off the a2a critical path -----------------
+    # The psum depends only on placements and weights, so issuing it ahead
+    # of the a2a chunks lets it overlap the first chunk's wire + FEC time
+    # (and puts its Agg cotangent after the backward chunks).  The paper's
+    # operator/blockwise strategies, on-device.
+    if s_max > 0:
+        my_globals = me * e_loc + jnp.arange(e_loc)              # [E_loc]
+        onehot = (shadow_idx[:, None] == my_globals[None, :])
+        onehot = (onehot * (shadow_valid[:, None] > 0)).astype(jnp.float32)
+        sh_wi, sh_wg, sh_wo = _trans_weights(
+            onehot, (wi, wg, wo), (wi_f, wg_f, wo_f), ep_axis=ep_axis,
+            fsdp_axis=fsdp_axis, pod_axis=pod_axis)
+
+    # ---- a2a path (chunked software pipeline) ----------------------------
     a2a_expert = jnp.where(use_local, E, idx)                    # sentinel ⇒ drop
     a2a_counts = kept_counts(a2a_expert, E, capacity)            # [E]
     buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E + 1)
     buf = buf[:E]                                                # [E,C,d]
+    bounds = _chunk_bounds(capacity, num_chunks)
     if ep_axis is not None:
-        recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
-                                  tiled=True)                    # [E_loc, ep*C, d]
         # Each peer's segment of the recv buffer has its own occupancy:
-        # gather everyone's counts, keep the columns for my local experts.
+        # gather everyone's counts once, slice per chunk below.
         gs_all = jax.lax.all_gather(a2a_counts, ep_axis)         # [ep, E]
-        recv_sizes = jax.lax.dynamic_slice_in_dim(
-            gs_all, me * e_loc, e_loc, axis=1).T                 # [E_loc, ep]
-    else:
-        recv = buf
-        recv_sizes = a2a_counts[:, None]                         # [E, 1]
-    hidden = expert_ffn(ffn_kind, recv, wi_f, wo_f, wg_f,
-                        group_sizes=recv_sizes, seg_len=capacity,
-                        use_pallas=use_pallas)
-    if ep_axis is not None:
-        buf_out = jax.lax.all_to_all(hidden, ep_axis, split_axis=1,
-                                     concat_axis=0, tiled=True)  # [E,C,d]
-    else:
-        buf_out = hidden
+    # No chunk's send/FEC/return depends on any other chunk, so XLA's
+    # async scheduler can run all_to_all(chunk k+1) under the ragged FEC
+    # of chunk k (and symmetrically on the return a2a / in the backward).
+    from repro.kernels.ragged_gmm import chunk_occupancy
+    recvs, sizes = [], []
+    for lo, hi in bounds:
+        chunk = jax.lax.slice_in_dim(buf, lo, hi, axis=1)        # [E,Ck,d]
+        if ep_axis is not None:
+            recvs.append(jax.lax.all_to_all(
+                chunk, ep_axis, split_axis=0, concat_axis=1,
+                tiled=True))                                     # [E_loc, ep*Ck, d]
+            csz = chunk_occupancy(gs_all, lo, hi)                # [ep, E]
+            sizes.append(jax.lax.dynamic_slice_in_dim(
+                csz, me * e_loc, e_loc, axis=1).T)               # [E_loc, ep]
+        else:
+            recvs.append(chunk)
+            sizes.append(chunk_occupancy(a2a_counts, lo, hi)[:, None])
+    outs = []
+    for (lo, hi), recv, recv_sizes in zip(bounds, recvs, sizes):
+        hidden = expert_ffn(ffn_kind, recv, wi_f, wo_f, wg_f,
+                            group_sizes=recv_sizes, seg_len=hi - lo,
+                            use_pallas=use_pallas)
+        if ep_axis is not None:
+            hidden = jax.lax.all_to_all(hidden, ep_axis, split_axis=1,
+                                        concat_axis=0, tiled=True)  # [E,Ck,d]
+        outs.append(hidden)
+    buf_out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
     y = capacity_combine(buf_out, jnp.where(use_local, 0, idx),
                          pos, gate * (~use_local))
 
-    # ---- Pro-Prophet shadow path -----------------------------------------
+    # ---- Pro-Prophet shadow compute (weights already Trans'd above) ------
     if s_max > 0:
-        # Trans: owners contribute their expert params into the slots; one
-        # psum over the EP axis materializes them everywhere.  (Autodiff of
-        # this psum is the Agg primitive.)
-        from repro import flags
-        my_globals = me * e_loc + jnp.arange(e_loc)              # [E_loc]
-        onehot = (shadow_idx[:, None] == my_globals[None, :])
-        onehot = (onehot * (shadow_valid[:, None] > 0)).astype(wi_f.dtype)
-        if flags.trans_sharded():
-            # Beyond-paper (§Perf): psum the FSDP *shards*, gather after —
-            # the EP-axis all-reduce moves 1/fsdp of the bytes.
-            sh_wi = _gather_weight(
-                _psum(jnp.einsum("se,edf->sdf", onehot.astype(wi.dtype), wi),
-                      [ep_axis]), [(2, fsdp_axis), (1, pod_axis)])
-            sh_wo = _gather_weight(
-                _psum(jnp.einsum("se,efd->sfd", onehot.astype(wo.dtype), wo),
-                      [ep_axis]), [(1, fsdp_axis), (2, pod_axis)])
-            sh_wg = (_gather_weight(
-                _psum(jnp.einsum("se,edf->sdf", onehot.astype(wg.dtype), wg),
-                      [ep_axis]), [(2, fsdp_axis), (1, pod_axis)])
-                if wg is not None else None)
-        else:
-            sh_wi = _psum(jnp.einsum("se,edf->sdf", onehot, wi_f), [ep_axis])
-            sh_wo = _psum(jnp.einsum("se,efd->sfd", onehot, wo_f), [ep_axis])
-            sh_wg = (_psum(jnp.einsum("se,edf->sdf", onehot, wg_f),
-                           [ep_axis]) if wg_f is not None else None)
-
         s_expert = jnp.where(use_local, tok_slot, s_max)
         s_counts = kept_counts(s_expert, s_max, shadow_capacity)  # [s_max]
         sbuf, spos = capacity_dispatch(xf, s_expert, shadow_capacity,
@@ -311,13 +371,21 @@ def moe_init(key, d_model: int, d_expert: int, num_experts: int, *,
 def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
               d_expert: int, ffn_kind: str = "swiglu",
               capacity_factor: float = 1.25,
-              shadow_capacity_factor: float = 2.0, s_max: int = 8):
+              shadow_capacity_factor: float = 2.0, s_max: int = 8,
+              a2a_chunks: int = 1):
     """x [B, S, d] → (y, aux dict with routing counts / drop frac).
 
     ``placement``: dict of shadow arrays for THIS layer
     (shadow_idx [s_max] i32 — padded with ``num_experts``;
      shadow_valid [s_max] f32; shadow_devs [s_max, ep] f32) or None for
-    plain EP.  ``ctx``: repro.parallel.ParallelCtx.
+    plain EP.  ``ctx``: repro.parallel.ParallelCtx.  ``a2a_chunks``:
+    static chunk count of the a2a↔FEC software pipeline (module
+    docstring); ``REPRO_A2A_CHUNKS`` overrides, 1 ⇒ bit-identical
+    serial path.  Like every ``REPRO_*`` flag the override is read at
+    *trace* time: under a caller's jit it cannot retarget executables
+    already cached for a given ``a2a_chunks`` — set it before the
+    process jits (the trainer re-reads it per dispatch and re-keys the
+    jit cache, so the CLI/engine path is exempt from this caveat).
     """
     B, S, d = x.shape
     gate, idx, probs = router_topk(params["router"], x, top_k)
@@ -353,11 +421,12 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
     shadow_capacity = max(8, int(t_loc * top_k / max(s_max, 1)
                                  * shadow_capacity_factor)) if s_max else 8
 
+    num_chunks = _flags.a2a_chunks() or max(1, int(a2a_chunks))
     inner = functools.partial(
         moe_inner, num_experts=num_experts, capacity=capacity,
         shadow_capacity=shadow_capacity, ffn_kind=ffn_kind,
         ep_axis=ctx.ep_axis, fsdp_axis=ctx.fsdp_axis, pod_axis=ctx.pod_axis,
-        s_max=s_max, use_pallas=_flags.moe_pallas())
+        s_max=s_max, use_pallas=_flags.moe_pallas(), num_chunks=num_chunks)
 
     wg = params.get("wg")
     if ctx.mesh is None:

@@ -65,6 +65,12 @@ class StepStats:
     num_shadowed: int = 0            # total shadow slots across MoE layers
     placements_version: int = 0      # engine version consumed at dispatch
     placements_fingerprint: str = "" # digest of the dispatched arrays
+    # Chunked a2a↔FEC pipelining (repro.models.moe): the K this step was
+    # dispatched with, modeled a2a traffic, and the timeline's modeled
+    # fraction of a2a wire time hidden under the ragged expert compute.
+    a2a_chunks: int = 1
+    a2a_gbytes: float = 0.0
+    comm_hidden_frac: float = 0.0
 
     @property
     def hidden_frac(self) -> float:
@@ -81,6 +87,10 @@ class StepStats:
                      f" hidden={self.hidden_frac:.0%}"
                      f" plan_speedup={self.plan_speedup:.2f}x"
                      f" shadows={self.num_shadowed}")
+        if self.a2a_gbytes > 0.0:
+            extra += (f" a2a={self.a2a_gbytes:.3g}GB"
+                      f" chunks={self.a2a_chunks}"
+                      f" comm_hidden={self.comm_hidden_frac:.0%}")
         return (f"step {self.step:5d} loss {self.loss:.4f} "
                 f"({avg_step:.3f}s/it){extra}")
 
@@ -98,18 +108,25 @@ class OverlapTelemetry:
         self.step_times: List[float] = []
         self.exposed_times: List[float] = []
         self.upload_times: List[float] = []
+        self.comm_hidden_fracs: List[float] = []
+        self.a2a_gbytes: List[float] = []
 
     def record(self, *, plan: float, step: float, exposed: float,
-               upload: float = 0.0) -> None:
+               upload: float = 0.0, comm_hidden: float = 0.0,
+               a2a_gbytes: float = 0.0) -> None:
         self.plan_times.append(float(plan))
         self.step_times.append(float(step))
         self.exposed_times.append(float(exposed))
         self.upload_times.append(float(upload))
+        self.comm_hidden_fracs.append(float(comm_hidden))
+        self.a2a_gbytes.append(float(a2a_gbytes))
 
     def record_stats(self, stats: StepStats) -> None:
         self.record(plan=stats.plan_time, step=stats.step_time,
                     exposed=stats.exposed_plan_time,
-                    upload=stats.upload_time)
+                    upload=stats.upload_time,
+                    comm_hidden=stats.comm_hidden_frac,
+                    a2a_gbytes=stats.a2a_gbytes)
 
     @property
     def hidden_frac(self) -> float:
@@ -133,6 +150,10 @@ class OverlapTelemetry:
             # fully serial runtime would pay (plan + upload every step).
             "host_overhead_s": (exposed + upload) / n,
             "serial_overhead_s": (plan + upload) / n,
+            # Device-side chunked-pipeline telemetry (modeled from the
+            # scheduler timeline on the dispatched chunk plan).
+            "comm_hidden_frac": sum(self.comm_hidden_fracs) / n,
+            "mean_a2a_gbytes": sum(self.a2a_gbytes) / n,
         }
 
 

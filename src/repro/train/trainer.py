@@ -31,6 +31,13 @@ Planning is one-step-delayed by design (the locality property), so both
 runtimes compute *identical* losses and placements — the async mode only
 changes when the host work happens.  ``tests/test_async_runtime.py``
 asserts bit-identical histories.
+
+Both runtimes also dispatch the device-side chunked a2a↔FEC pipeline
+(repro.models.moe): per step the engine's scheduler timeline picks the
+chunk count K from the profiled stats (``Trainer._chunks_for_dispatch``;
+``REPRO_A2A_CHUNKS`` overrides), the jitted step is specialized on K
+(static arg, quantized to a few candidates), and the modeled a2a bytes /
+hidden-comm fraction surface in :class:`~repro.train.runtime.StepStats`.
 """
 from __future__ import annotations
 
@@ -61,13 +68,17 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
                     *, attn_impl: str = "auto", remat: bool = True,
                     donate: bool = True) -> Callable:
     """Build the jitted train step.  ``placements`` may be None (plain EP)
-    or the engine's stacked arrays — each choice compiles once."""
+    or the engine's stacked arrays; ``a2a_chunks`` is the static MoE
+    a2a↔FEC chunk count — each (placements-shape, K) choice compiles
+    once, and K is quantized to a few candidates by the engine so the
+    jit cache stays small."""
 
-    def step(state: TrainState, batch, placements=None):
+    def step(state: TrainState, batch, placements=None, a2a_chunks=1):
         def lf(params):
             return model_lib.loss_fn(params, batch, cfg, ctx,
                                      placements=placements,
-                                     attn_impl=attn_impl, remat=remat)
+                                     attn_impl=attn_impl, remat=remat,
+                                     a2a_chunks=a2a_chunks)
         (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
         updates, opt = optimizer.update(grads, state.opt, state.params)
         params = apply_updates(state.params, updates)
@@ -76,7 +87,8 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
             metrics["counts"] = aux["counts"]
         return TrainState(params, opt), metrics
 
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+    return jax.jit(step, donate_argnums=(0,) if donate else (),
+                   static_argnames=("a2a_chunks",))
 
 
 @dataclasses.dataclass
@@ -90,6 +102,8 @@ class _Pending:
     version: int
     fingerprint: str
     plan: Optional[PlanEvent] = None
+    a2a_chunks: int = 1
+    chunk_stats: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -149,6 +163,7 @@ class Trainer:
     @staticmethod
     def _stats_for(pending: _Pending, loss: float, t_next: float) -> StepStats:
         ev = pending.plan
+        cs = pending.chunk_stats or {}
         return StepStats(
             step=pending.step, loss=loss,
             step_time=t_next - pending.t_dispatch,
@@ -159,7 +174,24 @@ class Trainer:
             num_shadowed=ev.num_shadowed if ev else 0,
             placements_version=pending.version,
             placements_fingerprint=pending.fingerprint,
+            a2a_chunks=pending.a2a_chunks,
+            a2a_gbytes=cs.get("a2a_gbytes", 0.0),
+            comm_hidden_frac=cs.get("comm_hidden_frac", 0.0),
         )
+
+    def _chunks_for_dispatch(self) -> tuple:
+        """(K, modeled chunk stats) for the next dispatch.  The engine's
+        per-layer scheduler choice is collapsed to one K (layers share a
+        single scanned trace — repro.models.blocks.stage_apply) by
+        majority, smallest on ties; ``REPRO_A2A_CHUNKS`` overrides via
+        ``chunk_plan``.  Must run on the dispatch path *after* the
+        pipeline's ``wait()`` — it reads engine state."""
+        if self.engine is None:
+            k = flags.a2a_chunks() or 1
+            return k, None
+        plan = self.engine.chunk_plan()
+        k = max(sorted(set(plan)), key=plan.count) if plan else 1
+        return k, self.engine.chunk_stats([k] * len(plan))
 
     # -- serial baseline -------------------------------------------------
     def _run_sync(self, state, it, num_steps, log_every, log_fn,
@@ -170,15 +202,17 @@ class Trainer:
         for step in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
             placements = cache.arrays_for_dispatch()
+            chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
-            state, metrics = self._step_fn(state, batch, placements)
+            state, metrics = self._step_fn(state, batch, placements,
+                                           a2a_chunks=chunks)
             loss = float(metrics["loss"])          # blocks on the device
             plan = None
             if self.engine is not None and "counts" in metrics:
                 plan = self._observe_inline(metrics["counts"])
             pending = _Pending(step, metrics, t_dispatch,
                                cache.last_upload_time, cache.version,
-                               cache.fingerprint, plan)
+                               cache.fingerprint, plan, chunks, chunk_stats)
             self._emit(self._stats_for(pending, loss, time.perf_counter()),
                        history, t0, log_every, log_fn, stats_sink, telemetry)
         return state, history
@@ -201,8 +235,12 @@ class Trainer:
                 if pending is not None:
                     pending.plan = event
                 placements = cache.arrays_for_dispatch()
+                # Safe to read engine state here: the planner worker is
+                # idle between wait() and the submit() below.
+                chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
-                state, metrics = self._step_fn(state, batch, placements)
+                state, metrics = self._step_fn(state, batch, placements,
+                                               a2a_chunks=chunks)
                 if pipeline is not None and "counts" in metrics:
                     pipeline.submit(metrics["counts"])
                 # Consume the *previous* step's loss only now — the device
@@ -215,7 +253,9 @@ class Trainer:
                                telemetry)
                 pending = _Pending(step, metrics, t_dispatch,
                                    cache.last_upload_time, cache.version,
-                                   cache.fingerprint)
+                                   cache.fingerprint,
+                                   a2a_chunks=chunks,
+                                   chunk_stats=chunk_stats)
             # Drain: the final step's loss and its (now unused) plan.
             if pipeline is not None:
                 final_event = pipeline.wait()

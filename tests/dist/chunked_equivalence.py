@@ -1,0 +1,153 @@
+"""8-host-device check of the chunked a2a↔FEC pipeline on a (2, 4) mesh.
+
+Part 1 — layer level: moe_apply with K ∈ {2, 4} capacity chunks must be
+bit-identical to K=1 in the forward (chunking only re-tiles the capacity
+axis; per-token math is untouched), with identical routing counts and
+dropped-token telemetry, and gradients equal to summation round-off —
+including the shadow (Trans/Agg) path.
+
+Part 2 — trainer level (the acceptance criterion): ≥8 steps with
+REPRO_A2A_CHUNKS=1 are bit-identical to the engine-driven default (which
+resolves to K=1 on this hardware profile) in losses, placements, and
+drop telemetry; a forced K=2 run keeps identical placements, tracks the
+K=1 losses, and reports a modeled hidden-comm fraction > 0 with a
+strictly lower chunked timeline makespan.
+
+Run by tests/test_distributed.py in a subprocess so the XLA device count
+is set before jax initializes.
+"""
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import EngineConfig, HardwareSpec, ProProphetEngine
+from repro.data import SyntheticLM
+from repro.models import moe
+from repro.optim import adamw, cosine
+from repro.parallel import make_ctx
+from repro.train import Trainer
+from repro.train.runtime import OverlapTelemetry
+from jax.sharding import Mesh
+
+
+def layer_equivalence(mesh):
+    ctx = make_ctx(mesh)
+    E, d, f = 8, 16, 32
+    placement = {
+        "shadow_idx": jnp.array([2, E], jnp.int32),
+        "shadow_valid": jnp.array([1.0, 0.0], jnp.float32),
+        "shadow_devs": jnp.array([[0.0, 1.0, 1.0, 0.0],
+                                  [0.0, 0.0, 0.0, 0.0]], jnp.float32),
+    }
+    kw = dict(num_experts=E, top_k=2, d_expert=f, ffn_kind="swiglu",
+              capacity_factor=2.0, shadow_capacity_factor=4.0, s_max=2)
+
+    def run(k, params, x, pl):
+        y, aux = moe.moe_apply(params, x, pl, ctx, a2a_chunks=k, **kw)
+
+        def loss(p):
+            yy, _ = moe.moe_apply(p, x, pl, ctx, a2a_chunks=k, **kw)
+            return jnp.sum(yy ** 2)
+
+        return y, aux, jax.grad(loss)(params)
+
+    for seed, pl in ((0, None), (1, placement)):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        params = moe.moe_init(ks[0], d, f, E, ffn_kind="swiglu")
+        # bias the router so chunks see skewed, ragged occupancy
+        params["router"]["w"] = (params["router"]["w"]
+                                 + 2.0 * jax.random.normal(ks[2], (E,)))
+        x = 0.5 * jax.random.normal(ks[1], (2, 16, d))
+        y1, aux1, g1 = run(1, params, x, pl)
+        for k in (2, 4):
+            yk, auxk, gk = run(k, params, x, pl)
+            np.testing.assert_array_equal(np.asarray(y1), np.asarray(yk))
+            np.testing.assert_array_equal(np.asarray(aux1["counts"]),
+                                          np.asarray(auxk["counts"]))
+            assert float(aux1["dropped"]) == float(auxk["dropped"])
+            for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gk)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-6)
+    print("CHUNKED_LAYER_EQUIVALENCE_PASS")
+
+
+def make_engine(cfg, ctx):
+    """Compute-bound profile with zero balance tolerance: the planner
+    shadows aggressively (placements actually change mid-run) while the
+    scheduler's chunk chooser resolves to K=1 (tiny a2a vs the per-chunk
+    overhead) — so the engine-driven default is the K=1 path."""
+    hw = HardwareSpec.from_model_dims(cfg.d_model, cfg.moe.d_expert,
+                                      bandwidth=1e12, flops_per_s=1e12,
+                                      num_ffn_mats=3)
+    ec = EngineConfig(num_experts=cfg.moe.num_experts,
+                      num_devices=ctx.ep_size,
+                      num_moe_layers=cfg.num_moe_layers,
+                      s_max=cfg.moe.s_max, alpha=0.0)
+    return ProProphetEngine(ec, hw)
+
+
+def trainer_equivalence(mesh):
+    ctx = make_ctx(mesh)
+    cfg = reduced(get_config("moe-gpt-s"))   # 4 experts over EP=4
+    steps = 8
+    tr = Trainer(cfg, ctx, adamw(cosine(3e-3, 3, steps)), attn_impl="naive",
+                 remat=False, engine=make_engine(cfg, ctx))
+
+    def run(k_env):
+        if k_env is not None:
+            os.environ["REPRO_A2A_CHUNKS"] = str(k_env)
+        try:
+            tr.engine = make_engine(cfg, ctx)
+            state = tr.init_state(jax.random.PRNGKey(0))
+            data = SyntheticLM(cfg, batch=4, seq=32)
+            sink, tel = [], OverlapTelemetry()
+            with mesh:
+                _, hist = tr.run(state, data, num_steps=steps, log_every=0,
+                                 stats_sink=sink, telemetry=tel)
+            return hist, sink, tel
+        finally:
+            os.environ.pop("REPRO_A2A_CHUNKS", None)
+
+    hist_d, sink_d, _ = run(None)     # engine-driven default
+    hist_1, sink_1, _ = run(1)        # forced bit-identical path
+    hist_2, sink_2, tel_2 = run(2)    # forced chunked path
+
+    # K=1 ≡ the engine-driven path, bit-identical over 8 steps
+    assert [s.a2a_chunks for s in sink_d] == [1] * steps
+    assert hist_d == hist_1, (hist_d, hist_1)
+    assert [s.placements_fingerprint for s in sink_d] == \
+        [s.placements_fingerprint for s in sink_1]
+
+    # K=2: identical placements (planning sees identical integer counts),
+    # losses within float round-off drift of the K=1 history
+    assert [s.a2a_chunks for s in sink_2] == [2] * steps
+    assert [s.placements_fingerprint for s in sink_2] == \
+        [s.placements_fingerprint for s in sink_1]
+    np.testing.assert_allclose(hist_1, hist_2, rtol=5e-2)
+    # the run exercised real replanning (not a static placement)
+    assert len(set(s.placements_fingerprint for s in sink_1)) > 1
+
+    # modeled overlap telemetry: chunking hides comm, K=1 hides none
+    s2 = tel_2.summary()
+    assert s2["comm_hidden_frac"] > 0.0, s2
+    assert s2["mean_a2a_gbytes"] > 0.0, s2
+    assert all(s.comm_hidden_frac == 0.0 for s in sink_1)
+    # strictly lower chunked timeline makespan for the skewed loads
+    stats = tr.engine.chunk_stats([2] * cfg.num_moe_layers)
+    assert stats["chunked_s"] < stats["serial_s"], stats
+    print("CHUNKED_TRAINER_EQUIVALENCE_PASS")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    layer_equivalence(mesh)
+    trainer_equivalence(mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Chunked a2a↔FEC pipelining: engine chunk choice, perfmodel coupling,
+trainer dispatch, and telemetry (the §V scheduler realized on-device).
+
+Device-path numerics live in tests/test_moe.py (single device) and
+tests/dist/chunked_equivalence.py (mesh subprocess); this module covers
+the host-side machinery that picks and reports K.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import flags
+from repro.core import (EngineConfig, HardwareSpec, PerfModel,
+                        ProProphetEngine, chunked_makespan)
+from repro.train.runtime import OverlapTelemetry, StepStats
+
+
+def _engine(bandwidth=5e9, flops=100e12, layers=2, d=4, e=8, **kw):
+    hw = HardwareSpec.from_model_dims(512, 1024, bandwidth=bandwidth,
+                                      flops_per_s=flops, num_ffn_mats=3)
+    cfg = EngineConfig(num_experts=e, num_devices=d, num_moe_layers=layers,
+                       s_max=4, **kw)
+    return ProProphetEngine(cfg, hw)
+
+
+def _skewed(d=4, e=8, hot=0, tokens=5000.0):
+    g = np.full((d, e), 500.0)
+    g[:, hot] = tokens
+    return g
+
+
+class TestEngineChunkPlan:
+    def test_k1_before_any_stats(self):
+        eng = _engine()
+        assert eng.chunk_plan() == [1, 1]
+
+    def test_comm_heavy_stats_pick_k_above_one(self):
+        eng = _engine(bandwidth=5e9, flops=100e12)
+        eng.observe([_skewed(), _skewed(hot=3)])
+        plan = eng.chunk_plan()
+        assert all(k > 1 for k in plan)
+        assert all(k in eng.cfg.a2a_chunk_candidates for k in plan)
+
+    def test_tiny_a2a_keeps_bit_identical_path(self):
+        # compute-bound profile: the 2·t_a2a/K saving is below the
+        # per-chunk launch overhead, so the chooser stays at K=1
+        eng = _engine(bandwidth=1e13, flops=1e12)
+        eng.observe([_skewed(), _skewed()])
+        assert eng.chunk_plan() == [1, 1]
+
+    def test_flag_override(self, monkeypatch):
+        eng = _engine()
+        eng.observe([_skewed(), _skewed()])
+        monkeypatch.setenv("REPRO_A2A_CHUNKS", "3")
+        assert eng.chunk_plan() == [3, 3]
+        assert flags.a2a_chunks() == 3
+
+    def test_chunk_stats_surface(self):
+        eng = _engine(bandwidth=5e9, flops=100e12)
+        # before stats: empty but well-formed
+        s0 = eng.chunk_stats()
+        assert s0["comm_hidden_frac"] == 0.0 and s0["a2a_gbytes"] == 0.0
+        eng.observe([_skewed(), _skewed()])
+        s = eng.chunk_stats([2, 2])
+        assert s["chunked_s"] < s["serial_s"]
+        assert 0.0 < s["comm_hidden_frac"] <= 1.0
+        assert s["a2a_gbytes"] > 0.0
+        assert s["mean_chunks"] == 2.0
+        # K=1 plan models zero hidden comm
+        s1 = eng.chunk_stats([1, 1])
+        assert s1["comm_hidden_frac"] == 0.0
+        assert s1["chunked_s"] == pytest.approx(s1["serial_s"])
+
+
+class TestPerfModelCoupling:
+    def test_k1_reproduces_eq8(self):
+        """layer_time_chunked(K=1) must equal layer_time_scheduled — the
+        model analog of the device path's K=1 bit-identity."""
+        hw = HardwareSpec.from_model_dims(512, 1024, bandwidth=10e9,
+                                          flops_per_s=35e12, t_fnec=1e-3,
+                                          t_bnec=2e-3)
+        pm = PerfModel(hw, 16)
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            R = rng.uniform(0, 4000, size=16)
+            H = rng.uniform(100, 8000, size=16)
+            s, n = int(rng.integers(0, 8)), int(rng.integers(0, 4))
+            assert pm.layer_time_chunked(R, H, s, n, 1) == pytest.approx(
+                pm.layer_time_scheduled(R, H, s, n), rel=1e-12)
+
+    def test_chunking_never_hurts_the_model(self):
+        hw = HardwareSpec.from_model_dims(512, 1024, bandwidth=10e9,
+                                          flops_per_s=35e12)
+        pm = PerfModel(hw, 16)
+        R = np.full(16, 4000.0)
+        H = np.full(16, 4000.0)
+        ts = [pm.layer_time_chunked(R, H, 2, 0, k) for k in (1, 2, 4, 8)]
+        assert all(b <= a + 1e-15 for a, b in zip(ts, ts[1:]))
+        assert ts[1] < ts[0]          # skewed-load acceptance shape
+
+    def test_closed_form_tracks_timeline_with_bec(self):
+        """The backward pipeline term (BEC = 2·FEC per chunk) is the same
+        closed form on doubled compute."""
+        A, F, K = 2e-3, 3e-3, 4
+        assert PerfModel.chunked_path_time(A, 2 * F, K) == pytest.approx(
+            chunked_makespan(A, 2 * F, K), rel=1e-12)
+
+
+class TestTrainerDispatch:
+    class _StubEngine:
+        def __init__(self, plan, stats=None):
+            self._plan = plan
+            self._stats = stats or {"comm_hidden_frac": 0.25,
+                                    "a2a_gbytes": 1.5}
+            self.asked = []
+
+        def chunk_plan(self):
+            return list(self._plan)
+
+        def chunk_stats(self, plan=None):
+            self.asked.append(plan)
+            return dict(self._stats)
+
+    def _chunks(self, plan):
+        from repro.train.trainer import Trainer
+        tr = Trainer.__new__(Trainer)          # no jit compile needed
+        tr.engine = self._StubEngine(plan)
+        return tr._chunks_for_dispatch()
+
+    def test_majority_collapse_smallest_on_tie(self):
+        assert self._chunks([1, 2, 2])[0] == 2
+        assert self._chunks([1, 2])[0] == 1    # tie ⇒ smallest
+        assert self._chunks([4, 4, 1, 1, 4])[0] == 4
+
+    def test_stats_follow_dispatched_plan(self):
+        from repro.train.trainer import Trainer
+        tr = Trainer.__new__(Trainer)
+        eng = self._StubEngine([2, 4, 2])
+        tr.engine = eng
+        k, stats = tr._chunks_for_dispatch()
+        assert k == 2
+        assert eng.asked == [[2, 2, 2]]        # stats for what ran
+        assert stats["comm_hidden_frac"] == 0.25
+
+    def test_no_engine_uses_flag(self, monkeypatch):
+        from repro.train.trainer import Trainer
+        tr = Trainer.__new__(Trainer)
+        tr.engine = None
+        assert tr._chunks_for_dispatch() == (1, None)
+        monkeypatch.setenv("REPRO_A2A_CHUNKS", "4")
+        assert tr._chunks_for_dispatch() == (4, None)
+
+
+@pytest.mark.slow
+class TestTrainerEndToEnd:
+    def test_forced_k2_trains_and_reports(self, monkeypatch):
+        """REPRO_A2A_CHUNKS=2 end to end: the step dispatches with K=2,
+        telemetry carries it, and losses track the K=1 run closely."""
+        from repro.configs import get_config, reduced
+        from repro.data import SyntheticLM
+        from repro.optim import adamw, cosine
+        from repro.parallel import local_ctx
+        from repro.train import Trainer
+        from repro.train.trainer import make_engine_for
+
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+
+        def run(k_env):
+            if k_env:
+                monkeypatch.setenv("REPRO_A2A_CHUNKS", str(k_env))
+            else:
+                monkeypatch.delenv("REPRO_A2A_CHUNKS", raising=False)
+            tr = Trainer(cfg, ctx, adamw(cosine(3e-3, 2, 4)),
+                         attn_impl="naive", remat=False,
+                         engine=make_engine_for(cfg, ctx))
+            state = tr.init_state(jax.random.PRNGKey(0))
+            sink = []
+            _, hist = tr.run(state, SyntheticLM(cfg, batch=2, seq=16),
+                             num_steps=4, log_every=0, stats_sink=sink)
+            monkeypatch.delenv("REPRO_A2A_CHUNKS", raising=False)
+            return hist, sink
+
+        h1, s1 = run(1)
+        h2, s2 = run(2)
+        assert [st.a2a_chunks for st in s1] == [1] * 4
+        assert [st.a2a_chunks for st in s2] == [2] * 4
+        np.testing.assert_allclose(h1, h2, rtol=5e-2)
+        assert [a.placements_fingerprint for a in s1] == \
+            [b.placements_fingerprint for b in s2]
+
+
+class TestTelemetrySurface:
+    def test_step_stats_log_line(self):
+        st = StepStats(step=1, loss=2.0, step_time=0.5, a2a_chunks=2,
+                       a2a_gbytes=3.25, comm_hidden_frac=0.4)
+        line = st.log_line(0.5)
+        assert "a2a=3.25GB" in line and "chunks=2" in line
+        assert "comm_hidden=40%" in line
+        # no a2a traffic ⇒ no chunk spam in the log
+        assert "chunks" not in StepStats(step=0, loss=1.0,
+                                         step_time=0.1).log_line(0.1)
+
+    def test_overlap_telemetry_means(self):
+        tel = OverlapTelemetry()
+        tel.record(plan=0.1, step=1.0, exposed=0.0, comm_hidden=0.5,
+                   a2a_gbytes=2.0)
+        tel.record(plan=0.1, step=1.0, exposed=0.0, comm_hidden=0.0,
+                   a2a_gbytes=0.0)
+        s = tel.summary()
+        assert s["comm_hidden_frac"] == pytest.approx(0.25)
+        assert s["mean_a2a_gbytes"] == pytest.approx(1.0)
+
+    def test_record_stats_carries_chunk_fields(self):
+        tel = OverlapTelemetry()
+        tel.record_stats(StepStats(step=0, loss=1.0, step_time=0.2,
+                                   comm_hidden_frac=0.3, a2a_gbytes=1.0))
+        assert tel.comm_hidden_fracs == [0.3]
+        assert tel.a2a_gbytes == [1.0]

@@ -138,3 +138,88 @@ class TestShadowInvariance:
         x = 0.5 * jax.random.normal(ks[1], (2, 8, 16))
         y, _ = self._apply(params, x, None)
         assert y.shape == x.shape
+
+
+class TestChunkedA2aPipeline:
+    """Chunked a2a↔FEC software pipeline (single device; the mesh run
+    lives in tests/dist/chunked_equivalence.py).  Chunking only re-tiles
+    the capacity axis — per-token math is untouched — so the forward is
+    bit-identical for every K and the backward matches to summation
+    round-off (per-chunk dw partials accumulate in a different order)."""
+
+    E, D, F = 4, 16, 32
+
+    def _setup(self, seed=0, skew=2.0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        params = moe.moe_init(ks[0], self.D, self.F, self.E,
+                              ffn_kind="swiglu")
+        # router bias ⇒ skewed loads, so chunks have ragged occupancy
+        params["router"]["w"] = (params["router"]["w"]
+                                 + skew * jax.random.normal(ks[2], (self.E,)))
+        x = 0.5 * jax.random.normal(ks[1], (2, 16, self.D))
+        return params, x
+
+    def _placement(self):
+        return {
+            "shadow_idx": jnp.array([1, self.E], jnp.int32),
+            "shadow_valid": jnp.array([1.0, 0.0], jnp.float32),
+            "shadow_devs": jnp.array([[1.0], [0.0]], jnp.float32),
+        }
+
+    def _run(self, params, x, placement, k):
+        ctx = local_ctx()
+        kw = dict(num_experts=self.E, top_k=2, d_expert=self.F,
+                  ffn_kind="swiglu", capacity_factor=2.0,
+                  shadow_capacity_factor=4.0, s_max=2, a2a_chunks=k)
+        y, aux = moe.moe_apply(params, x, placement, ctx, **kw)
+
+        def loss(p):
+            yy, _ = moe.moe_apply(p, x, placement, ctx, **kw)
+            return jnp.sum(yy ** 2)
+
+        return y, aux, jax.grad(loss)(params)
+
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    @pytest.mark.parametrize("shadowed", [False, True])
+    def test_chunked_equivalent_to_serial(self, k, shadowed):
+        params, x = self._setup()
+        pl = self._placement() if shadowed else None
+        y1, aux1, g1 = self._run(params, x, pl, 1)
+        yk, auxk, gk = self._run(params, x, pl, k)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(yk))
+        np.testing.assert_array_equal(np.asarray(aux1["counts"]),
+                                      np.asarray(auxk["counts"]))
+        assert float(aux1["dropped"]) == float(auxk["dropped"])
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gk)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_flag_overrides_chunk_count(self, monkeypatch):
+        params, x = self._setup()
+        y1, _, _ = self._run(params, x, None, 1)
+        monkeypatch.setenv("REPRO_A2A_CHUNKS", "3")
+        y3, _, _ = self._run(params, x, None, 1)   # flag wins over the arg
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+    def test_chunk_bounds(self):
+        assert moe._chunk_bounds(8, 1) == [(0, 8)]
+        assert moe._chunk_bounds(8, 2) == [(0, 4), (4, 8)]
+        assert moe._chunk_bounds(3, 8) == [(0, 1), (1, 2), (2, 3)]
+        # exactly min(K, capacity) chunks, every row covered exactly
+        # once, balanced sizes (differ by ≤ 1 row) — the device runs the
+        # K the chooser scored
+        for cap, k in [(17, 4), (5, 5), (9, 2), (9, 8), (8, 3)]:
+            b = moe._chunk_bounds(cap, k)
+            assert len(b) == min(k, cap)
+            assert b[0][0] == 0 and b[-1][1] == cap
+            assert all(x[1] == y[0] for x, y in zip(b, b[1:]))
+            sizes = [hi - lo for lo, hi in b]
+            assert max(sizes) - min(sizes) <= 1
+
+    def test_chunk_occupancy_prefix_semantics(self):
+        from repro.kernels.ragged_gmm import chunk_occupancy
+        counts = jnp.array([0, 3, 5, 8], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(chunk_occupancy(counts, 0, 4)), [0, 3, 4, 4])
+        np.testing.assert_array_equal(
+            np.asarray(chunk_occupancy(counts, 4, 8)), [0, 0, 1, 4])

@@ -7,7 +7,10 @@ try:
 except ImportError:  # fallback shim — see requirements-dev.txt
     from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core import BlockCosts, build_graph, iteration_time, list_schedule, simulate, split_trans
+from repro.core import (BlockCosts, PerfModel, build_graph, choose_chunks,
+                        chunked_expert_graph, chunked_makespan,
+                        hidden_comm_fraction, iteration_time, list_schedule,
+                        simulate, split_trans)
 
 pos = st.floats(0.05, 5.0)
 
@@ -77,6 +80,61 @@ class TestTimeline:
     def test_split_trans(self):
         assert split_trans(3.0, 5.0, 1.0) == (3.0, 0.0)
         assert split_trans(7.0, 5.0, 1.0) == (5.0, 2.0)
+
+
+class TestChunkedPipeline:
+    """The chunked a2a↔FEC timeline that drives the device path's K
+    (repro.models.moe) — §V realized on-device."""
+
+    def test_k1_is_serial_chain(self):
+        assert chunked_makespan(1.5, 2.0, 1) == pytest.approx(2 * 1.5 + 2.0)
+
+    @given(pos, pos, st.integers(1, 8),
+           st.floats(0.0, 0.2))
+    @settings(max_examples=60, deadline=None)
+    def test_closed_form_matches_timeline(self, a2a, fec, k, overhead):
+        """PerfModel's eq.-8-style chunked term is the exact closed form
+        of the list-scheduled timeline (same graph, same program order)."""
+        tl = chunked_makespan(a2a, fec, k, chunk_overhead=overhead)
+        cf = PerfModel.chunked_path_time(a2a, fec, k, chunk_overhead=overhead)
+        assert tl == pytest.approx(cf, rel=1e-12, abs=1e-15)
+
+    @given(pos, pos)
+    @settings(max_examples=40, deadline=None)
+    def test_chunking_monotone_without_overhead(self, a2a, fec):
+        ts = [chunked_makespan(a2a, fec, k) for k in (1, 2, 4, 8)]
+        for t0, t1 in zip(ts, ts[1:]):
+            assert t1 <= t0 + 1e-12
+        # never below the resource lower bounds
+        assert ts[-1] >= max(2 * a2a, fec) - 1e-12
+
+    def test_k2_strictly_lower_for_balanced_costs(self):
+        """The acceptance shape: both a2a and FEC nonzero ⇒ chunking
+        strictly beats the serial path."""
+        assert chunked_makespan(1.0, 1.0, 2) < chunked_makespan(1.0, 1.0, 1)
+
+    def test_choose_chunks_overhead_keeps_k1(self):
+        # a2a far below the per-chunk launch cost ⇒ stay bit-identical
+        assert choose_chunks(1e-7, 1e-2, chunk_overhead=2e-5) == 1
+        # comm-heavy, free chunking ⇒ take the largest candidate
+        assert choose_chunks(1.0, 2.0, candidates=(1, 2, 4)) == 4
+        # zero-cost path ⇒ smallest K on ties
+        assert choose_chunks(0.0, 0.0) == 1
+
+    def test_hidden_comm_fraction(self):
+        assert hidden_comm_fraction(1.0, 2.0, 1) == 0.0
+        h2 = hidden_comm_fraction(1.0, 2.0, 2)
+        h4 = hidden_comm_fraction(1.0, 2.0, 4)
+        assert 0.0 < h2 <= h4 <= 1.0
+        assert hidden_comm_fraction(0.0, 2.0, 4) == 0.0
+
+    def test_graph_is_valid_and_complete(self):
+        g = chunked_expert_graph(1.0, 0.5, 3, prefix="x")
+        tl = list_schedule(g)
+        tl.validate(g)
+        assert len(tl.ops) == 3 * 3
+        # send of chunk 1 runs while chunk 0's FEC computes
+        assert tl.span("xa2a1_c1").start < tl.span("xfec_c0").end
 
 
 class TestGraph:
