@@ -1,8 +1,11 @@
 """Fig. 16 analog: balance capability — RB (balance-degree ratio) of the
-planner vs FasterMoE across layers and k."""
+planner vs FasterMoE across layers and k — plus the migration policy
+sweep's balance rows (shadow / migrate / both greedy strategies on the
+same traces, E = 4·D so owner re-layout has slack to re-home into)."""
 import numpy as np
 
-from .simlib import SimConfig, simulate
+from .simlib import (MIGRATION_STRATEGIES, SimConfig, migration_sweep,
+                     simulate)
 
 
 def run(iters: int = 20):
@@ -18,4 +21,12 @@ def run(iters: int = 20):
             rows.append((f"balance/k{k}/layer{seed}/rb_ratio_pp_over_fm",
                          0.0, rb_pp / max(rb_fm, 1e-9)))
             rows.append((f"balance/k{k}/layer{seed}/rb_planner", 0.0, rb_pp))
+    # Migration policy sweep: RB and steady-state Trans bytes per greedy
+    # strategy — derived column is RB, us column the per-step Trans+Agg
+    # traffic in KB (what a migrated expert stops paying).
+    sweep = migration_sweep(SimConfig(model="moe-gpt-m", iters=iters))
+    for strategy in MIGRATION_STRATEGIES:
+        s = sweep[strategy]
+        rows.append((f"balance/migration/{strategy}/rb",
+                     s["trans_gb"] * 1e6, s["rb"]))
     return rows

@@ -12,9 +12,18 @@ The ``a2a_chunks_k*`` rows are the chunked a2a↔FEC K-sweep (the device
 pipeline in repro.models.moe): simulated iteration time with both expert
 paths chunked at K, derived = step speedup over the serial K=1 timeline
 (strictly > 1 for K > 1 on these skewed loads — the chunked-overlap
-acceptance shape)."""
-from .simlib import (CLUSTERS, SimConfig, chunk_sweep, host_overlap,
-                     simulate, speedup)
+acceptance shape).
+
+The ``migration/*`` rows are the dynamic-expert-migration policy sweep
+(owner re-layout, repro.core.planner strategies): per strategy the
+simulated iteration time (µs) and derived = iteration speedup over the
+shadow-only planner; the ``trans_gb`` rows report the modeled
+steady-state Trans+Agg traffic each strategy pays per step, derived =
+its reduction factor vs shadow-only (the acceptance shape: migration
+drives steady-state comm below the shadow-only baseline on
+persistent-skew traces)."""
+from .simlib import (CLUSTERS, MIGRATION_STRATEGIES, SimConfig, chunk_sweep,
+                     host_overlap, migration_sweep, simulate, speedup)
 
 MODELS = ["moe-gpt-s", "moe-gpt-m", "moe-gpt-l", "moe-gpt-ds", "moe-gpt-dm"]
 CHUNK_KS = (1, 2, 4, 8)
@@ -54,4 +63,20 @@ def run(iters: int = 20):
                             f"e2e/{cluster}/{model}/a2a_chunks_k{ck}",
                             sweep[ck]["iter_s"] * 1e6,
                             sweep[1]["iter_s"] / sweep[ck]["iter_s"]))
+                    mig = migration_sweep(
+                        SimConfig(model=model, cluster=cluster,
+                                  devices=devices, tokens=tokens,
+                                  top_k=k, iters=min(iters, 10)))
+                    base = mig["shadow"]
+                    for strategy in MIGRATION_STRATEGIES:
+                        s = mig[strategy]
+                        rows.append((
+                            f"e2e/{cluster}/{model}/migration/{strategy}",
+                            s["iter_s"] * 1e6,
+                            base["iter_s"] / max(s["iter_s"], 1e-12)))
+                        rows.append((
+                            f"e2e/{cluster}/{model}/migration/"
+                            f"{strategy}_trans_gb",
+                            s["trans_gb"] * 1e6,
+                            base["trans_gb"] / max(s["trans_gb"], 1e-12)))
     return rows

@@ -83,17 +83,25 @@ def _hw_for(cfg, sim: SimConfig) -> HardwareSpec:
 
 
 def _planner_setup(sim: SimConfig, *, plan_scheduled: bool,
-                   trans_mode: str = "p2p"):
+                   trans_mode: str = "p2p", strategy: str = "shadow",
+                   migrate_window: float = 50.0, experts: int = 0):
     """Shared harness: (cfg, hw, perf, per-layer LocalityPlanners,
     per-layer GatingTraces) for a SimConfig — one construction used by
-    both the policy simulator and the chunk K-sweep, so their rows stay
-    comparable by design."""
+    the policy simulator, the chunk K-sweep, and the migration policy
+    sweep, so their rows stay comparable by design.  ``strategy`` /
+    ``migrate_window`` configure the greedy search space (owner
+    re-layout); ``experts`` overrides the model's expert count (migration
+    needs E > D to have slack to re-home into)."""
     cfg = get_config(sim.model)
+    if experts:
+        from repro.configs.moe_gpt import with_experts
+        cfg = with_experts(cfg, experts, top_k=cfg.moe.top_k)
     E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
     hw = _hw_for(cfg, sim)
     perf = PerfModel(hw, D, trans_mode=trans_mode)
     greedy = GreedyPlanner(perf, n=sim.n, alpha=0.25, s_max=sim.s_max,
-                           scheduled=plan_scheduled)
+                           scheduled=plan_scheduled, strategy=strategy,
+                           migrate_window=migrate_window)
     planners = [LocalityPlanner(greedy, D, E) for _ in range(L)]
     traces = [GatingTrace(D, E, sim.tokens // D, skew=sim.skew,
                           drift=sim.drift, seed=sim.seed * 1000 + li)
@@ -209,6 +217,83 @@ def chunk_sweep(sim: SimConfig, ks=(1, 2, 4, 8),
                 "iter_s": float(np.mean(iter_t[k])),
                 "hidden_frac": float(np.mean(hidden[k]))}
             for k in ks}
+
+
+MIGRATION_STRATEGIES = ("shadow", "migrate", "both")
+
+
+def migration_sweep(sim: SimConfig, *, window: float = 100.0,
+                    experts_factor: int = 4) -> Dict[str, Dict[str, float]]:
+    """Migration-vs-shadow-vs-both policy sweep (the tentpole benchmark).
+
+    Runs the locality planner with each greedy ``strategy`` over the same
+    gating traces (E = ``experts_factor``·D so devices own several
+    experts and re-homing has somewhere to go) and reports, per strategy:
+
+    ``iter_s``        — mean simulated iteration time, eq. 6 blocked
+                        evaluation + the amortized migration term (the
+                        regime where the Trans-vs-migrate tradeoff is
+                        explicit rather than hidden by the scheduler);
+    ``trans_gb``      — modeled **steady-state** Trans+Agg bytes per step
+                        (what shadowing pays every iteration and a
+                        migrated expert never pays again);
+    ``migrate_gb``    — amortized migration bytes per step;
+    ``relocations``   — owner changes executed across the run (placement
+                        diffs between consecutive iterations);
+    ``shadows``/``migrations`` — mean live shadow slots / re-homed
+                        experts per iteration;
+    ``rb``            — mean balance-degree ratio vs plain EP.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for strategy in MIGRATION_STRATEGIES:
+        cfg, hw, perf, planners, traces = _planner_setup(
+            sim, plan_scheduled=False, strategy=strategy,
+            migrate_window=window, experts=experts_factor * sim.devices)
+        E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
+        iter_t, trans_b, mig_b, rbs = [], [], [], []
+        shadows, migrations, relocations = [], [], 0
+        prev_g: List[Optional[np.ndarray]] = [None] * L
+        prev_pl: List[Optional[object]] = [None] * L
+        for _ in range(sim.iters):
+            total = t_bytes = m_bytes = 0.0
+            n_sh = n_mig = 0
+            for li in range(L):
+                g = traces[li].step() * sim.top_k
+                res = planners[li].maybe_plan(prev_g[li] if prev_g[li]
+                                              is not None else g)
+                prev_g[li] = g
+                pl = res.placement
+                if prev_pl[li] is not None:
+                    relocations += len(pl.diff(prev_pl[li]))
+                prev_pl[li] = pl
+                H, R = pl.compute_loads(g)
+                s, n = pl.num_shadowed, perf.effective_n(pl)
+                t_mig = perf.t_migrate(pl.num_migrated, window=window)
+                total += (perf.layer_time(R, H, s, n) + t_mig
+                          + hw.t_fnec + hw.t_bnec)
+                t_bytes += 2.0 * perf.t_trans(s, n) * hw.bandwidth
+                m_bytes += t_mig * hw.bandwidth
+                n_sh += s
+                n_mig += pl.num_migrated
+                if li == 0:
+                    H0, _ = traditional(E, D).compute_loads(g)
+                    rbs.append(balance_degree(H0)
+                               / max(balance_degree(H), 1e-9))
+            iter_t.append(total)
+            trans_b.append(t_bytes)
+            mig_b.append(m_bytes)
+            shadows.append(n_sh)
+            migrations.append(n_mig)
+        out[strategy] = {
+            "iter_s": float(np.mean(iter_t)),
+            "trans_gb": float(np.mean(trans_b)) / 1e9,
+            "migrate_gb": float(np.mean(mig_b)) / 1e9,
+            "relocations": float(relocations),
+            "shadows": float(np.mean(shadows)),
+            "migrations": float(np.mean(migrations)),
+            "rb": float(np.mean(rbs)),
+        }
+    return out
 
 
 def measure_plan_overlap(engine, traces, step_window_fn, iters: int,

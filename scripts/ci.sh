@@ -1,16 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the single entry point CI and humans share (ROADMAP.md).
 #
-#   scripts/ci.sh             full suite (~8.5 min)
+#   scripts/ci.sh             full suite (~10 min)
 #   scripts/ci.sh --fast      fast lane: skips @slow (multi-device
 #                             subprocesses, long end-to-end trainer runs)
 #                             but keeps the async≡sync equivalence tests
-#                             (tests/test_async_runtime.py is not slow)
-#                             and the chunked a2a↔FEC equivalence sweep
+#                             (tests/test_async_runtime.py is not slow),
+#                             the chunked a2a↔FEC equivalence sweep
 #                             (tests/test_moe.py::TestChunkedA2aPipeline
 #                             runs K∈{1,2,3,4} single-device; the (2,4)
 #                             mesh subprocess sweep is @slow in
-#                             tests/test_distributed.py)
+#                             tests/test_distributed.py), and the dynamic
+#                             expert-migration fast lane
+#                             (tests/test_migration.py: planner/placement
+#                             units, single-device relocation
+#                             bit-equivalence, and the migration-disabled
+#                             guard TestDisabledPathGuard — catches
+#                             numeric drift of the owner threading
+#                             without subprocesses).  The (2,4)-mesh
+#                             migration run is @slow:
+#                             tests/test_distributed.py::
+#                             test_migration_mesh_equivalence
 #
 # Extra args pass through to pytest, e.g.  scripts/ci.sh -k planner
 set -euo pipefail

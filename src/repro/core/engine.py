@@ -6,8 +6,8 @@ The engine is the piece the trainer talks to.  Per iteration it
      layer — cheap host transfers of ``[D, E]`` int32),
   2. lets each layer's :class:`LocalityPlanner` (re)plan at its cadence,
   3. packs the placements into the static-shape arrays the jitted train
-     step consumes (``shadow_idx`` / ``shadow_valid`` / ``shadow_devs``
-     stacked over MoE layers),
+     step consumes (``shadow_idx`` / ``shadow_valid`` / ``shadow_devs`` /
+     ``expert_slot`` stacked over MoE layers),
   4. exposes predicted timings (eq. 6 / eq. 8) for logging and benchmarks.
 
 This is the paper's Fig. 5 "execution engine" realized for a JAX runtime:
@@ -19,6 +19,13 @@ over a caller-supplied thread pool, and placements are *versioned*:
 trainer's :class:`~repro.train.runtime.PlacementCache` re-packs and
 re-uploads the device arrays only on change (``step_arrays`` re-packs just
 the layers that moved).
+
+With dynamic expert migration enabled, the engine additionally tracks
+the physical slot layout the device is currently at
+(:meth:`pending_relocation` / :meth:`mark_relocated` /
+:meth:`reset_layout`): the gap between the planned ``slot_of``
+permutations and the device state is the relocation schedule the trainer
+executes as a one-time EP-axis weight/optimizer exchange.
 
 Threading contract: ``observe`` is the only mutator.  Callers running it on
 a background thread (the async runtime) must order every ``step_arrays`` /
@@ -54,6 +61,15 @@ class EngineConfig:
     scheduled: bool = True        # plan against eq. 8 (planner×scheduler)
     trans_mode: str = "ring"      # TPU adaptation; "p2p" = paper-faithful
     policy: str = "pro_prophet"   # pro_prophet | fastermoe | top2 | top3 | none
+    # Dynamic expert migration (owner re-layout): when enabled the greedy
+    # search scores migrate-vs-shadow per move (strategy "both") using the
+    # amortized one-time weight-move cost over `migrate_window` steps (the
+    # locality horizon; 0 ⇒ max(replan_interval, 50)).  Off by default —
+    # the disabled path is bit-identical to the shadow-only planner.
+    # REPRO_MIGRATION=0/1 overrides.
+    enable_migration: bool = False
+    migrate_window: float = 0.0
+    migrate_state_factor: float = 3.0   # params + AdamW mu/nu
     # Chunked a2a↔FEC pipelining (repro.models.moe): candidate chunk
     # counts the scheduler timeline picks from, and the modeled per-chunk
     # launch cost (collective setup + kernel dispatch) that keeps the
@@ -64,10 +80,19 @@ class EngineConfig:
 
 class ProProphetEngine:
     def __init__(self, cfg: EngineConfig, hw: HardwareSpec):
+        from repro import flags
         self.cfg = cfg
         self.perf = PerfModel(hw, cfg.num_devices, trans_mode=cfg.trans_mode)
-        greedy = GreedyPlanner(self.perf, n=cfg.n, alpha=cfg.alpha,
-                               s_max=cfg.s_max, scheduled=cfg.scheduled)
+        flag = flags.migration()
+        self.migration_enabled = (cfg.enable_migration if flag is None
+                                  else flag)
+        window = cfg.migrate_window or max(float(cfg.replan_interval), 50.0)
+        greedy = GreedyPlanner(
+            self.perf, n=cfg.n, alpha=cfg.alpha, s_max=cfg.s_max,
+            scheduled=cfg.scheduled,
+            strategy="both" if self.migration_enabled else "shadow",
+            migrate_window=window,
+            migrate_state_factor=cfg.migrate_state_factor)
         self.planners: List[LocalityPlanner] = [
             LocalityPlanner(greedy, cfg.num_devices, cfg.num_experts,
                             replan_interval=cfg.replan_interval,
@@ -87,6 +112,14 @@ class ProProphetEngine:
         self._last_g: List[Optional[Array]] = [None] * cfg.num_moe_layers
         self._obs_count = 0
         self._costs_cache = None  # (token, [per-layer costs]) memo
+        # Physical slot layout currently on the device (expert → slot, per
+        # layer).  Updated only by mark_relocated() after the trainer
+        # executes the weight/optimizer exchange — the gap between this
+        # and the planned placements is the pending relocation schedule.
+        self._device_slots: List[Array] = [
+            np.arange(cfg.num_experts, dtype=np.int64)
+            for _ in range(cfg.num_moe_layers)
+        ]
 
     # ------------------------------------------------------------------
     @property
@@ -160,6 +193,9 @@ class ProProphetEngine:
                 "shadow_devs": np.zeros(
                     (cfg.num_moe_layers, cfg.s_max, cfg.num_devices),
                     dtype=np.float32),
+                "expert_slot": np.tile(
+                    np.arange(cfg.num_experts, dtype=np.int32),
+                    (cfg.num_moe_layers, 1)),
             }
             self._dirty = set(range(cfg.num_moe_layers))
         for li in sorted(self._dirty):
@@ -167,8 +203,67 @@ class ProProphetEngine:
             self._cache["shadow_idx"][li] = arrs["shadow_idx"]
             self._cache["shadow_valid"][li] = arrs["shadow_valid"]
             self._cache["shadow_devs"][li] = arrs["shadow_devs"]
+            self._cache["expert_slot"][li] = arrs["expert_slot"]
         self._dirty.clear()
         return {k: v.copy() for k, v in self._cache.items()}
+
+    # ------------------------------------------------------------------
+    # Dynamic expert migration: relocation schedule
+    # ------------------------------------------------------------------
+    def pending_relocation(self) -> Optional[Array]:
+        """Slot gather realizing the planned owner re-layout, or None when
+        the device already matches.  int32 ``[L, E]``:
+        ``new_weights[li, s] = old_weights[li, gather[li, s]]`` applied to
+        every expert-stacked param/optimizer leaf (the EP-axis exchange —
+        cross-device entries gather from the peer's slot range).  Same
+        threading contract as :meth:`step_arrays`: read only after the
+        observe that produced it."""
+        E, D = self.cfg.num_experts, self.cfg.num_devices
+        gather = np.tile(np.arange(E, dtype=np.int32),
+                         (self.cfg.num_moe_layers, 1))
+        changed = False
+        for li, pl in enumerate(self._placements):
+            dev = self._device_slots[li]
+            if np.array_equal(pl.slots, dev):
+                continue
+            dev_pl = ExpertPlacement(E, D, {}, tuple(int(s) for s in dev))
+            gather[li] = pl.relocation_gather(dev_pl)
+            changed = True
+        return gather if changed else None
+
+    def relocations(self) -> List[Tuple[int, int, int, int]]:
+        """Pending owner moves vs the device layout, for logging:
+        ``[(layer, expert, src_dev, dst_dev), ...]``."""
+        from .placement import default_owner
+        base = default_owner(self.cfg.num_experts, self.cfg.num_devices)
+        out = []
+        for li, pl in enumerate(self._placements):
+            dev_owner = base[self._device_slots[li]]
+            new_owner = pl.owner
+            for e in np.where(dev_owner != new_owner)[0]:
+                out.append((li, int(e), int(dev_owner[e]), int(new_owner[e])))
+        return out
+
+    def mark_relocated(self) -> None:
+        """The trainer executed the pending exchange: the device layout
+        now matches the planned placements."""
+        self._device_slots = [pl.slots.copy() for pl in self._placements]
+
+    def reset_layout(self) -> Optional[Array]:
+        """Gather returning the device to the identity (home) layout, or
+        None if already there; resets the tracked device slots.  Use
+        before checkpointing: saved params must be in home order so a
+        restored run can bind a fresh engine (which assumes identity)
+        without inheriting the permuted physical layout."""
+        E = self.cfg.num_experts
+        if all(np.array_equal(ds, np.arange(E)) for ds in self._device_slots):
+            return None
+        # device slot ds[e] holds expert e ⇒ home order gathers ds itself.
+        gather = np.stack([ds.astype(np.int32)
+                           for ds in self._device_slots])
+        self._device_slots = [np.arange(E, dtype=np.int64)
+                              for _ in range(self.cfg.num_moe_layers)]
+        return gather
 
     # ------------------------------------------------------------------
     # Chunked a2a↔FEC pipelining (§V realized on-device)

@@ -135,6 +135,25 @@ class PerfModel:
     def t_agg(self, s: int, n: int) -> float:
         return self._t_transfer(s, n, self.hw.expert_param_bytes)
 
+    # -- migration (beyond-paper: FlexMoE/LAER-MoE-style owner re-layout) --
+    def t_migrate(self, m: int, *, window: float,
+                  state_factor: float = 3.0) -> float:
+        """Amortized per-step cost of ``m`` expert migrations.
+
+        A migration swaps one expert's home slot with a partner slot on the
+        destination device: a ONE-TIME bidirectional p2p exchange of the
+        two experts' parameter + optimizer slabs (``state_factor`` ≈ 3 for
+        AdamW: params + mu + nu), amortized over the ``window`` steps the
+        locality property (§IV.B) keeps the placement valid.  Contrast
+        with :meth:`t_trans`, which shadowing pays EVERY step — migration
+        dominates exactly when the skew is stable (window ≫ 1) and loses
+        when it is transient (window → 1).
+        """
+        if m <= 0:
+            return 0.0
+        bytes_moved = 2.0 * state_factor * self.hw.expert_param_bytes
+        return m * bytes_moved / self.hw.bandwidth / max(float(window), 1.0)
+
     # -- eq. 6: unscheduled layer time -------------------------------------
     def layer_time(self, R: Array, H: Array, s: int, n: int) -> float:
         return (4.0 * self.t_a2a(R)

@@ -1,4 +1,4 @@
-"""Lightweight expert placements (paper §IV.A).
+"""Lightweight expert placements (paper §IV.A) + dynamic owner re-layout.
 
 A *lightweight expert placement* independently maps each (selected) expert
 to a **subset** of devices.  Only parameters (``Trans``) and gradients
@@ -6,11 +6,20 @@ to a **subset** of devices.  Only parameters (``Trans``) and gradients
 owner device.  This module is the host-side representation; the traced /
 device-side form (static shadow slots) is produced by
 :meth:`ExpertPlacement.to_device_arrays`.
+
+Beyond the paper's shadowing, a placement may also *migrate* experts:
+``slot_of`` is a permutation of the ``E`` physical expert slots (slot
+``s`` lives on device ``default_owner[s]``, so each device always holds
+exactly its static share of slots).  :meth:`with_migration` swaps a hot
+expert's slot with a partner slot on the destination device — a one-time
+weight/optimizer move (FlexMoE / LAER-MoE style owner re-layout) instead
+of a per-step parameter transfer.  :meth:`relocation_gather` emits the
+slot gather that turns the previous physical layout into this one.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Mapping, Tuple
+from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -22,7 +31,9 @@ def default_owner(num_experts: int, num_devices: int) -> Array:
 
     Experts are divided evenly; expert ``e`` lives on device
     ``e // (E / D)`` when ``E >= D`` and ``e % D`` when ``E < D``
-    (the latter only matters for toy configs).
+    (the latter only matters for toy configs).  With a slot permutation
+    this same map gives the device of each *slot* — the physical layout
+    never changes, only which expert occupies which slot.
     """
     if num_experts >= num_devices:
         assert num_experts % num_devices == 0, (num_experts, num_devices)
@@ -38,14 +49,30 @@ class ExpertPlacement:
     ``shadows`` maps an expert id to the frozen set of *extra* devices that
     temporarily hold its parameters this iteration (never includes the
     owner).  The empty mapping is the traditional EP placement.
+
+    ``slot_of`` (expert → physical slot) is the owner re-layout
+    permutation; ``None`` means identity (expert ``e`` in slot ``e``).  An
+    identity tuple is normalized to ``None`` so migration-free placements
+    compare equal regardless of how they were built.
     """
 
     num_experts: int
     num_devices: int
     shadows: Mapping[int, FrozenSet[int]] = dataclasses.field(default_factory=dict)
+    slot_of: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
-        owner = default_owner(self.num_experts, self.num_devices)
+        if self.slot_of is not None:
+            slots = tuple(int(s) for s in self.slot_of)
+            assert len(slots) == self.num_experts, (
+                f"slot_of has {len(slots)} entries for "
+                f"{self.num_experts} experts")
+            assert sorted(slots) == list(range(self.num_experts)), (
+                "slot_of is not a permutation")
+            if slots == tuple(range(self.num_experts)):
+                slots = None
+            object.__setattr__(self, "slot_of", slots)
+        owner = self.owner
         for e, devs in self.shadows.items():
             assert 0 <= e < self.num_experts, e
             assert int(owner[e]) not in devs, (
@@ -54,13 +81,36 @@ class ExpertPlacement:
 
     # -- basic queries --------------------------------------------------
     @property
+    def slots(self) -> Array:
+        """expert → physical slot (identity when no migrations)."""
+        if self.slot_of is None:
+            return np.arange(self.num_experts)
+        return np.asarray(self.slot_of, dtype=np.int64)
+
+    @property
+    def slot_expert(self) -> Array:
+        """physical slot → expert (inverse of :attr:`slots`)."""
+        inv = np.empty(self.num_experts, dtype=np.int64)
+        inv[self.slots] = np.arange(self.num_experts)
+        return inv
+
+    @property
     def owner(self) -> Array:
-        return default_owner(self.num_experts, self.num_devices)
+        """expert → owner device, honoring the slot permutation."""
+        return default_owner(self.num_experts, self.num_devices)[self.slots]
 
     @property
     def num_shadowed(self) -> int:
         """s in the paper: number of experts whose params are transferred."""
         return sum(1 for devs in self.shadows.values() if devs)
+
+    @property
+    def num_migrated(self) -> int:
+        """Experts living away from their default home (owner re-layout)."""
+        if self.slot_of is None:
+            return 0
+        base = default_owner(self.num_experts, self.num_devices)
+        return int(np.sum(self.owner != base))
 
     def placement_matrix(self) -> Array:
         """Boolean ``P[e, d]``: does device d hold expert e's params."""
@@ -76,7 +126,68 @@ class ExpertPlacement:
         devices = frozenset(int(d) for d in devices) - {owner}
         new = dict(self.shadows)
         new[expert] = frozenset(new.get(expert, frozenset())) | devices
-        return ExpertPlacement(self.num_experts, self.num_devices, new)
+        return ExpertPlacement(self.num_experts, self.num_devices, new,
+                               self.slot_of)
+
+    def with_migration(self, expert: int, dst: int,
+                       partner: Optional[int] = None) -> "ExpertPlacement":
+        """Move ``expert``'s home to device ``dst`` by swapping slots with
+        ``partner`` (an expert currently owned by ``dst``; defaults to the
+        lowest-numbered one).  The swap keeps every device's slot count
+        static, so the traced step's shapes never change — only a one-time
+        weight/optimizer exchange between the two devices is needed
+        (:meth:`relocation_gather`).  Shadow sets are pruned so neither
+        expert shadows onto its new owner.
+        """
+        expert, dst = int(expert), int(dst)
+        assert 0 <= expert < self.num_experts, expert
+        assert 0 <= dst < self.num_devices, dst
+        owner = self.owner
+        if int(owner[expert]) == dst:
+            return self
+        if partner is None:
+            on_dst = np.where(owner == dst)[0]
+            assert len(on_dst), f"device {dst} owns no experts"
+            partner = int(on_dst[0])
+        partner = int(partner)
+        assert partner != expert
+        assert int(owner[partner]) == dst, (
+            f"partner {partner} is owned by {owner[partner]}, not {dst}")
+        slots = self.slots.copy()
+        slots[expert], slots[partner] = slots[partner], slots[expert]
+        src = int(owner[expert])
+        new_shadows = dict(self.shadows)
+        for e, new_home in ((expert, dst), (partner, src)):
+            if e in new_shadows:
+                pruned = frozenset(new_shadows[e]) - {new_home}
+                if pruned:
+                    new_shadows[e] = pruned
+                else:
+                    del new_shadows[e]
+        return ExpertPlacement(self.num_experts, self.num_devices,
+                               new_shadows, tuple(int(s) for s in slots))
+
+    # -- relocation schedule --------------------------------------------
+    def diff(self, prev: "ExpertPlacement") -> List[Tuple[int, int, int]]:
+        """Owner changes vs ``prev``: ``[(expert, src_dev, dst_dev), ...]``
+        sorted by expert id — the relocation list a weight-exchange step
+        must realize."""
+        assert (prev.num_experts, prev.num_devices) == (
+            self.num_experts, self.num_devices)
+        po, no = prev.owner, self.owner
+        return [(int(e), int(po[e]), int(no[e]))
+                for e in np.where(po != no)[0]]
+
+    def relocation_gather(self, prev: "ExpertPlacement") -> Array:
+        """int32 ``[E]`` slot gather turning ``prev``'s physical layout
+        into this one: ``new_weights[s] = old_weights[gather[s]]``.  The
+        identity permutation means no data moves; off-diagonal entries on
+        another device's slot range are the EP-axis exchange."""
+        assert (prev.num_experts, prev.num_devices) == (
+            self.num_experts, self.num_devices)
+        # new slot s holds expert self.slot_expert[s], previously stored
+        # at slot prev.slots[that expert].
+        return prev.slots[self.slot_expert].astype(np.int32)
 
     # -- load computation (Replace_Inputs in Algorithm 1) ----------------
     def compute_loads(self, g: Array) -> Tuple[Array, Array]:
@@ -86,9 +197,10 @@ class ExpertPlacement:
         *received* by device i from other devices (the paper's a2a term).
         A token on source device d routed to expert e is computed locally
         iff d holds e's params under this placement; otherwise it is sent
-        to e's owner.  (When an expert is shadowed, tokens on non-holder
-        devices still go to the owner — the shadow only absorbs the load
-        already resident on the shadow devices, paper Fig. 6b.)
+        to e's owner — the *current* owner, i.e. migrations re-home the
+        a2a destination.  (When an expert is shadowed, tokens on
+        non-holder devices still go to the owner — the shadow only absorbs
+        the load already resident on the shadow devices, paper Fig. 6b.)
         """
         g = np.asarray(g, dtype=np.float64)
         D, E = self.num_devices, self.num_experts
@@ -110,7 +222,9 @@ class ExpertPlacement:
           ``shadow_idx``  int32 ``[s_max]``  — expert id per slot (0-padded),
           ``shadow_valid`` f32  ``[s_max]``  — 1.0 where the slot is live,
           ``shadow_devs`` f32  ``[s_max, D]`` — compute mask (owner excluded;
-          the owner computes its tokens through the home path).
+          the owner computes its tokens through the home path),
+          ``expert_slot`` int32 ``[E]``      — expert → physical slot (the
+          a2a destination bucket; identity when nothing migrated).
         """
         D = self.num_devices
         # Padding slots carry the sentinel expert id == num_experts so the
@@ -130,7 +244,8 @@ class ExpertPlacement:
             valid[slot] = 1.0
             for d in ds:
                 devs[slot, d] = 1.0
-        return {"shadow_idx": idx, "shadow_valid": valid, "shadow_devs": devs}
+        return {"shadow_idx": idx, "shadow_valid": valid, "shadow_devs": devs,
+                "expert_slot": self.slots.astype(np.int32)}
 
 
 def traditional(num_experts: int, num_devices: int) -> ExpertPlacement:

@@ -5,15 +5,28 @@ algorithm instead repeatedly
 
   1. finds the heaviest device,
   2. selects its heaviest resident expert (not yet selected),
-  3. shadows that expert onto every device except the ``n`` devices holding
-     the fewest of its tokens (``BottomK``) — and except its owner,
-  4. re-derives the loads (``Replace_Inputs``) and evaluates the placement
-     with the performance model,
+  3. scores the candidate *moves* for that expert —
+     **shadow** (paper): replicate it onto every device except the ``n``
+     devices holding the fewest of its tokens (``BottomK``) and its owner;
+     **migrate** (beyond-paper, FlexMoE/LAER-MoE-style): swap its home
+     slot with a partner slot on the lightest device, paying a one-time
+     amortized weight move (``PerfModel.t_migrate``) instead of a
+     per-step ``Trans`` —
+  4. takes the cheaper move, re-derives the loads (``Replace_Inputs``) and
+     evaluates the placement with the performance model,
 
 keeping the *prefix* of moves that achieved the minimum predicted time
 (``cnt`` in the paper's listing).  Termination: the balance condition
 ``max(H) − min(H) < α·I/E`` (eq. 7), the heaviest device repeating, or the
-shadow budget ``s_max`` being reached.
+move budget ``s_max`` being reached.
+
+``strategy`` selects the search space: ``"shadow"`` (default — exactly the
+paper's Algorithm 1, bit-identical to the pre-migration planner),
+``"migrate"`` (owner re-layout only), or ``"both"``.  ``migrate_window``
+is the expected number of steps the locality property keeps the placement
+valid — the amortization horizon that decides migrate-vs-shadow: a
+persistent skew (large window) favors the one-time move, a transient one
+(window → 1) favors per-step shadowing.
 
 The *locality-based* part: ``LocalityPlanner`` re-runs the search only every
 ``replan_interval`` iterations, planning from the **predicted** distribution
@@ -41,6 +54,7 @@ class PlanResult:
     baseline_time: float         # time of the traditional placement
     steps_examined: int          # greedy iterations executed
     balanced: bool               # eq. 7 satisfied at exit
+    num_migrations: int = 0      # experts re-homed by this placement
 
     @property
     def predicted_speedup(self) -> float:
@@ -48,12 +62,18 @@ class PlanResult:
 
 
 class GreedyPlanner:
-    """Algorithm 1.  ``n``: devices a selected expert is NOT sent to;
-    ``alpha``: balance tolerance of eq. 7; ``s_max``: shadow-slot budget
-    (static capacity of the traced step, see DESIGN.md §3)."""
+    """Algorithm 1 + owner re-layout.  ``n``: devices a selected expert is
+    NOT sent to; ``alpha``: balance tolerance of eq. 7; ``s_max``:
+    move budget (static shadow-slot capacity of the traced step, see
+    DESIGN.md §3); ``strategy``/``migrate_window``/``migrate_state_factor``:
+    migration search space (module docstring)."""
+
+    STRATEGIES = ("shadow", "migrate", "both")
 
     def __init__(self, perf: PerfModel, *, n: int = 0, alpha: float = 0.25,
-                 s_max: int = 8, scheduled: bool = False):
+                 s_max: int = 8, scheduled: bool = False,
+                 strategy: str = "shadow", migrate_window: float = 50.0,
+                 migrate_state_factor: float = 3.0):
         self.perf = perf
         self.n = int(n)
         self.alpha = float(alpha)
@@ -61,9 +81,33 @@ class GreedyPlanner:
         # When True the performance model evaluates eq. 8 (planner/scheduler
         # coupling, §V.C) so the search targets the *overlapped* time.
         self.scheduled = bool(scheduled)
+        assert strategy in self.STRATEGIES, strategy
+        self.strategy = strategy
+        self.migrate_window = float(migrate_window)
+        self.migrate_state_factor = float(migrate_state_factor)
 
     def _balanced(self, H: Array, total_inputs: float, num_experts: int) -> bool:
         return (H.max() - H.min()) < self.alpha * total_inputs / num_experts
+
+    def _migrate_candidate(self, cur: ExpertPlacement, e: int,
+                           heavy_dev: int, H: Array,
+                           tokens_per_expert: Array,
+                           migrated: set) -> Optional[Tuple[int, int]]:
+        """(dst, partner) for re-homing expert ``e``: the lightest device
+        that owns a swappable partner (not ``e``, not already moved, not
+        shadowed — its shadow set would need pruning), partner = its
+        coldest expert.  None when no device qualifies."""
+        owner = cur.owner
+        for dst in (int(d) for d in np.argsort(H, kind="stable")):
+            if dst == heavy_dev:
+                continue
+            partners = [int(p) for p in np.where(owner == dst)[0]
+                        if int(p) != e and int(p) not in migrated
+                        and int(p) not in cur.shadows]
+            if partners:
+                return dst, int(partners[int(np.argmin(
+                    tokens_per_expert[partners]))])
+        return None
 
     def plan(self, g: Array) -> PlanResult:
         g = np.asarray(g, dtype=np.float64)
@@ -72,17 +116,29 @@ class GreedyPlanner:
         total_inputs = float(g.sum())
         eval_time = (self.perf.layer_time_scheduled if self.scheduled
                      else self.perf.layer_time)
+        shadow_on = self.strategy in ("shadow", "both")
+        migrate_on = self.strategy in ("migrate", "both")
+
+        def score(R, H, s, m):
+            t = eval_time(R, H, s, self.n)
+            if m:
+                t += self.perf.t_migrate(
+                    m, window=self.migrate_window,
+                    state_factor=self.migrate_state_factor)
+            return t
 
         placement = traditional(E, D)
         H, R = placement.compute_loads(g)
-        t_best = eval_time(R, H, 0, self.n)
+        t_best = score(R, H, 0, 0)
         baseline = t_best
 
         used_devices: set[int] = set()
-        moves: List[Tuple[int, frozenset]] = []
+        # ("shadow", e, devs) | ("migrate", e, dst, partner)
+        moves: List[Tuple] = []
         cnt = 0  # best prefix length
         steps = 0
-        owner = placement.owner
+        n_shadow = n_mig = 0
+        migrated: set[int] = set()
         tokens_per_expert = g.sum(axis=0)
 
         cur = placement
@@ -93,45 +149,95 @@ class GreedyPlanner:
                 break
             used_devices.add(heavy_dev)
 
-            # Heaviest not-yet-shadowed expert resident on the heavy device.
+            # Heaviest not-yet-moved expert resident on the heavy device
+            # (owners honor earlier migrations in this search).
+            owner = cur.owner
             resident = np.where(owner == heavy_dev)[0]
-            resident = [e for e in resident if e not in cur.shadows]
+            resident = [e for e in resident
+                        if e not in cur.shadows and e not in migrated]
             if not resident:
                 break
             e = int(resident[int(np.argmax(tokens_per_expert[resident]))])
 
-            # BottomK: exclude the n devices holding the fewest of e's
-            # tokens (never excluding the owner — it already has the params).
-            order = np.argsort(g[:, e], kind="stable")
-            bottoms = [int(d) for d in order if int(d) != heavy_dev][: self.n]
-            shadow_devs = frozenset(range(D)) - {heavy_dev} - set(bottoms)
-
-            cur = cur.with_shadow(e, shadow_devs)
-            moves.append((e, shadow_devs))
-            # Replace_Inputs, incrementally: e was not previously shadowed,
-            # so exactly the tokens g[d, e] for d in shadow_devs move from
-            # remote-on-owner to local-on-d.  O(|shadow_devs|) instead of a
-            # full O(D·E) compute_loads.  With the "last" predictor g holds
-            # integral counts and the running sums match a fresh
-            # recomputation bit-for-bit; fractional g (the "ema" predictor)
-            # may drift by float rounding in the last ulp, which only
-            # matters on exact ties of the heuristic's comparisons.
-            own = int(owner[e])
-            sd = np.fromiter(shadow_devs, dtype=np.intp)
-            moved = g[sd, e]
-            H[sd] += moved
-            tot = float(moved.sum())
-            H[own] -= tot
-            R[own] -= tot
-            t = eval_time(R, H, len(moves), self.n)
+            cand = None  # (kind, placement, H, R, t, payload)
+            if shadow_on:
+                # BottomK: exclude the n devices holding the fewest of e's
+                # tokens (never excluding the owner — it already has the
+                # params).
+                order = np.argsort(g[:, e], kind="stable")
+                bottoms = [int(d) for d in order
+                           if int(d) != heavy_dev][: self.n]
+                shadow_devs = frozenset(range(D)) - {heavy_dev} - set(bottoms)
+                # Replace_Inputs, incrementally: e was not previously
+                # shadowed, so exactly the tokens g[d, e] for d in
+                # shadow_devs move from remote-on-owner to local-on-d.
+                # O(|shadow_devs|) instead of a full O(D·E) compute_loads.
+                # With the "last" predictor g holds integral counts and the
+                # running sums match a fresh recomputation bit-for-bit;
+                # fractional g (the "ema" predictor) may drift by float
+                # rounding in the last ulp, which only matters on exact
+                # ties of the heuristic's comparisons.
+                own = int(owner[e])
+                sd = np.fromiter(shadow_devs, dtype=np.intp)
+                moved = g[sd, e]
+                H_sh, R_sh = H.copy(), R.copy()
+                H_sh[sd] += moved
+                tot = float(moved.sum())
+                H_sh[own] -= tot
+                R_sh[own] -= tot
+                t_sh = score(R_sh, H_sh, n_shadow + 1, n_mig)
+                cand = ("shadow", cur.with_shadow(e, shadow_devs),
+                        H_sh, R_sh, t_sh, shadow_devs)
+            if migrate_on:
+                mg = self._migrate_candidate(cur, e, heavy_dev, H,
+                                             tokens_per_expert, migrated)
+                if mg is not None:
+                    dst, partner = mg
+                    pl_mg = cur.with_migration(e, dst, partner)
+                    # Incremental Replace_Inputs for the swap: e and the
+                    # partner are both unshadowed (the selection and
+                    # _migrate_candidate guarantee it), so each expert's
+                    # tokens are computed entirely at its owner and all
+                    # but the owner's own tokens arrive remotely — O(1)
+                    # per candidate instead of a full O(D·E)
+                    # compute_loads (the same trick the shadow branch
+                    # uses; validated against the recompute oracle in
+                    # tests/test_migration.py).
+                    tot_e = float(tokens_per_expert[e])
+                    tot_p = float(tokens_per_expert[partner])
+                    H_mg, R_mg = H.copy(), R.copy()
+                    H_mg[heavy_dev] += tot_p - tot_e
+                    H_mg[dst] += tot_e - tot_p
+                    R_mg[heavy_dev] += ((tot_p - g[heavy_dev, partner])
+                                        - (tot_e - g[heavy_dev, e]))
+                    R_mg[dst] += ((tot_e - g[dst, e])
+                                  - (tot_p - g[dst, partner]))
+                    t_mg = score(R_mg, H_mg, pl_mg.num_shadowed, n_mig + 1)
+                    if cand is None or t_mg < cand[4]:
+                        cand = ("migrate", pl_mg, H_mg, R_mg, t_mg,
+                                (dst, partner))
+            if cand is None:
+                break
+            kind, cur, H, R, t, payload = cand
+            if kind == "shadow":
+                moves.append(("shadow", e, payload))
+                n_shadow += 1
+            else:
+                dst, partner = payload
+                moves.append(("migrate", e, dst, partner))
+                migrated.update((e, partner))
+                n_mig += 1
             if t < t_best:
                 t_best = t
                 cnt = len(moves)
 
         # Keep only the best prefix (paper: PoE ← L[0:cnt]).
         best = traditional(E, D)
-        for e, devs in moves[:cnt]:
-            best = best.with_shadow(e, devs)
+        for mv in moves[:cnt]:
+            if mv[0] == "shadow":
+                best = best.with_shadow(mv[1], mv[2])
+            else:
+                best = best.with_migration(mv[1], mv[2], mv[3])
         Hb, _ = best.compute_loads(g)
         return PlanResult(
             placement=best,
@@ -139,6 +245,7 @@ class GreedyPlanner:
             baseline_time=baseline,
             steps_examined=steps,
             balanced=self._balanced(Hb, total_inputs, E),
+            num_migrations=best.num_migrated,
         )
 
 

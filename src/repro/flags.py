@@ -35,6 +35,14 @@ REPRO_A2A_CHUNKS=K      Manual override of the a2a↔FEC chunk count: the
                         time like all flags here: set it before the
                         process jits (the trainer re-reads it per
                         dispatch and re-keys its jit cache).
+REPRO_MIGRATION=0/1     Dynamic expert migration (owner re-layout): the
+                        planner scores migrate-vs-shadow per greedy move
+                        (core/planner.py strategy "both") and the trainer
+                        executes the resulting relocations as infrequent
+                        EP-axis weight/optimizer exchanges.  Unset ⇒ the
+                        EngineConfig.enable_migration policy decides
+                        (default off; disabled is bit-identical to the
+                        shadow-only planner).
 REPRO_ASYNC_PLAN=0/1    Trainer runtime selection (escape hatch).  Unset
                         or 1 ⇒ the pipelined async runtime: the Plan
                         primitive (engine.observe + the per-layer greedy
@@ -72,12 +80,27 @@ def capacity_factor_override():
     return float(v) if v else None
 
 
+# The default backend cannot change after jax initializes, so probe it
+# once per process instead of re-importing jax + calling
+# jax.default_backend() on every trace-time flag read (moe_pallas is
+# consulted per MoE layer per trace).  The env var itself stays re-read
+# on every call, like every other flag in this module.
+_DEFAULT_BACKEND: str | None = None
+
+
+def _default_backend() -> str:
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        import jax
+        _DEFAULT_BACKEND = jax.default_backend()
+    return _DEFAULT_BACKEND
+
+
 def moe_pallas() -> bool:
     """Ragged-Pallas expert FFN: default on for TPU, opt-in elsewhere."""
     v = _flag("REPRO_MOE_PALLAS", "")
     if v == "":
-        import jax
-        return jax.default_backend() == "tpu"
+        return _default_backend() == "tpu"
     return v == "1"
 
 
@@ -93,6 +116,15 @@ def async_plan() -> bool:
     """Pipelined trainer runtime: default on; REPRO_ASYNC_PLAN=0 forces
     the fully-serial baseline (see module docstring)."""
     return _flag("REPRO_ASYNC_PLAN", "1") != "0"
+
+
+def migration():
+    """REPRO_MIGRATION=0/1: override the engine's dynamic expert
+    migration policy (EngineConfig.enable_migration).  Unset ⇒ None (the
+    engine config decides; default off — the disabled path is
+    bit-identical to the shadow-only planner)."""
+    v = _flag("REPRO_MIGRATION", "")
+    return None if v == "" else v == "1"
 
 
 def pin_residual() -> bool:

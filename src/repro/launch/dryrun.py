@@ -79,11 +79,16 @@ def placement_specs(cfg: ModelConfig, ctx, mesh):
         return None
     L, s = cfg.num_moe_layers, cfg.moe.s_max
     rep = NamedSharding(mesh, P())
+    E = cfg.moe.num_experts
     return {
         "shadow_idx": jax.ShapeDtypeStruct((L, s), jnp.int32, sharding=rep),
         "shadow_valid": jax.ShapeDtypeStruct((L, s), jnp.float32, sharding=rep),
         "shadow_devs": jax.ShapeDtypeStruct((L, s, ctx.ep_size), jnp.float32,
                                             sharding=rep),
+        # owner re-layout permutation — always in the engine's step
+        # arrays (identity when migration is off), so the lowered step
+        # must trace the same slot-bucketed dispatch path real runs use.
+        "expert_slot": jax.ShapeDtypeStruct((L, E), jnp.int32, sharding=rep),
     }
 
 
@@ -290,6 +295,8 @@ def probe_layers(cfg: ModelConfig, ctx, mesh, kind: str, seq: int,
                 "shadow_devs": jax.ShapeDtypeStruct((s, ctx.ep_size),
                                                     jnp.float32,
                                                     sharding=rep),
+                "expert_slot": jax.ShapeDtypeStruct((cfg.moe.num_experts,),
+                                                    jnp.int32, sharding=rep),
             }
         try:
             if kind in ("train", "prefill"):

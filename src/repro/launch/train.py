@@ -25,6 +25,12 @@ def main() -> None:
                     choices=["pro_prophet", "fastermoe", "top2", "top3",
                              "none"])
     ap.add_argument("--replan-interval", type=int, default=1)
+    ap.add_argument("--migration", action="store_true",
+                    help="dynamic expert migration: the planner may "
+                         "re-home persistently hot experts (one-time "
+                         "EP-axis weight/optimizer exchange) instead of "
+                         "shadowing them every step; REPRO_MIGRATION "
+                         "overrides")
     ap.add_argument("--async-plan", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="pipelined runtime: plan on a background thread "
@@ -75,7 +81,8 @@ def main() -> None:
     engine = None
     if cfg.moe is not None and args.policy != "none":
         engine = make_engine_for(cfg, ctx, policy=args.policy,
-                                 replan_interval=args.replan_interval)
+                                 replan_interval=args.replan_interval,
+                                 migration=args.migration)
     trainer = Trainer(cfg, ctx, adamw(sched), attn_impl="auto",
                       remat=not args.reduced, engine=engine,
                       async_plan=args.async_plan)
@@ -102,6 +109,9 @@ def main() -> None:
                   f"expert pipeline (modeled)")
     if args.ckpt:
         from repro.checkpoint import save_train_state
+        # Checkpoints are always in the home (identity) expert layout —
+        # a restored run binds a fresh engine that assumes it.
+        state = trainer.restore_home_layout(state)
         save_train_state(state, args.ckpt, step=args.steps,
                          extra={"arch": cfg.name})
         print(f"checkpoint written to {args.ckpt}")

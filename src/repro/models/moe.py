@@ -67,9 +67,14 @@ def router_topk(params, x, k: int, *, renormalize: bool = True):
 
 def load_balance_loss(probs, idx, num_experts: int):
     """Switch-style aux loss — OFF by default (Pro-Prophet is system-level
-    and must not perturb convergence); exposed for ablations."""
+    and must not perturb convergence); exposed for ablations.
+
+    The dispatch-fraction term counts **all** top-k selections (normalized
+    by k via the mean over the flattened ``[..., k]`` dims), not just the
+    first choice — for ``top_k > 1`` the k-th selections drive real a2a
+    load and must shape the loss."""
     me = probs.mean(axis=tuple(range(probs.ndim - 1)))
-    onehot = jax.nn.one_hot(idx[..., 0], num_experts)
+    onehot = jax.nn.one_hot(idx, num_experts)          # [..., k, E]
     ce = onehot.mean(axis=tuple(range(onehot.ndim - 1)))
     return num_experts * jnp.sum(me * ce)
 
@@ -220,14 +225,20 @@ def _chunk_bounds(capacity: int, num_chunks: int):
 
 
 def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
-              shadow_devs, *, num_experts: int, capacity: int,
+              shadow_devs, expert_slot, *, num_experts: int, capacity: int,
               shadow_capacity: int, ffn_kind: str, ep_axis: Optional[str],
               fsdp_axis: Optional[str], pod_axis: Optional[str],
               s_max: int, use_pallas: bool = False, num_chunks: int = 1):
     """Expert-parallel MoE on local token shard.
 
     xf [T_loc, d]; gate/idx [T_loc, k]; wi/wg/wo local expert shards
-    [E_loc, d, f/..]; shadow_* placement arrays (replicated).
+    [E_loc, d, f/..]; shadow_* placement arrays (replicated);
+    ``expert_slot`` int32 [E] — expert → physical weight slot (the
+    engine's owner re-layout permutation; identity when nothing
+    migrated).  Tokens are bucketed by *slot*, so the a2a destination is
+    the expert's **current** owner instead of the implicit ``e // e_loc``
+    home, and device ``me``'s local weight row ``j`` is expert
+    ``slot_expert[me·e_loc + j]``.
     ``use_pallas`` routes both expert FFNs (a2a and shadow buffers)
     through the ragged Pallas kernels with the routing counts as
     group_sizes (REPRO_MOE_PALLAS; see repro.kernels.ragged_gmm).
@@ -243,6 +254,13 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     ep = 1 if ep_axis is None else jax.lax.psum(1, ep_axis)  # static int
     e_loc = E // ep
     me = 0 if ep_axis is None else jax.lax.axis_index(ep_axis)
+    # slot lookup with the sentinel id E (padded tokens) mapping to the
+    # sentinel (drop) bucket, and the inverse slot → expert permutation.
+    slot_lut = jnp.concatenate([expert_slot.astype(jnp.int32),
+                                jnp.array([E], jnp.int32)])
+    slot_expert = jnp.zeros((E,), jnp.int32).at[expert_slot].set(
+        jnp.arange(E, dtype=jnp.int32))
+    tok_slot_a2a = slot_lut[idx]                                 # [T,k]
 
     # ---- gather FSDP-sharded expert weights (ZeRO-3 style) --------------
     gather_spec = [(2, fsdp_axis), (1, pod_axis)]
@@ -270,7 +288,9 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     # (and puts its Agg cotangent after the backward chunks).  The paper's
     # operator/blockwise strategies, on-device.
     if s_max > 0:
-        my_globals = me * e_loc + jnp.arange(e_loc)              # [E_loc]
+        # Experts this device owns = the experts in its slot range (the
+        # identity arange before any migration).
+        my_globals = slot_expert[me * e_loc + jnp.arange(e_loc)]  # [E_loc]
         onehot = (shadow_idx[:, None] == my_globals[None, :])
         onehot = (onehot * (shadow_valid[:, None] > 0)).astype(jnp.float32)
         sh_wi, sh_wg, sh_wo = _trans_weights(
@@ -278,8 +298,10 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
             fsdp_axis=fsdp_axis, pod_axis=pod_axis)
 
     # ---- a2a path (chunked software pipeline) ----------------------------
-    a2a_expert = jnp.where(use_local, E, idx)                    # sentinel ⇒ drop
-    a2a_counts = kept_counts(a2a_expert, E, capacity)            # [E]
+    # Tokens are bucketed by *slot*, not expert id: the all_to_all lands
+    # bucket s on device s // e_loc, i.e. on the expert's current owner.
+    a2a_expert = jnp.where(use_local, E, tok_slot_a2a)           # sentinel ⇒ drop
+    a2a_counts = kept_counts(a2a_expert, E, capacity)            # [E] per slot
     buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E + 1)
     buf = buf[:E]                                                # [E,C,d]
     bounds = _chunk_bounds(capacity, num_chunks)
@@ -314,7 +336,7 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
                                         concat_axis=0, tiled=True)  # [E,Ck,d]
         outs.append(hidden)
     buf_out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
-    y = capacity_combine(buf_out, jnp.where(use_local, 0, idx),
+    y = capacity_combine(buf_out, jnp.where(use_local, 0, tok_slot_a2a),
                          pos, gate * (~use_local))
 
     # ---- Pro-Prophet shadow compute (weights already Trans'd above) ------
@@ -375,10 +397,11 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
               a2a_chunks: int = 1):
     """x [B, S, d] → (y, aux dict with routing counts / drop frac).
 
-    ``placement``: dict of shadow arrays for THIS layer
+    ``placement``: dict of placement arrays for THIS layer
     (shadow_idx [s_max] i32 — padded with ``num_experts``;
-     shadow_valid [s_max] f32; shadow_devs [s_max, ep] f32) or None for
-    plain EP.  ``ctx``: repro.parallel.ParallelCtx.  ``a2a_chunks``:
+     shadow_valid [s_max] f32; shadow_devs [s_max, ep] f32;
+     optionally expert_slot [E] i32 — the owner re-layout permutation,
+     identity when absent) or None for plain EP.  ``ctx``: repro.parallel.ParallelCtx.  ``a2a_chunks``:
     static chunk count of the a2a↔FEC software pipeline (module
     docstring); ``REPRO_A2A_CHUNKS`` overrides, 1 ⇒ bit-identical
     serial path.  Like every ``REPRO_*`` flag the override is read at
@@ -390,14 +413,27 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
     B, S, d = x.shape
     gate, idx, probs = router_topk(params["router"], x, top_k)
 
+    # One source of truth for the placement arrays' device width: the EP
+    # axis size of the mesh the layer actually runs on.  The trainer
+    # asserts the engine was built against the same width when it binds
+    # engine to mesh (repro.train.trainer), so an engine/mesh divergence
+    # fails loudly instead of silently mis-shaping the fallback arrays.
+    ep_width = max(ctx.ep_size, 1)
     if placement is None:
         sidx = jnp.full((s_max,), num_experts, jnp.int32)
         svalid = jnp.zeros((s_max,), jnp.float32)
-        sdevs = jnp.zeros((s_max, max(ctx.ep_size, 1)), jnp.float32)
+        sdevs = jnp.zeros((s_max, ep_width), jnp.float32)
+        eslot = jnp.arange(num_experts, dtype=jnp.int32)
     else:
         sidx, svalid, sdevs = (placement["shadow_idx"],
                                placement["shadow_valid"],
                                placement["shadow_devs"])
+        assert sdevs.shape[-1] == ep_width, (
+            f"placement shadow_devs width {sdevs.shape[-1]} != EP size "
+            f"{ep_width} — engine and mesh disagree on num_devices")
+        eslot = placement.get("expert_slot")
+        if eslot is None:   # pre-migration callers: identity layout
+            eslot = jnp.arange(num_experts, dtype=jnp.int32)
 
     # Flatten tokens and shard over every mesh axis.
     T = B * S
@@ -431,7 +467,7 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
     wg = params.get("wg")
     if ctx.mesh is None:
         y, counts, dropped = inner(xf, gf, ef, params["wi"], wg, params["wo"],
-                                   sidx, svalid, sdevs)
+                                   sidx, svalid, sdevs, eslot)
     else:
         from jax.experimental.shard_map import shard_map
         all_axes = ctx.all_axes  # e.g. ("pod","data","model")
@@ -442,11 +478,11 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
             inner, mesh=ctx.mesh,
             in_specs=(tok_spec, tok_spec, tok_spec, w_spec,
                       None if wg is None else w_spec, wo_spec,
-                      P(None), P(None), P(None)),
+                      P(None), P(None), P(None), P(None)),
             out_specs=(tok_spec, P(ctx.ep_axis, None), P(ctx.ep_axis)),
             check_rep=False)
         y, counts, dropped = f(xf, gf, ef, params["wi"], wg, params["wo"],
-                               sidx, svalid, sdevs)
+                               sidx, svalid, sdevs, eslot)
     dropped = jnp.mean(dropped)
 
     y = y[:T].reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,137 @@
+"""Expert relocation execution: the one-time weight/optimizer exchange
+realizing the planner's owner re-layout (dynamic expert migration).
+
+The engine plans migrations as a slot permutation per MoE layer
+(``ExpertPlacement.slot_of``); physically, every expert-stacked array —
+``wi``/``wg``/``wo`` and their AdamW ``mu``/``nu`` slabs — must be
+re-ordered so slot ``s`` holds the expert the new placement assigns
+there.  On an EP-sharded mesh the leading expert axis is sharded over
+the ``model`` axis, so the gather ``new[s] = old[gather[s]]`` with
+cross-device entries lowers to the EP-axis exchange (XLA SPMD inserts
+the collective); on a single device it is a plain row permutation.
+
+This runs OFF the training step — the trainer fires it only on a
+placement-version bump whose owner layout actually changed (rare: once
+per migration decision, amortized over the locality window), then
+dispatches the next step with the matching ``expert_slot`` arrays.  The
+optimizer slabs move with their expert, so the update math is exactly
+permutation-equivariant: with global-norm clipping disabled the whole
+training trajectory is bit-identical to the never-migrated run (the
+clip's cross-expert reduction re-associates under permutation and may
+differ in the last ulp).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+
+Array = np.ndarray
+
+_EXPERT_LEAVES = ("wi", "wg", "wo")
+
+
+def split_gathers(cfg: ModelConfig, gather: Array) -> List[Optional[Array]]:
+    """Split a stacked ``[L_moe, E]`` slot gather into per-stage chunks
+    shaped ``[repeats, m_moe, E]`` (None for MoE-free stages) — the same
+    layer order as ``repro.models.model._split_placements``."""
+    gather = np.asarray(gather)
+    out: List[Optional[Array]] = []
+    off = 0
+    for st in cfg.stages:
+        m = len(blocks.moe_positions(st))
+        n = m * st.repeats
+        if m == 0:
+            out.append(None)
+        else:
+            out.append(gather[off:off + n].reshape(
+                (st.repeats, m, gather.shape[-1])))
+        off += n
+    assert off == gather.shape[0], (off, gather.shape)
+    return out
+
+
+def active_gathers(cfg: ModelConfig, gather: Array):
+    """:func:`split_gathers`, with untouched layers dropped: per stage a
+    dict ``{macro_pos_j: int32 [repeats, E]}`` holding only the macro
+    positions whose gather differs from identity somewhere, or None for
+    stages with nothing to move.  Keeps the exchange from touching the
+    (usually many) layers a relocation never moved — only scan-stacked
+    repeats of an affected position still travel together."""
+    out: List[Optional[dict]] = []
+    for st, chunk in zip(cfg.stages, split_gathers(cfg, gather)):
+        if chunk is None:
+            out.append(None)
+            continue
+        ident = np.arange(chunk.shape[-1])
+        live = {str(j): jnp.asarray(chunk[:, j], jnp.int32)
+                for j in range(chunk.shape[1])
+                if not all(np.array_equal(row, ident)
+                           for row in chunk[:, j])}
+        out.append(live or None)
+    return out
+
+
+def _permute_stages(cfg: ModelConfig, stages_params, perms):
+    """Re-order the expert-stacked leaves of the affected MoE layers:
+    leaf shape ``[repeats, E, ...]``, per-repeat gather ``perm[j]``
+    (int32 ``[repeats, E]``, keyed by macro position index)."""
+    new_stages = []
+    for st, sp, perm in zip(cfg.stages, stages_params, perms):
+        if perm is None:
+            new_stages.append(sp)
+            continue
+        sp = dict(sp)
+        mpos = blocks.moe_positions(st)
+        for j_str, rows in perm.items():
+            pos = mpos[int(j_str)]
+            lp = dict(sp[str(pos)])
+            mp = dict(lp["moe"])
+            for nm in _EXPERT_LEAVES:
+                if nm in mp:
+                    mp[nm] = jax.vmap(
+                        lambda w, p: jnp.take(w, p, axis=0))(mp[nm], rows)
+            lp["moe"] = mp
+            sp[str(pos)] = lp
+        new_stages.append(sp)
+    return new_stages
+
+
+def make_relocate_fn(cfg: ModelConfig):
+    """Jitted ``(state, perms) -> state`` applying a slot gather to the
+    expert-stacked params and optimizer moments.  ``perms`` is the
+    :func:`active_gathers` list (a pytree — None entries and dict keys
+    are structural, so distinct relocation patterns get their own cached
+    trace; relocations are rare, patterns few).  The input state is
+    donated: relocations reuse its buffers."""
+
+    def fn(state, perms):
+        params = dict(state.params)
+        params["stages"] = _permute_stages(cfg, state.params["stages"],
+                                           perms)
+        opt = state.opt
+        mu = dict(opt.mu)
+        mu["stages"] = _permute_stages(cfg, opt.mu["stages"], perms)
+        nu = dict(opt.nu)
+        nu["stages"] = _permute_stages(cfg, opt.nu["stages"], perms)
+        return type(state)(params, opt._replace(mu=mu, nu=nu))
+
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def apply_relocation(state, cfg: ModelConfig, gather: Array, *,
+                     relocate_fn=None):
+    """Convenience wrapper: split the engine's ``[L_moe, E]`` gather,
+    drop untouched layers, and run the (freshly jitted unless supplied)
+    exchange step.  A fully-identity gather is a no-op returning the
+    state untouched."""
+    perms = active_gathers(cfg, gather)
+    if all(p is None for p in perms):
+        return state
+    fn = relocate_fn or make_relocate_fn(cfg)
+    return fn(state, perms)

@@ -71,6 +71,9 @@ class StepStats:
     a2a_chunks: int = 1
     a2a_gbytes: float = 0.0
     comm_hidden_frac: float = 0.0
+    # Dynamic expert migration: experts re-homed by the weight/optimizer
+    # exchange that ran at this step's dispatch (0 on steady-state steps).
+    relocations: int = 0
 
     @property
     def hidden_frac(self) -> float:
@@ -91,6 +94,8 @@ class StepStats:
             extra += (f" a2a={self.a2a_gbytes:.3g}GB"
                       f" chunks={self.a2a_chunks}"
                       f" comm_hidden={self.comm_hidden_frac:.0%}")
+        if self.relocations:
+            extra += f" relocated={self.relocations}"
         return (f"step {self.step:5d} loss {self.loss:.4f} "
                 f"({avg_step:.3f}s/it){extra}")
 

@@ -32,6 +32,15 @@ runtimes compute *identical* losses and placements — the async mode only
 changes when the host work happens.  ``tests/test_async_runtime.py``
 asserts bit-identical histories.
 
+With dynamic expert migration enabled (``EngineConfig.enable_migration``
+/ ``REPRO_MIGRATION``), the planner may re-home persistently hot experts
+instead of shadowing them.  The resulting relocation executes as an
+infrequent jitted weight/optimizer exchange (``repro.train.relocate``)
+on the dispatch path, exactly when the placement version carrying the
+new ``expert_slot`` arrays is first dispatched — in the async runtime
+this lands between ``wait()`` and ``submit()``, preserving the
+one-step-delayed contract.
+
 Both runtimes also dispatch the device-side chunked a2a↔FEC pipeline
 (repro.models.moe): per step the engine's scheduler timeline picks the
 chunk count K from the profiled stats (``Trainer._chunks_for_dispatch``;
@@ -55,6 +64,7 @@ from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.optim.adamw import AdamW, AdamWState, apply_updates
 from repro.parallel import ParallelCtx
+from repro.train import relocate
 from repro.train.runtime import (OverlapTelemetry, PlacementCache, PlanEvent,
                                  PlanPipeline, StepStats, run_plan)
 
@@ -104,6 +114,7 @@ class _Pending:
     plan: Optional[PlanEvent] = None
     a2a_chunks: int = 1
     chunk_stats: Optional[Dict[str, float]] = None
+    relocations: int = 0         # experts re-homed at this dispatch
 
 
 @dataclasses.dataclass
@@ -122,6 +133,15 @@ class Trainer:
         self._step_fn = make_train_step(self.cfg, self.ctx, self.optimizer,
                                         attn_impl=self.attn_impl,
                                         remat=self.remat)
+        self._relocate_fn = None     # jitted lazily on first migration
+        if self.engine is not None:
+            # The engine's device width is the single source of truth the
+            # packed placement arrays are shaped with; it must match the
+            # mesh's EP axis or the traced step mis-indexes shadow_devs.
+            ep = max(self.ctx.ep_size, 1)
+            assert self.engine.cfg.num_devices == ep, (
+                f"engine planned for {self.engine.cfg.num_devices} devices "
+                f"but the mesh EP axis has {ep}")
 
     def init_state(self, key, dtype=jnp.float32) -> TrainState:
         params = model_lib.init_params(key, self.cfg, dtype)
@@ -160,6 +180,46 @@ class Trainer:
         event.exposed = event.plan_time      # serial: fully exposed
         return event
 
+    def _maybe_relocate(self, state: TrainState) -> tuple:
+        """Execute a pending owner re-layout before the dependent
+        dispatch: permutes the expert-stacked params + optimizer slabs to
+        the planned slot layout (EP-axis exchange on a mesh).  Must run
+        after ``arrays_for_dispatch`` picked up the placement version that
+        carries the matching ``expert_slot`` arrays, and — in the async
+        runtime — between ``wait()`` and ``submit()``, where the planner
+        worker is idle.  Returns ``(state, num_experts_moved)``."""
+        if self.engine is None or not getattr(self.engine,
+                                              "migration_enabled", False):
+            return state, 0
+        gather = self.engine.pending_relocation()
+        if gather is None:
+            return state, 0
+        moved = len(self.engine.relocations())
+        if self._relocate_fn is None:
+            self._relocate_fn = relocate.make_relocate_fn(self.cfg)
+        state = relocate.apply_relocation(state, self.cfg, gather,
+                                          relocate_fn=self._relocate_fn)
+        self.engine.mark_relocated()
+        return state, moved
+
+    def restore_home_layout(self, state: TrainState) -> TrainState:
+        """Undo any owner re-layout: expert-stacked weights and moments
+        back to the identity slot order.  Call before checkpointing — a
+        restored run binds a fresh engine that assumes the home layout,
+        so saving a migrated physical order would silently mis-route
+        every migrated expert after restore.  (The next dispatch simply
+        re-executes the pending relocation if training continues.)"""
+        if self.engine is None or not getattr(self.engine,
+                                              "migration_enabled", False):
+            return state
+        gather = self.engine.reset_layout()
+        if gather is None:
+            return state
+        if self._relocate_fn is None:
+            self._relocate_fn = relocate.make_relocate_fn(self.cfg)
+        return relocate.apply_relocation(state, self.cfg, gather,
+                                         relocate_fn=self._relocate_fn)
+
     @staticmethod
     def _stats_for(pending: _Pending, loss: float, t_next: float) -> StepStats:
         ev = pending.plan
@@ -177,6 +237,7 @@ class Trainer:
             a2a_chunks=pending.a2a_chunks,
             a2a_gbytes=cs.get("a2a_gbytes", 0.0),
             comm_hidden_frac=cs.get("comm_hidden_frac", 0.0),
+            relocations=pending.relocations,
         )
 
     def _chunks_for_dispatch(self) -> tuple:
@@ -202,6 +263,7 @@ class Trainer:
         for step in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
             placements = cache.arrays_for_dispatch()
+            state, relocated = self._maybe_relocate(state)
             chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
             state, metrics = self._step_fn(state, batch, placements,
@@ -212,7 +274,8 @@ class Trainer:
                 plan = self._observe_inline(metrics["counts"])
             pending = _Pending(step, metrics, t_dispatch,
                                cache.last_upload_time, cache.version,
-                               cache.fingerprint, plan, chunks, chunk_stats)
+                               cache.fingerprint, plan, chunks, chunk_stats,
+                               relocated)
             self._emit(self._stats_for(pending, loss, time.perf_counter()),
                        history, t0, log_every, log_fn, stats_sink, telemetry)
         return state, history
@@ -236,7 +299,10 @@ class Trainer:
                     pending.plan = event
                 placements = cache.arrays_for_dispatch()
                 # Safe to read engine state here: the planner worker is
-                # idle between wait() and the submit() below.
+                # idle between wait() and the submit() below — the same
+                # window the relocation exchange must land in, so the
+                # dispatch below runs with weights matching expert_slot.
+                state, relocated = self._maybe_relocate(state)
                 chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
                 state, metrics = self._step_fn(state, batch, placements,
@@ -255,7 +321,8 @@ class Trainer:
                                    cache.last_upload_time, cache.version,
                                    cache.fingerprint,
                                    a2a_chunks=chunks,
-                                   chunk_stats=chunk_stats)
+                                   chunk_stats=chunk_stats,
+                                   relocations=relocated)
             # Drain: the final step's loss and its (now unused) plan.
             if pipeline is not None:
                 final_event = pipeline.wait()
@@ -277,8 +344,11 @@ def make_engine_for(cfg: ModelConfig, ctx: ParallelCtx, *,
                     policy: str = "pro_prophet",
                     replan_interval: int = 1,
                     bandwidth: float = 25e9,
-                    flops_per_s: float = 70e12) -> Optional[ProProphetEngine]:
-    """Engine wired to a model config (None for non-MoE archs)."""
+                    flops_per_s: float = 70e12,
+                    migration: bool = False) -> Optional[ProProphetEngine]:
+    """Engine wired to a model config (None for non-MoE archs).
+    ``migration`` enables dynamic expert migration (owner re-layout);
+    ``REPRO_MIGRATION`` overrides either way."""
     if cfg.moe is None:
         return None
     nm = 3 if cfg.ffn_kind == "swiglu" else 2
@@ -292,5 +362,6 @@ def make_engine_for(cfg: ModelConfig, ctx: ParallelCtx, *,
         s_max=cfg.moe.s_max,
         replan_interval=replan_interval,
         policy=policy,
+        enable_migration=migration,
     )
     return ProProphetEngine(ec, hw)

@@ -48,6 +48,17 @@ def test_moe_pallas_mesh_equivalence():
 
 
 @pytest.mark.slow
+def test_migration_mesh_equivalence():
+    """Dynamic expert migration on a (2, 4) mesh: migrated layouts are
+    bit-identical at the layer level, and a persistent-skew trainer run
+    selects ≥1 migration, executes the EP-axis relocation, and keeps the
+    loss history bit-identical to the migration-disabled run."""
+    out = run_dist_script("migration_equivalence.py", timeout=900)
+    assert "MIGRATION_LAYER_EQUIVALENCE_PASS" in out
+    assert "MIGRATION_TRAINER_EQUIVALENCE_PASS" in out
+
+
+@pytest.mark.slow
 def test_chunked_a2a_mesh_equivalence():
     """Chunked a2a↔FEC pipeline on a (2, 4) mesh: K>1 bit-identical
     forward / round-off-equal backward at the layer level, K=1 trainer

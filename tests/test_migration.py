@@ -1,0 +1,518 @@
+"""Dynamic expert migration (owner re-layout): placement, planner,
+relocation, and trainer bit-identity — the fast single-device lane.
+The (2, 4)-mesh end-to-end run lives in tests/dist/migration_equivalence.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, GatingTrace, GreedyPlanner,
+                        HardwareSpec, PerfModel, ProProphetEngine,
+                        traditional)
+from repro.core.placement import ExpertPlacement, default_owner
+
+
+def hw(d=512, f=1024, bw=25e9, fl=70e12, **kw):
+    return HardwareSpec.from_model_dims(d, f, bandwidth=bw, flops_per_s=fl,
+                                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Placement: owner permutation mechanics
+# ---------------------------------------------------------------------------
+
+class TestMigrationPlacement:
+    def test_identity_normalizes(self):
+        pl = ExpertPlacement(8, 4, {}, tuple(range(8)))
+        assert pl.slot_of is None
+        assert pl == traditional(8, 4)
+        assert pl.num_migrated == 0
+
+    def test_with_migration_rehomes(self):
+        pl = traditional(8, 4)
+        m = pl.with_migration(0, 3)
+        assert int(m.owner[0]) == 3
+        # the displaced partner (first expert on device 3) moved to 0
+        assert int(m.owner[6]) == 0
+        assert m.num_migrated == 2
+        # everyone else untouched, slot counts per device static
+        np.testing.assert_array_equal(
+            np.sort(m.owner), np.sort(default_owner(8, 4)))
+
+    def test_with_migration_noop_and_partner(self):
+        pl = traditional(8, 4)
+        assert pl.with_migration(0, 0) is pl
+        m = pl.with_migration(1, 2, partner=5)
+        assert int(m.owner[1]) == 2 and int(m.owner[5]) == 0
+        with pytest.raises(AssertionError):
+            pl.with_migration(1, 2, partner=0)   # partner not owned by dst
+
+    def test_rejects_bad_permutation(self):
+        with pytest.raises(AssertionError):
+            ExpertPlacement(4, 2, {}, (0, 0, 1, 2))
+        with pytest.raises(AssertionError):
+            ExpertPlacement(4, 2, {}, (0, 1, 2))
+
+    def test_migration_prunes_conflicting_shadows(self):
+        pl = traditional(8, 4).with_shadow(0, frozenset({2, 3}))
+        m = pl.with_migration(0, 3, partner=6)
+        # expert 0 now lives on 3 — its shadow there must be gone
+        assert 3 not in m.shadows.get(0, frozenset())
+        assert 2 in m.shadows[0]
+
+    def test_compute_loads_honor_new_home(self):
+        g = np.zeros((4, 8))
+        g[:, 0] = 100.0
+        pl = traditional(8, 4)
+        H0, R0 = pl.compute_loads(g)
+        assert H0[0] == 400 and R0[0] == 300
+        m = pl.with_migration(0, 2, partner=4)
+        H1, R1 = m.compute_loads(g)
+        assert H1[2] == 400 and R1[2] == 300 and H1[0] == 0
+        assert H1.sum() == g.sum()
+
+    def test_diff_and_relocation_gather(self):
+        pl = traditional(8, 4)
+        m = pl.with_migration(0, 3, partner=6)
+        assert m.diff(pl) == [(0, 0, 3), (6, 3, 0)]
+        gather = m.relocation_gather(pl)
+        # new slot s holds old slot gather[s]'s weights
+        old = np.arange(8)
+        new = old[gather]
+        np.testing.assert_array_equal(new[m.slots], np.arange(8))
+        # chained migrations compose through diff against any base
+        m2 = m.with_migration(1, 2, partner=4)
+        g2 = m2.relocation_gather(m)
+        np.testing.assert_array_equal(old[gather][g2][m2.slots],
+                                      np.arange(8))
+
+    def test_device_arrays_carry_slots(self):
+        m = traditional(8, 4).with_migration(0, 3, partner=6)
+        arrs = m.to_device_arrays(2)
+        np.testing.assert_array_equal(arrs["expert_slot"], m.slots)
+        assert arrs["expert_slot"].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# Planner: migrate-vs-shadow scoring
+# ---------------------------------------------------------------------------
+
+def _persistent_g(d=4, e=8):
+    """Device 0 owns two hot experts — re-homing one balances."""
+    g = np.full((d, e), 10.0)
+    g[:, 0] = 300.0
+    g[:, 1] = 250.0
+    return g
+
+
+class TestMigrationPlanner:
+    def _planner(self, strategy, window, d=4, **kw):
+        return GreedyPlanner(PerfModel(hw(), d), n=0, alpha=0.0, s_max=4,
+                             strategy=strategy, migrate_window=window, **kw)
+
+    def test_migrate_wins_for_persistent_skew(self):
+        res = self._planner("both", window=500).plan(_persistent_g())
+        assert res.num_migrations >= 1
+        assert res.placement.num_migrated == res.num_migrations
+        assert res.predicted_time <= res.baseline_time
+
+    def test_shadow_wins_for_transient_skew(self):
+        """window → 1: the one-time move amortizes over nothing and the
+        per-step shadow Trans is cheaper."""
+        res = self._planner("both", window=1).plan(_persistent_g())
+        assert res.num_migrations == 0
+        assert res.placement.num_shadowed >= 1
+
+    def test_migration_reduces_steadystate_trans_bytes(self):
+        pm = PerfModel(hw(), 4)
+        r_sh = self._planner("shadow", window=500).plan(_persistent_g())
+        r_bo = self._planner("both", window=500).plan(_persistent_g())
+        t_sh = pm.t_trans(r_sh.placement.num_shadowed, 0)
+        t_bo = pm.t_trans(r_bo.placement.num_shadowed, 0)
+        assert r_bo.num_migrations >= 1
+        assert t_bo < t_sh
+
+    def test_shadow_strategy_bit_identical_to_legacy(self):
+        """strategy='shadow' must reproduce the pre-migration planner
+        exactly — the disabled path is the paper's Algorithm 1."""
+        d = 8
+        for seed in range(8):
+            g = GatingTrace(d, d * 2, 1024, skew=0.2, drift=0.0,
+                            seed=seed).step()
+            for scheduled in (False, True):
+                a = GreedyPlanner(PerfModel(hw(), d), n=2, alpha=0.1,
+                                  s_max=6, scheduled=scheduled).plan(g)
+                b = GreedyPlanner(PerfModel(hw(), d), n=2, alpha=0.1,
+                                  s_max=6, scheduled=scheduled,
+                                  strategy="shadow",
+                                  migrate_window=1e9).plan(g)
+                assert a.placement == b.placement
+                assert a.predicted_time == b.predicted_time
+                assert b.num_migrations == 0
+
+    def test_migrate_only_strategy(self):
+        res = self._planner("migrate", window=500).plan(_persistent_g())
+        assert res.placement.num_shadowed == 0
+        assert res.num_migrations >= 1
+
+    def test_migrate_incremental_loads_match_recompute(self):
+        """The O(1) swap update of (H, R) inside the greedy loop must
+        match a full compute_loads of the migrated placement (both
+        experts unshadowed, the loop's invariant)."""
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            D, E = 4, 12
+            g = rng.integers(0, 200, size=(D, E)).astype(np.float64)
+            cur = traditional(E, D).with_shadow(
+                3, frozenset({1, 2}))          # unrelated shadow present
+            H, R = cur.compute_loads(g)
+            e, dst = 0, int(rng.integers(1, D))
+            # the greedy loop never swaps shadowed experts — respect it
+            partner = int([p for p in np.where(cur.owner == dst)[0]
+                           if p not in cur.shadows][0])
+            tot_e, tot_p = float(g[:, e].sum()), float(g[:, partner].sum())
+            src = int(cur.owner[e])
+            H_mg, R_mg = H.copy(), R.copy()
+            H_mg[src] += tot_p - tot_e
+            H_mg[dst] += tot_e - tot_p
+            R_mg[src] += (tot_p - g[src, partner]) - (tot_e - g[src, e])
+            R_mg[dst] += (tot_e - g[dst, e]) - (tot_p - g[dst, partner])
+            H_full, R_full = cur.with_migration(
+                e, dst, partner).compute_loads(g)
+            np.testing.assert_allclose(H_mg, H_full)
+            np.testing.assert_allclose(R_mg, R_full)
+
+    def test_relocation_skips_untouched_layers(self):
+        """active_gathers drops identity layers so the exchange only
+        touches what moved."""
+        from repro.configs import get_config, reduced
+        from repro.train import relocate
+        cfg = reduced(get_config("moe-gpt-s"))
+        E, L = cfg.moe.num_experts, cfg.num_moe_layers
+        gather = np.tile(np.arange(E, dtype=np.int32), (L, 1))
+        assert all(p is None
+                   for p in relocate.active_gathers(cfg, gather))
+        gather[1, :2] = [1, 0]                 # swap in layer 1 only
+        live = relocate.active_gathers(cfg, gather)
+        assert sum(p is not None for p in live) == 1
+        (stage,) = [p for p in live if p is not None]
+        assert len(stage) == 1                 # one macro position live
+        # the stacked rows carry the per-repeat gathers for that position
+        rows = np.asarray(next(iter(stage.values())))
+        assert rows.shape[-1] == E
+
+    def test_t_migrate_amortization(self):
+        pm = PerfModel(hw(), 4)
+        assert pm.t_migrate(0, window=10) == 0.0
+        assert pm.t_migrate(1, window=100) == pytest.approx(
+            pm.t_migrate(1, window=10) / 10)
+        assert pm.t_migrate(2, window=10) == pytest.approx(
+            2 * pm.t_migrate(1, window=10))
+
+
+# ---------------------------------------------------------------------------
+# Engine: relocation schedule
+# ---------------------------------------------------------------------------
+
+def _mig_engine(layers=2, d=4, e=8, enabled=True):
+    """Comm-bound profile: per-step Trans expensive, migration wins."""
+    ec = EngineConfig(num_experts=e, num_devices=d, num_moe_layers=layers,
+                      s_max=4, alpha=0.0, scheduled=False,
+                      enable_migration=enabled, migrate_window=500.0)
+    return ProProphetEngine(ec, hw(bw=1e9, fl=200e12))
+
+
+class TestEngineRelocation:
+    def test_relocation_lifecycle(self):
+        eng = _mig_engine()
+        g = _persistent_g()
+        eng.observe([g, g])
+        assert any(p.num_migrated for p in eng.placements)
+        gather = eng.pending_relocation()
+        assert gather is not None and gather.shape == (2, 8)
+        relocs = eng.relocations()
+        assert relocs and all(len(r) == 4 for r in relocs)
+        arrs = eng.step_arrays()
+        np.testing.assert_array_equal(arrs["expert_slot"][0],
+                                      eng.placements[0].slots)
+        eng.mark_relocated()
+        assert eng.pending_relocation() is None
+        assert eng.relocations() == []
+        # stable skew ⇒ stable plan ⇒ no churn
+        v = eng.placements_version
+        eng.observe([g, g])
+        assert eng.placements_version == v
+        assert eng.pending_relocation() is None
+
+    def test_disabled_engine_never_migrates(self):
+        eng = _mig_engine(enabled=False)
+        g = _persistent_g()
+        eng.observe([g, g])
+        assert all(p.num_migrated == 0 for p in eng.placements)
+        assert eng.pending_relocation() is None
+        np.testing.assert_array_equal(
+            eng.step_arrays()["expert_slot"],
+            np.tile(np.arange(8), (2, 1)))
+
+    def test_flag_overrides_config(self, monkeypatch):
+        monkeypatch.setenv("REPRO_MIGRATION", "0")
+        assert _mig_engine(enabled=True).migration_enabled is False
+        monkeypatch.setenv("REPRO_MIGRATION", "1")
+        assert _mig_engine(enabled=False).migration_enabled is True
+
+
+# ---------------------------------------------------------------------------
+# Device path: identity relocation ≡ current path (single-device fast lane)
+# ---------------------------------------------------------------------------
+
+class TestRelocationDevicePath:
+    def _setup(self, E=8, d=16, f=32):
+        from repro.models import moe
+        from repro.parallel import local_ctx
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        params = moe.moe_init(ks[0], d, f, E, ffn_kind="swiglu")
+        x = 0.5 * jax.random.normal(ks[1], (2, 16, d))
+        kw = dict(num_experts=E, top_k=2, d_expert=f, ffn_kind="swiglu",
+                  capacity_factor=4.0, shadow_capacity_factor=4.0, s_max=2)
+        return moe, local_ctx(), params, x, kw
+
+    def test_identity_expert_slot_bit_identical(self):
+        moe, ctx, params, x, kw = self._setup()
+        E = kw["num_experts"]
+        y0, aux0 = moe.moe_apply(params, x, None, ctx, **kw)
+        ident = {"shadow_idx": jnp.full((2,), E, jnp.int32),
+                 "shadow_valid": jnp.zeros((2,), jnp.float32),
+                 "shadow_devs": jnp.zeros((2, 1), jnp.float32),
+                 "expert_slot": jnp.arange(E, dtype=jnp.int32)}
+        y1, aux1 = moe.moe_apply(params, x, ident, ctx, **kw)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+        np.testing.assert_array_equal(np.asarray(aux0["counts"]),
+                                      np.asarray(aux1["counts"]))
+        # pre-migration placement dicts (no expert_slot key) still work
+        y2, _ = moe.moe_apply(params, x,
+                              {k: v for k, v in ident.items()
+                               if k != "expert_slot"}, ctx, **kw)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y2))
+
+    def test_permuted_slots_with_relocated_weights_bit_identical(self):
+        """A migrated layout (slot permutation + physically permuted
+        weights) computes the same outputs and (row-permuted) grads."""
+        moe, ctx, params, x, kw = self._setup()
+        E = kw["num_experts"]
+        rng = np.random.default_rng(3)
+        slot_of = rng.permutation(E)
+        inv = np.empty(E, int)
+        inv[slot_of] = np.arange(E)
+        p2 = dict(params)
+        for nm in ("wi", "wg", "wo"):
+            p2[nm] = params[nm][inv]
+        pl = {"shadow_idx": jnp.full((2,), E, jnp.int32),
+              "shadow_valid": jnp.zeros((2,), jnp.float32),
+              "shadow_devs": jnp.zeros((2, 1), jnp.float32),
+              "expert_slot": jnp.asarray(slot_of, jnp.int32)}
+
+        def loss(p, pp):
+            yy, _ = moe.moe_apply(p, x, pp, ctx, **kw)
+            return jnp.sum(yy ** 2)
+
+        y0, aux0 = moe.moe_apply(params, x, None, ctx, **kw)
+        y2, aux2 = moe.moe_apply(p2, x, pl, ctx, **kw)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y2))
+        assert float(aux0["dropped"]) == float(aux2["dropped"])
+        g0 = jax.grad(loss)(params, None)
+        g2 = jax.grad(loss)(p2, pl)
+        for nm in ("wi", "wg", "wo"):
+            np.testing.assert_array_equal(np.asarray(g0[nm]),
+                                          np.asarray(g2[nm])[slot_of])
+
+    def test_apply_relocation_identity_is_noop(self):
+        from repro.configs import get_config, reduced
+        from repro.optim import adamw
+        from repro.parallel import local_ctx
+        from repro.train import Trainer, relocate
+        cfg = reduced(get_config("moe-gpt-s"))
+        tr = Trainer(cfg, local_ctx(), adamw(1e-3), attn_impl="naive",
+                     remat=False)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        E = cfg.moe.num_experts
+        gather = np.tile(np.arange(E, dtype=np.int32),
+                         (cfg.num_moe_layers, 1))
+        # snapshot first: apply_relocation donates (and deletes) its input
+        before = [np.asarray(a) for a in jax.tree.leaves(state)]
+        new = relocate.apply_relocation(state, cfg, gather)
+        for a, b in zip(before, jax.tree.leaves(new)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+    def test_restore_home_layout_roundtrip(self):
+        """Relocate → restore_home_layout returns the state to the
+        identity slot order bitwise (checkpoints are always saved in
+        home order — a restored run binds a fresh engine)."""
+        from repro.configs import get_config, reduced
+        from repro.optim import adamw
+        from repro.parallel import local_ctx
+        from repro.train import Trainer, relocate
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+        eng = _mig_engine(layers=cfg.num_moe_layers, d=1,
+                          e=cfg.moe.num_experts)
+        tr = Trainer(cfg, ctx, adamw(1e-3), attn_impl="naive", remat=False,
+                     engine=eng)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        before = [np.asarray(a) for a in jax.tree.leaves(state)]
+        E, L = cfg.moe.num_experts, cfg.num_moe_layers
+        # pretend the engine executed a swap relocation earlier
+        slot_of = np.arange(E)
+        slot_of[0], slot_of[1] = slot_of[1], slot_of[0]
+        gather = np.tile(np.argsort(slot_of).astype(np.int32), (L, 1))
+        state = relocate.apply_relocation(state, cfg, gather)
+        eng._device_slots = [slot_of.copy() for _ in range(L)]
+        state = tr.restore_home_layout(state)
+        assert eng.reset_layout() is None       # device back home
+        for a, b in zip(before, jax.tree.leaves(state)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+    def test_mid_run_relocation_loss_bit_identity(self):
+        """Sync-runtime contract at the step level: permuting state with
+        apply_relocation and dispatching with the matching expert_slot
+        arrays mid-run leaves the loss trajectory bit-identical (no grad
+        clipping: the step is exactly permutation-equivariant)."""
+        from repro.configs import get_config, reduced
+        from repro.data import SyntheticLM
+        from repro.optim import adamw, cosine
+        from repro.parallel import local_ctx
+        from repro.train import Trainer, relocate
+        from repro.train.trainer import make_train_step
+
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+        E, L = cfg.moe.num_experts, cfg.num_moe_layers
+        opt = adamw(cosine(3e-3, 2, 6), clip_norm=None)
+        tr = Trainer(cfg, ctx, opt, attn_impl="naive", remat=False)
+        step_fn = make_train_step(cfg, ctx, opt, attn_impl="naive",
+                                  remat=False, donate=False)
+        import itertools
+        data = list(itertools.islice(iter(SyntheticLM(cfg, batch=2, seq=16)),
+                                     6))
+
+        def arrays(slot_of):
+            s_max = cfg.moe.s_max
+            return {
+                "shadow_idx": jnp.full((L, s_max), E, jnp.int32),
+                "shadow_valid": jnp.zeros((L, s_max), jnp.float32),
+                "shadow_devs": jnp.zeros((L, s_max, 1), jnp.float32),
+                "expert_slot": jnp.tile(jnp.asarray(slot_of, jnp.int32),
+                                        (L, 1)),
+            }
+
+        def batches():
+            for b in data:
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+
+        # baseline: identity layout throughout
+        state = tr.init_state(jax.random.PRNGKey(0))
+        base = []
+        pl = arrays(np.arange(E))
+        for b in batches():
+            state, m = step_fn(state, b, pl)
+            base.append(float(m["loss"]))
+
+        # migrated: swap two experts after step 3 (state + dispatch form)
+        slot_of = np.arange(E)
+        slot_of[0], slot_of[-1] = slot_of[-1], slot_of[0]
+        # device was at identity: gather[s] = expert occupying new slot s
+        gather = np.tile(np.argsort(slot_of).astype(np.int32), (L, 1))
+        state = tr.init_state(jax.random.PRNGKey(0))
+        got = []
+        for i, b in enumerate(batches()):
+            if i == 3:
+                state = relocate.apply_relocation(state, cfg, gather)
+                pl = arrays(slot_of)
+            state, m = step_fn(state, b, pl)
+            got.append(float(m["loss"]))
+        assert got == base
+
+
+# ---------------------------------------------------------------------------
+# Fast-lane CI guard: migration-disabled trainer ≡ pre-migration numerics
+# ---------------------------------------------------------------------------
+
+class TestDisabledPathGuard:
+    def test_disabled_trainer_matches_slotless_arrays(self):
+        """With migration off, the dispatched expert_slot arrays are
+        identity — stripping the key entirely (the pre-migration array
+        set) must be bit-identical in losses.  Guards the --fast lane
+        against numeric drift from the owner threading without the
+        subprocess tests."""
+        from repro.configs import get_config, reduced
+        from repro.data import SyntheticLM
+        from repro.optim import adamw, cosine
+        from repro.parallel import local_ctx
+        from repro.train import Trainer
+        from repro.train.trainer import make_engine_for
+
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+        steps = 6
+
+        def run(strip_slots):
+            eng = make_engine_for(cfg, ctx)
+            assert eng.migration_enabled is False
+            if strip_slots:
+                orig = eng.step_arrays
+
+                def slotless():
+                    arrs = orig()
+                    arrs.pop("expert_slot")
+                    return arrs
+                eng.step_arrays = slotless
+            tr = Trainer(cfg, ctx, adamw(cosine(3e-3, 2, steps)),
+                         attn_impl="naive", remat=False, engine=eng,
+                         async_plan=False)
+            state = tr.init_state(jax.random.PRNGKey(0))
+            data = SyntheticLM(cfg, batch=2, seq=16)
+            sink = []
+            _, hist = tr.run(state, data, num_steps=steps, log_every=0,
+                             stats_sink=sink)
+            assert all(s.relocations == 0 for s in sink)
+            return hist
+
+        assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# Aux loss regression (satellite): top-k dispatch fractions
+# ---------------------------------------------------------------------------
+
+class TestLoadBalanceLossTopK:
+    def test_hand_computed_top2(self):
+        """3 tokens, 4 experts, k=2: dispatch fractions must count BOTH
+        choices, each normalized by k·N = 6."""
+        from repro.models.moe import load_balance_loss
+        probs = jnp.array([[0.4, 0.3, 0.2, 0.1],
+                           [0.1, 0.4, 0.3, 0.2],
+                           [0.25, 0.25, 0.25, 0.25]])
+        idx = jnp.array([[0, 1], [1, 2], [1, 3]], jnp.int32)
+        me = np.asarray(probs).mean(0)
+        ce = np.array([1, 3, 1, 1]) / 6.0       # selections per expert / kN
+        expect = 4 * float(np.sum(me * ce))
+        got = float(load_balance_loss(probs, idx, 4))
+        assert got == pytest.approx(expect, rel=1e-6)
+        # the old idx[..., 0]-only version would see ce = [1,2,0,0]/3
+        wrong = 4 * float(np.sum(me * np.array([1, 2, 0, 0]) / 3.0))
+        assert got != pytest.approx(wrong, rel=1e-3)
+
+    def test_top1_unchanged(self):
+        """k=1 must reproduce the original first-choice-only math."""
+        from repro.models.moe import load_balance_loss
+        key = jax.random.PRNGKey(0)
+        probs = jax.nn.softmax(jax.random.normal(key, (2, 5, 4)), -1)
+        idx = jnp.argmax(probs, -1, keepdims=True).astype(jnp.int32)
+        got = float(load_balance_loss(probs, idx, 4))
+        onehot = jax.nn.one_hot(idx[..., 0], 4)
+        ce = onehot.mean(axis=(0, 1))
+        me = probs.mean(axis=(0, 1))
+        assert got == pytest.approx(float(4 * jnp.sum(me * ce)), rel=1e-6)
