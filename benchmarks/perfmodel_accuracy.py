@@ -73,13 +73,49 @@ def run():
         for fec_t in (1e-4, 2e-3, 1e-2):
             for k in (1, 2, 4, 8):
                 for oh in (0.0, 2e-5):
-                    tl = _sched.chunked_makespan(a2a_t, fec_t, k,
-                                                 chunk_overhead=oh)
-                    cf = _PM.chunked_path_time(a2a_t, fec_t, k,
-                                               chunk_overhead=oh)
-                    cerrs.append(abs(cf - tl) / tl)
+                    # incl. the serial HBM-bound permute legs (dispatch
+                    # fronts the pipeline, combine tails it)
+                    for td, tc in ((0.0, 0.0), (3e-4, 5e-4)):
+                        tl = _sched.chunked_makespan(
+                            a2a_t, fec_t, k, chunk_overhead=oh,
+                            t_dispatch=td, t_combine=tc)
+                        cf = _PM.chunked_path_time(
+                            a2a_t, fec_t, k, chunk_overhead=oh,
+                            t_dispatch=td, t_combine=tc)
+                        cerrs.append(abs(cf - tl) / tl)
     rows.append(("perfmodel/chunked_overlap_err", 0.0,
                  float(np.mean(cerrs))))
+
+    # --- token-permutation terms vs the kernels' modeled bytes ---------
+    # PerfModel.t_dispatch/t_combine must price exactly the traffic the
+    # token_permute kernels model (dispatch_modeled_bytes /
+    # combine_modeled_bytes) over the HBM bandwidth, for both the Pallas
+    # and jnp paths.  Target: < 1e-12 relative (same closed forms, float
+    # association noise only).
+    from repro.core.perfmodel import HardwareSpec as _HW
+    from repro.core.perfmodel import PerfModel as _PM2
+    from repro.kernels.token_permute import (combine_modeled_bytes,
+                                             dispatch_modeled_bytes)
+    perrs = []
+    for d_model in (256, 1024):
+        hw2 = _HW(bandwidth=1e9, throughput=1e9,
+                  input_bytes=d_model * 2, expert_param_bytes=1e6)
+        pm2 = _PM2(hw2, 8)
+        for n in (2048, 8192):
+            for k in (1, 2, 4):
+                slots = int(1.25 * n * k)
+                for pallas in (True, False):
+                    pairs = (
+                        (pm2.t_dispatch(n, slots, top_k=k, pallas=pallas),
+                         dispatch_modeled_bytes(n, slots, d_model, top_k=k,
+                                                pallas=pallas)),
+                        (pm2.t_combine(n, slots, top_k=k, pallas=pallas),
+                         combine_modeled_bytes(n, slots, d_model, top_k=k,
+                                               pallas=pallas)))
+                    for t, b in pairs:
+                        perrs.append(abs(t * hw2.hbm_bandwidth - b) / b)
+    assert max(perrs) < 1e-12, max(perrs)
+    rows.append(("perfmodel/permute_bytes_err", 0.0, float(max(perrs))))
 
     # --- A2A stand-in: token permutation, linear in max R_i (eq. 1) ----
     perm = jax.jit(lambda x, i: x[i])

@@ -149,6 +149,24 @@ def moe_ffn_section():
         table(), ""])
 
 
+def dispatch_section():
+    from .dispatch import CAPACITY_FACTOR, table
+    return "\n".join([
+        "## §Token permutation", "",
+        "Modeled HBM traffic of the MoE capacity dispatch/combine "
+        "(`repro.kernels.token_permute`, enabled by "
+        "`REPRO_DISPATCH_PALLAS`) vs the jnp scatter/gather, over the "
+        f"N/k/E grid (capacity factor {CAPACITY_FACTOR}).  The jnp "
+        "dispatch repeats the activations k× and read-modify-writes the "
+        "capacity buffer; the jnp combine materializes the `[N, k, d]` "
+        "gather in f32.  The kernels stream the token panel and the "
+        "buffer once each — `PerfModel.t_dispatch`/`t_combine` price "
+        "both paths (agreement with these formulas pinned < 1e-12 in "
+        "`perfmodel_accuracy.py`), and `benchmarks.dispatch` writes the "
+        "sweep to `BENCH_dispatch.json` as the perf trajectory seed.", "",
+        table(), ""])
+
+
 def main():
     header = os.path.join(os.path.dirname(__file__), "..",
                           "EXPERIMENTS.header.md")
@@ -157,6 +175,7 @@ def main():
     print(dryrun_section())
     print(roofline_section())
     print(moe_ffn_section())
+    print(dispatch_section())
     print(perf_section())
 
 

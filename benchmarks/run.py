@@ -10,12 +10,13 @@ import time
 
 
 def main() -> None:
-    from . import (ablation, balance, breakdown, cadence, end_to_end,
-                   fine_grained, locality, moe_ffn, perfmodel_accuracy,
-                   policies, roofline)
+    from . import (ablation, balance, breakdown, cadence, dispatch,
+                   end_to_end, fine_grained, locality, moe_ffn,
+                   perfmodel_accuracy, policies, roofline)
     modules = [
         ("locality(Fig4)", locality),
         ("moe_ffn(ragged-GMM)", moe_ffn),
+        ("dispatch(token-permute)", dispatch),
         ("breakdown(TableI)", breakdown),
         ("end_to_end(TablesIV-V,Fig10)", end_to_end),
         ("fine_grained(Figs11-12)", fine_grained),

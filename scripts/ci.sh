@@ -21,6 +21,16 @@
 #                             migration run is @slow:
 #                             tests/test_distributed.py::
 #                             test_migration_mesh_equivalence
+#                             The token-permutation kernels
+#                             (tests/test_token_permute.py: dispatch/
+#                             combine oracle + VJP sweeps, the
+#                             capacity_positions micro-opt oracle, the
+#                             hypothesis property suite, and the
+#                             REPRO_DISPATCH_PALLAS on/off layer
+#                             equivalence for K∈{1,2,4}) are all fast
+#                             lane; the (2,4)-mesh on/off sweep is
+#                             @slow: tests/test_distributed.py::
+#                             test_dispatch_pallas_mesh_equivalence
 #
 # Extra args pass through to pytest, e.g.  scripts/ci.sh -k planner
 set -euo pipefail

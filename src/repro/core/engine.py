@@ -76,6 +76,16 @@ class EngineConfig:
     # chooser at K=1 when the a2a is too small to be worth splitting.
     a2a_chunk_candidates: Tuple[int, ...] = (1, 2, 4, 8)
     a2a_chunk_overhead: float = 20e-6
+    # Token-permutation pricing (repro.kernels.token_permute): the
+    # HBM-bound dispatch/combine legs around the expert FFN, serial with
+    # the chunked pipeline.  The chunk chooser's argmin is invariant to
+    # them (they shift every K equally) but the telemetry makespans are
+    # honest only when they are counted.  ``top_k`` and
+    # ``capacity_factor`` mirror the layer config so the capacity-slot
+    # count (G·C = top_k · capacity_factor · local tokens) matches what
+    # the device allocates.
+    top_k: int = 2
+    capacity_factor: float = 1.25
 
 
 class ProProphetEngine:
@@ -268,18 +278,34 @@ class ProProphetEngine:
     # ------------------------------------------------------------------
     # Chunked a2a↔FEC pipelining (§V realized on-device)
     # ------------------------------------------------------------------
-    def _layer_costs(self, li: int) -> Optional[Tuple[float, float, float]]:
-        """(t_a2a, t_fec, received_tokens) of layer ``li`` under its
-        current placement and last observed routing stats, or None
-        before any observe.  One ``compute_loads`` serves the chunk
-        chooser and the telemetry — this runs on the dispatch path."""
+    def _layer_costs(self, li: int
+                     ) -> Optional[Tuple[float, float, float, float, float]]:
+        """(t_a2a, t_fec, received_tokens, t_dispatch, t_combine) of
+        layer ``li`` under its current placement and last observed
+        routing stats, or None before any observe.  One
+        ``compute_loads`` serves the chunk chooser and the telemetry —
+        this runs on the dispatch path.  The permute legs price
+        whichever path REPRO_DISPATCH_PALLAS selects on this process
+        (the Pallas kernels by default on TPU, the jnp scatter/gather
+        when forced off) on the profiled per-device token count."""
+        from repro import flags
         g = self._last_g[li]
         if g is None:
             return None
         H, R = self._placements[li].compute_loads(g)
-        return self.perf.t_a2a(R), self.perf.t_fec(H), float(np.sum(R))
+        n_loc = float(np.sum(g)) / max(self.cfg.num_devices, 1) \
+            / max(self.cfg.top_k, 1)                  # tokens per device
+        slots = self.cfg.top_k * self.cfg.capacity_factor * n_loc   # G·C
+        pallas = flags.dispatch_pallas()
+        t_disp = self.perf.t_dispatch(n_loc, slots, top_k=self.cfg.top_k,
+                                      pallas=pallas)
+        t_comb = self.perf.t_combine(n_loc, slots, top_k=self.cfg.top_k,
+                                     pallas=pallas)
+        return (self.perf.t_a2a(R), self.perf.t_fec(H), float(np.sum(R)),
+                t_disp, t_comb)
 
-    def _all_layer_costs(self) -> List[Optional[Tuple[float, float, float]]]:
+    def _all_layer_costs(
+            self) -> List[Optional[Tuple[float, float, float, float, float]]]:
         """Per-layer costs, memoized until the next observe/replan (the
         trainer calls chunk_plan and chunk_stats back to back on the
         dispatch path; one compute_loads per layer serves both)."""
@@ -304,10 +330,11 @@ class ProProphetEngine:
             if costs is None:
                 plan.append(1)
                 continue
-            t_a2a, t_fec, _ = costs
+            t_a2a, t_fec, _, t_disp, t_comb = costs
             plan.append(scheduler.choose_chunks(
                 t_a2a, t_fec, candidates=self.cfg.a2a_chunk_candidates,
-                chunk_overhead=self.cfg.a2a_chunk_overhead))
+                chunk_overhead=self.cfg.a2a_chunk_overhead,
+                t_dispatch=t_disp, t_combine=t_comb))
         return plan
 
     def chunk_stats(self, plan: Optional[Sequence[int]] = None
@@ -316,7 +343,10 @@ class ProProphetEngine:
         (default: :meth:`chunk_plan`), summed over MoE layers:
 
         ``serial_s`` / ``chunked_s`` — K=1 vs chunked timeline makespan of
-        the forward expert paths; ``comm_hidden_frac`` — fraction of a2a
+        the forward expert paths, both including the serial HBM-bound
+        dispatch/combine permute legs (``PerfModel.t_dispatch`` /
+        ``t_combine`` — they cancel in the hidden-comm numerator but
+        keep the makespans honest); ``comm_hidden_frac`` — fraction of a2a
         wire time hidden under the ragged FEC (structural overlap of the
         timeline; the per-chunk launch overhead only steers the chooser);
         ``a2a_gbytes`` — modeled bytes all four a2as move per step (fwd
@@ -329,9 +359,11 @@ class ProProphetEngine:
         for k, costs in zip(plan, self._all_layer_costs()):
             if costs is None:
                 continue
-            t_a2a, t_fec, recv_tokens = costs
-            serial += scheduler.chunked_makespan_closed(t_a2a, t_fec, 1)
-            chunked += scheduler.chunked_makespan_closed(t_a2a, t_fec, k)
+            t_a2a, t_fec, recv_tokens, t_disp, t_comb = costs
+            serial += scheduler.chunked_makespan_closed(
+                t_a2a, t_fec, 1, t_dispatch=t_disp, t_combine=t_comb)
+            chunked += scheduler.chunked_makespan_closed(
+                t_a2a, t_fec, k, t_dispatch=t_disp, t_combine=t_comb)
             a2a_time += 2.0 * t_a2a
             gbytes += 4.0 * recv_tokens * self.perf.hw.input_bytes / 1e9
         frac = max(0.0, min(1.0, (serial - chunked) / a2a_time)) \

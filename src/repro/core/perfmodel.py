@@ -27,6 +27,11 @@ import numpy as np
 Array = np.ndarray
 TransMode = Literal["p2p", "ring"]
 
+# TPU v5e constants (per chip), used for roofline + TPU-mode predictions.
+V5E_PEAK_FLOPS = 197e12          # bf16 FLOP/s
+V5E_HBM_BW = 819e9               # bytes/s
+V5E_ICI_BW = 50e9                # bytes/s per link (≈per-device ring bw)
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
@@ -38,6 +43,9 @@ class HardwareSpec:
     expert_param_bytes: size(e.params) == size(e.grads) [bytes]
     t_fnec / t_bnec: measured fwd/bwd time of the *non*-MoE layer [s]
                      (static per model; used by eq. 8 and the sub-op split)
+    hbm_bandwidth: per-device HBM bandwidth [bytes/s] — prices the
+                   HBM-bound token-permutation legs (t_dispatch /
+                   t_combine), which move memory, not wire bytes
     """
 
     bandwidth: float
@@ -46,6 +54,7 @@ class HardwareSpec:
     expert_param_bytes: float
     t_fnec: float = 0.0
     t_bnec: float = 0.0
+    hbm_bandwidth: float = V5E_HBM_BW
 
     @staticmethod
     def from_model_dims(d_model: int, d_ff: int, *,
@@ -69,12 +78,6 @@ class HardwareSpec:
             t_fnec=t_fnec,
             t_bnec=t_bnec,
         )
-
-
-# TPU v5e constants (per chip), used for roofline + TPU-mode predictions.
-V5E_PEAK_FLOPS = 197e12          # bf16 FLOP/s
-V5E_HBM_BW = 819e9               # bytes/s
-V5E_ICI_BW = 50e9                # bytes/s per link (≈per-device ring bw)
 
 
 class PerfModel:
@@ -117,6 +120,42 @@ class PerfModel:
         kernel's win factor is 1 / utilization."""
         dense = self.t_fec_dense(capacity_slots)
         return self.t_fec(H) / dense if dense > 0 else 1.0
+
+    # -- token permutation (beyond-paper; repro.kernels.token_permute) ----
+    # The two data-dependent permutes around the expert FFN are
+    # HBM-bound, not wire-bound: dispatch streams the local token panel
+    # into the [G, C, d] capacity buffer and combine streams it back out
+    # through the gate reduction.  The closed forms below are the
+    # kernels' modeled-bytes table (token_permute.dispatch_modeled_bytes
+    # / combine_modeled_bytes) over hbm_bandwidth — the agreement is
+    # pinned to < 1e-12 in benchmarks/perfmodel_accuracy.py.  The jnp
+    # variants price what the pre-kernel path really moved: the k×
+    # activation repeat + scatter read-modify-write on dispatch, and the
+    # [N, k, d] gather plus its f32 copy (the ``8·d·N·k``-byte term —
+    # expressed via input_bytes and ``itemsize``) on combine.
+    def t_dispatch(self, n_tokens: float, capacity_slots: float, *,
+                   top_k: int = 1, pallas: bool = True) -> float:
+        """HBM time of one capacity dispatch of ``n_tokens`` local rows
+        into ``capacity_slots`` (= G·C) slots."""
+        if pallas:
+            units = n_tokens + capacity_slots
+        else:
+            units = n_tokens + 2.0 * n_tokens * top_k + 3.0 * capacity_slots
+        return units * self.hw.input_bytes / self.hw.hbm_bandwidth
+
+    def t_combine(self, n_tokens: float, capacity_slots: float, *,
+                  top_k: int = 1, pallas: bool = True,
+                  itemsize: int = 2) -> float:
+        """HBM time of one gate-weighted combine back to ``n_tokens``
+        rows.  ``itemsize`` sizes the jnp path's f32 blow-up relative to
+        ``input_bytes`` (= d·itemsize); the Pallas path never upcasts."""
+        if pallas:
+            b = (capacity_slots + n_tokens) * self.hw.input_bytes
+        else:
+            b = ((2.0 * n_tokens * top_k + n_tokens) * self.hw.input_bytes
+                 + 2.0 * n_tokens * top_k * 4.0
+                 * (self.hw.input_bytes / itemsize))
+        return b / self.hw.hbm_bandwidth
 
     # -- eqs. 4/5 ---------------------------------------------------------
     def _t_transfer(self, s: int, n: int, size: float) -> float:
@@ -172,36 +211,54 @@ class PerfModel:
     # -- chunked a2a↔FEC overlap (§V realized on-device; repro.models.moe)
     @staticmethod
     def chunked_path_time(t_a2a: float, t_comp: float, num_chunks: int, *,
-                          chunk_overhead: float = 0.0) -> float:
+                          chunk_overhead: float = 0.0,
+                          t_dispatch: float = 0.0,
+                          t_combine: float = 0.0) -> float:
         """Makespan of one K-chunk a2a→compute→a2a software pipeline:
         the closed form of the scheduler's sends-first list schedule
         (:func:`repro.core.scheduler.chunked_makespan_closed`; asserted
         equal to the graph timeline in ``benchmarks/perfmodel_accuracy``).
-        K=1 degenerates to the serial chain ``2·t_a2a + t_comp``."""
+        K=1 degenerates to the serial chain ``2·t_a2a + t_comp``.
+        ``t_dispatch``/``t_combine`` (the HBM-bound permute legs) front
+        and tail the pipeline serially — see the scheduler docstring."""
         from . import scheduler
         return scheduler.chunked_makespan_closed(
-            t_a2a, t_comp, num_chunks, chunk_overhead=chunk_overhead)
+            t_a2a, t_comp, num_chunks, chunk_overhead=chunk_overhead,
+            t_dispatch=t_dispatch, t_combine=t_combine)
 
     def chunked_expert_time(self, R: Array, H: Array, num_chunks: int, *,
-                            chunk_overhead: float = 0.0) -> float:
-        """Forward expert path (a2a → ragged FEC → a2a) under K chunks."""
+                            chunk_overhead: float = 0.0,
+                            t_dispatch: float = 0.0,
+                            t_combine: float = 0.0) -> float:
+        """Forward expert path (dispatch → a2a → ragged FEC → a2a →
+        combine) under K chunks."""
         return self.chunked_path_time(self.t_a2a(R), self.t_fec(H),
                                       num_chunks,
-                                      chunk_overhead=chunk_overhead)
+                                      chunk_overhead=chunk_overhead,
+                                      t_dispatch=t_dispatch,
+                                      t_combine=t_combine)
 
     def layer_time_chunked(self, R: Array, H: Array, s: int, n: int,
                            num_chunks: int, *,
-                           chunk_overhead: float = 0.0) -> float:
+                           chunk_overhead: float = 0.0,
+                           t_dispatch: float = 0.0,
+                           t_combine: float = 0.0) -> float:
         """eq. 8 with both expert paths replaced by their chunked-pipeline
-        makespans (the backward pipeline computes BEC = 2·FEC per chunk).
-        ``num_chunks == 1`` reproduces :meth:`layer_time_scheduled`
-        exactly — the device path's bit-identity has a model analog."""
+        makespans (the backward pipeline computes BEC = 2·FEC per chunk
+        and pays the transposed permute legs).
+        ``num_chunks == 1`` (with zero permute terms) reproduces
+        :meth:`layer_time_scheduled` exactly — the device path's
+        bit-identity has a model analog."""
         t_a2a = self.t_a2a(R)
         t_fec = self.t_fec(H)
         fwd = self.chunked_path_time(t_a2a, t_fec, num_chunks,
-                                     chunk_overhead=chunk_overhead)
+                                     chunk_overhead=chunk_overhead,
+                                     t_dispatch=t_dispatch,
+                                     t_combine=t_combine)
         bwd = self.chunked_path_time(t_a2a, self.t_bec(H), num_chunks,
-                                     chunk_overhead=chunk_overhead)
+                                     chunk_overhead=chunk_overhead,
+                                     t_dispatch=t_combine,
+                                     t_combine=t_dispatch)
         p_trans = max(0.0, self.t_trans(s, n) - t_fec - self.hw.t_fnec)
         p_agg = max(0.0, self.t_agg(s, n) - self.t_bec(H) - self.hw.t_bnec)
         return fwd + bwd + p_trans + p_agg

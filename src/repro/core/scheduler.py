@@ -257,6 +257,8 @@ def split_trans(trans: float, fec: float, fnec: float) -> tuple[float, float]:
 
 def chunked_expert_graph(t_a2a: float, t_fec: float, num_chunks: int, *,
                          chunk_overhead: float = 0.0,
+                         t_dispatch: float = 0.0,
+                         t_combine: float = 0.0,
                          prefix: str = "") -> List[Op]:
     """Op graph of one chunked expert path: K send-a2a chunks, K FEC
     chunks, K return-a2a chunks on the (comm, comp) resources.
@@ -267,58 +269,91 @@ def chunked_expert_graph(t_a2a: float, t_fec: float, num_chunks: int, *,
     pairs — which is the order the list scheduler arbitrates resource
     ties with, and the order the closed form in
     :meth:`repro.core.perfmodel.PerfModel.chunked_expert_time` models.
+
+    ``t_dispatch``/``t_combine`` are the HBM-bound token-permutation
+    legs (``PerfModel.t_dispatch``/``t_combine``): the dispatch scatter
+    produces the capacity buffer every send chunk slices, so it fronts
+    the pipeline on the comp stream; the gate combine consumes the full
+    returned buffer, so it tails it.  Neither can overlap the chunks
+    they serialize with — which is exactly why the device path moved
+    them into the load-proportional kernels.
     """
     K = max(1, int(num_chunks))
     a = t_a2a / K + chunk_overhead
     f = t_fec / K + chunk_overhead
-    ops = [Op(f"{prefix}a2a1_c{k}", "comm", a, []) for k in range(K)]
+    # Zero-cost permute legs are elided so the zero-term graph (and its
+    # op count) is exactly the pre-permute pipeline.
+    ops = ([Op(f"{prefix}dispatch", "comp", t_dispatch, [])]
+           if t_dispatch > 0.0 else [])
+    send_deps = [f"{prefix}dispatch"] if t_dispatch > 0.0 else []
+    ops += [Op(f"{prefix}a2a1_c{k}", "comm", a, list(send_deps))
+            for k in range(K)]
     for k in range(K):
         ops.append(Op(f"{prefix}fec_c{k}", "comp", f,
                       [f"{prefix}a2a1_c{k}"]))
         ops.append(Op(f"{prefix}a2a2_c{k}", "comm", a,
                       [f"{prefix}fec_c{k}"]))
+    if t_combine > 0.0:
+        ops.append(Op(f"{prefix}combine", "comp", t_combine,
+                      [f"{prefix}a2a2_c{k}" for k in range(K)]))
     return ops
 
 
 def chunked_makespan(t_a2a: float, t_fec: float, num_chunks: int, *,
-                     chunk_overhead: float = 0.0) -> float:
-    """List-scheduled makespan of the K-chunk a2a→FEC→a2a pipeline.
-    K=1 degenerates to the serial chain ``2·t_a2a + t_fec``.  This is
-    the reference implementation (graph + validation); the per-step hot
-    path uses :func:`chunked_makespan_closed`."""
+                     chunk_overhead: float = 0.0,
+                     t_dispatch: float = 0.0,
+                     t_combine: float = 0.0) -> float:
+    """List-scheduled makespan of the K-chunk a2a→FEC→a2a pipeline
+    (plus the serial dispatch/combine permute legs).  K=1 with zero
+    permute terms degenerates to the serial chain ``2·t_a2a + t_fec``.
+    This is the reference implementation (graph + validation); the
+    per-step hot path uses :func:`chunked_makespan_closed`."""
     g = chunked_expert_graph(t_a2a, t_fec, num_chunks,
-                             chunk_overhead=chunk_overhead)
+                             chunk_overhead=chunk_overhead,
+                             t_dispatch=t_dispatch, t_combine=t_combine)
     tl = list_schedule(g)
     tl.validate(g)
     return tl.makespan
 
 
 def chunked_makespan_closed(t_a2a: float, t_fec: float, num_chunks: int, *,
-                            chunk_overhead: float = 0.0) -> float:
+                            chunk_overhead: float = 0.0,
+                            t_dispatch: float = 0.0,
+                            t_combine: float = 0.0) -> float:
     """Closed form of :func:`chunked_makespan` — exact for the
     sends-first program order (asserted equal in tests/test_scheduler.py
     and benchmarks/perfmodel_accuracy.py).  With per-chunk costs
     ``a = t_a2a/K + h`` and ``f = t_fec/K + h`` the binding constraint
     is the serial comm stream (``2Ka``), the send-pipeline fill plus one
     compute chunk (``(K+1)a + f``), or the serial compute stream plus
-    fill/drain a2a chunks (``Kf + 2a``).  This is what the engine's
-    per-dispatch chunk choice and telemetry evaluate."""
+    fill/drain a2a chunks (``Kf + 2a``).  The dispatch leg shifts the
+    whole pipeline (every send depends on it; the comp stream is free
+    again by the time the first FEC chunk is ready) and the combine leg
+    appends after the last return, so both add linearly.  This is what
+    the engine's per-dispatch chunk choice and telemetry evaluate."""
     K = max(1, int(num_chunks))
     a = t_a2a / K + chunk_overhead
     f = t_fec / K + chunk_overhead
-    return max(2.0 * K * a, (K + 1) * a + f, K * f + 2.0 * a)
+    base = max(2.0 * K * a, (K + 1) * a + f, K * f + 2.0 * a)
+    return t_dispatch + base + t_combine
 
 
 def choose_chunks(t_a2a: float, t_fec: float, *,
                   candidates: Sequence[int] = (1, 2, 4, 8),
-                  chunk_overhead: float = 0.0) -> int:
+                  chunk_overhead: float = 0.0,
+                  t_dispatch: float = 0.0,
+                  t_combine: float = 0.0) -> int:
     """Chunk count minimizing the pipeline makespan (smallest K on ties,
     so zero-benefit loads — tiny a2a, or overhead-dominated chunking —
-    keep the bit-identical K=1 path)."""
+    keep the bit-identical K=1 path).  The serial permute legs shift
+    every candidate equally, so they never flip the argmin — they are
+    accepted so callers can score the same timeline they report."""
     best_k, best_t = 1, float("inf")
     for k in sorted(set(int(c) for c in candidates if c >= 1)):
         t = chunked_makespan_closed(t_a2a, t_fec, k,
-                                    chunk_overhead=chunk_overhead)
+                                    chunk_overhead=chunk_overhead,
+                                    t_dispatch=t_dispatch,
+                                    t_combine=t_combine)
         if t < best_t - 1e-15:
             best_k, best_t = k, t
     return best_k

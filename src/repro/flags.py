@@ -20,6 +20,18 @@ REPRO_MOE_PALLAS=0/1    Expert FFN through the ragged Pallas kernels
                         the SwiGLU gate is fused into the epilogue.
                         Unset ⇒ on for TPU backends, off elsewhere
                         (=1 forces it on anywhere via interpret mode).
+REPRO_DISPATCH_PALLAS=0/1  Token permutation (capacity dispatch/combine)
+                        through the Pallas kernels
+                        (repro.kernels.token_permute): dispatch becomes
+                        a sorted gather (no [N·k, d] activation repeat,
+                        no serialized scatter-add) and combine fuses the
+                        gate-weighted k-way reduction into the gather
+                        epilogue (f32 register accumulation — no
+                        [N, k, d] f32 materialization).  Unset ⇒ on for
+                        TPU backends, off elsewhere (=1 forces it on
+                        anywhere via interpret mode, =0 forces the jnp
+                        scatter/gather path, which stays bit-identical
+                        to the pre-kernel implementation).
 REPRO_A2A_CHUNKS=K      Manual override of the a2a↔FEC chunk count: the
                         MoE expert path splits its [E, C, d] capacity
                         buffer into K chunks along the capacity axis and
@@ -99,6 +111,15 @@ def _default_backend() -> str:
 def moe_pallas() -> bool:
     """Ragged-Pallas expert FFN: default on for TPU, opt-in elsewhere."""
     v = _flag("REPRO_MOE_PALLAS", "")
+    if v == "":
+        return _default_backend() == "tpu"
+    return v == "1"
+
+
+def dispatch_pallas() -> bool:
+    """Pallas token permutation (capacity dispatch/combine): default on
+    for TPU, opt-in elsewhere — mirrors :func:`moe_pallas`."""
+    v = _flag("REPRO_DISPATCH_PALLAS", "")
     if v == "":
         return _default_backend() == "tpu"
     return v == "1"

@@ -15,6 +15,16 @@
                         (one HBM read of the activations instead of two).
                         VMEM/step at 128³ tiles is ≈224 KiB — see
                         ragged_gmm.py for the budget breakdown.
+* ``dispatch_tokens`` / ``combine_tokens`` — the token-permutation pair
+                        (kernels.token_permute): capacity dispatch as a
+                        sorted gather (no [N·k, d] activation repeat, no
+                        serialized scatter-add) and the gate-weighted
+                        k-way combine fused into the gather epilogue
+                        (f32 register accumulation — the [N, k, d] f32
+                        intermediate never exists).  Custom VJPs reuse
+                        each other (the ops are transposes) plus a
+                        per-choice row-dot for the gate cotangent.
+                        Enabled via ``REPRO_DISPATCH_PALLAS``.
 * ``flash_attention`` — block-wise online-softmax attention (prefill and
                         sliding-window layers).
 

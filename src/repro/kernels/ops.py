@@ -6,16 +6,21 @@ on TPU they lower to real Mosaic kernels.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from .. import flags as _flags
 from . import flash_attention as _fa
 from . import gmm as _gmm
 from . import ragged_gmm as _rg
+from . import token_permute as _tp
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # The backend cannot change after jax initializes, so ride the
+    # once-per-process probe cache in repro.flags instead of re-calling
+    # jax.default_backend() on every trace-time wrapper call (the same
+    # re-probe PR 4 removed from flags.moe_pallas).
+    return _flags._default_backend() != "tpu"
 
 
 def gmm(x, w, *, bt: int = 128, bf: int = 128, bd: int = 128):
@@ -36,6 +41,23 @@ def gmm_swiglu(x, wg, wi, group_sizes, *, seg_len: int = None, bt: int = 128,
     """Fused ragged ``silu(x@wg) * (x@wi)`` — x is read from HBM once."""
     return _rg.gmm_swiglu(x, wg, wi, group_sizes, seg_len=seg_len, bt=bt,
                           bf=bf, bd=bd, interpret=_interpret())
+
+
+def dispatch_tokens(x, expert, pos, *, num_buckets: int, capacity: int,
+                    weights=None, bt: int = 128, bd: int = 128):
+    """Capacity dispatch as a sorted gather: x [N,d] → [G,C,d] by the
+    precomputed (expert, pos) slot layout — no [N·k, d] repeat, no
+    serialized scatter-add (see kernels.token_permute)."""
+    return _tp.dispatch_tokens(x, expert, pos, num_buckets=num_buckets,
+                               capacity=capacity, weights=weights, bt=bt,
+                               bd=bd, interpret=_interpret())
+
+
+def combine_tokens(buf, expert, pos, gate, *, bt: int = 128, bd: int = 128):
+    """Gate-weighted k-way combine fused into the gather epilogue — f32
+    register accumulation, no [N, k, d] materialization."""
+    return _tp.combine_tokens(buf, expert, pos, gate, bt=bt, bd=bd,
+                              interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -45,6 +45,39 @@ def gmm_swiglu_ref(x, wg, wi, group_sizes, seg_len: int = None):
     return jnp.where(mask, jax.nn.silu(a) * b, 0.0).astype(x.dtype)
 
 
+def dispatch_tokens_ref(x, expert, pos, num_buckets, capacity,
+                        weights=None):
+    """Oracle for token_permute.dispatch_tokens: scatter of (optionally
+    weighted) token rows into the [G, C, d] slot layout, drops on
+    out-of-range buckets / over-capacity positions.  Values go through
+    the same f32-scale-then-cast the kernel epilogue applies, so the
+    comparison is bit-exact."""
+    N, k = expert.shape
+    d = x.shape[-1]
+    w = (jnp.ones((N, k), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    rows = (x.astype(jnp.float32)[:, None, :] * w[..., None]).astype(x.dtype)
+    buf = jnp.zeros((num_buckets, capacity, d), x.dtype)
+    return buf.at[expert.reshape(-1), pos.reshape(-1)].add(
+        rows.reshape(N * k, d), mode="drop")
+
+
+def combine_tokens_ref(buf, expert, pos, gate):
+    """Oracle for token_permute.combine_tokens: gather with fill-0 for
+    dropped slots, gate-weighted sum accumulated in f32 in ascending
+    choice order — the kernel's summation order.  Exact up to XLA's FP
+    contraction: the compiler may FMA-fuse a product into an add on one
+    side but not the other, so k > 1 float32 results can differ by
+    ≤ 1 ulp per add (k = 1 and dispatch are bit-exact — no adds)."""
+    N, k = expert.shape
+    vals = buf.at[expert, pos].get(mode="fill", fill_value=0)   # [N,k,d]
+    acc = jnp.zeros((N, buf.shape[-1]), jnp.float32)
+    for j in range(k):
+        acc = acc + (vals[:, j].astype(jnp.float32)
+                     * gate[:, j:j + 1].astype(jnp.float32))
+    return acc.astype(buf.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """q,k,v [BH,S,dh] → [BH,S,dh]; naive masked softmax attention."""
     BH, S, dh = q.shape

@@ -1,0 +1,392 @@
+"""Pallas token-permutation kernels: fused capacity dispatch / combine.
+
+The MoE hot path moves every token twice around the expert FFN: once
+*into* the ``[G, C, d]`` capacity buffer (dispatch) and once back *out*
+of it with the gate-weighted k-way reduction (combine).  The jnp
+baseline (:func:`repro.models.moe.capacity_dispatch` /
+``capacity_combine``) pays an un-modeled memory tax on both legs:
+
+* dispatch materializes a ``[N·k, d]`` token *repeat* and scatter-adds
+  it into the buffer — the activations cross HBM ``k``× more often than
+  the information content requires, and the serialized ``.at[].add``
+  read-modify-writes the whole buffer on top;
+* combine gathers ``[N, k, d]`` and upcasts **all of it** to f32 for
+  the gate einsum — a ``k × 2×`` (bf16→f32) activation blow-up per
+  layer, forward and (transposed) backward.
+
+These kernels make token movement load-proportional, the same way
+:mod:`repro.kernels.ragged_gmm` did for the expert FLOPs:
+
+* :func:`dispatch_tokens` — a *sorted-gather* scatter.  The
+  ``(bucket, pos)`` layout from ``capacity_positions`` is inverted
+  once (cheap int32 ops) into a per-slot source-row map, turning the
+  scatter into a race-free gather: each occupied capacity slot pulls
+  its token row straight from ``x`` — no ``jnp.repeat``, no
+  ``.at[].add``, one read of ``x`` and one write of the buffer.
+* :func:`combine_tokens` — the transpose gather with the gate-weighted
+  k-way accumulation fused into the epilogue: each output row
+  accumulates its k gathered buffer rows in f32 *registers* and casts
+  once on the way out — the ``[N, k, d]`` f32 intermediate never
+  exists.
+
+Numerics: dispatch is pure data movement — bit-identical to the jnp
+scatter path.  Combine accumulates in f32 in ascending choice order,
+the same order as ``ref.combine_tokens_ref``; agreement is exact up to
+XLA's FP contraction (the compiler may FMA-fuse a product into an add
+in one program but not the other), i.e. bit-exact for k = 1 and within
+1 ulp per add for k > 1.
+
+The two are transposes of each other, so each custom VJP reuses the
+other kernel: ``dispatch``'s dx is a ``combine`` over the same slot
+map, ``combine``'s dbuf is a gate-weighted ``dispatch`` of the
+cotangent, and the gate cotangent is a per-(token, choice) row-dot
+(segment-sum over d) computed with f32 accumulation but bf16 operands.
+That row-dot is the one place the backward still gathers ``[N, k, d]``
+(in the input dtype — never f32): the no-materialization claim above
+is a *forward-path* property, and the gate-cotangent gather is the
+remaining candidate for a fused kernel (ROADMAP).
+
+Memory model (``*_modeled_bytes``; mirrored by
+``PerfModel.t_dispatch`` / ``t_combine`` — the agreement is pinned to
+< 1e-12 in ``benchmarks/perfmodel_accuracy.py``).  With ``N`` local
+tokens, ``k`` choices, ``G·C`` capacity slots and itemsize ``B``:
+
+=============  =======================================  ==============
+leg            jnp baseline                             Pallas kernel
+=============  =======================================  ==============
+dispatch       ``B·d·(N + 2Nk + 3GC)``                  ``B·d·(N + GC)``
+combine        ``B·d·(2Nk + N) + 8·d·Nk``               ``B·d·(GC + N)``
+=============  =======================================  ==============
+
+(The jnp dispatch terms are repeat write+read and buffer init +
+read-modify-write; the jnp combine terms are gather read, ``[N,k,d]``
+write, and its f32 copy write+read.  The kernels stream ``x`` and the
+buffer exactly once each.)
+
+VMEM budget per grid step: the full token (dispatch) or buffer
+(combine) panel of one ``bd``-wide d-slice stays resident across the
+row-tile loop — ``N·bd`` resp. ``G·C·bd`` elements (≈2–5 MiB in bf16
+at model sizes) plus one ``bt×bd`` output tile, inside the ~16 MiB/core
+budget.  The slot→row maps and the per-slot weights ride in SMEM via
+scalar prefetch (weights bitcast to int32 for portability).
+
+Contract notes:
+* ``(bucket, pos)`` pairs of *valid* (in-range) choices must be unique —
+  guaranteed when callers keep the dispatch layout from
+  ``capacity_positions`` and mark dropped choices with the bucket
+  sentinel (≥ G) rather than clamping them onto a real bucket: a
+  zero-gate clamp contributes nothing forward but can collide with a
+  genuine slot, and the backward's sorted-gather inversion (one source
+  per slot) would then drop the genuine cotangent.
+* Out-of-range buckets (sentinel ≥ G) and over-capacity positions
+  (pos ≥ C) drop on dispatch and contribute zero on combine, matching
+  the jnp ``mode="drop"`` / ``mode="fill"`` semantics.
+* Chunk compatibility: the kernels reproduce the exact slot layout of
+  the jnp path, so the chunked a2a↔FEC pipeline's per-chunk capacity
+  slices ``[lo, hi)`` land identically and ``chunk_occupancy`` stays
+  exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gmm import _pad_to
+
+# Second-to-minor block dims are padded to this (covers bf16's 16-row
+# sublane tiling; harmless for f32's 8).
+_SUBLANE = 16
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _f32_bits(x):
+    """f32 → int32 bit pattern (scalar-prefetch SMEM arrays are int32)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Slot-map planning (trace-time int32 ops, shared by fwd + bwd)
+# ---------------------------------------------------------------------------
+
+def _plan_dispatch(expert, pos, num_buckets: int, capacity: int, weights):
+    """Invert (token, choice) → (bucket, pos) into per-slot source maps.
+
+    Returns (tsrc [G·C] int32 — source token row, -1 ⇔ slot empty;
+    wrow [G·C] f32 — per-slot scale, 0 for empty slots).  Because
+    ``pos`` is the arrival rank within its bucket, occupied slots are
+    hit by exactly one (token, choice): the scatter below is race-free
+    and the kernel becomes a pure gather.
+    """
+    N, k = expert.shape
+    e = expert.reshape(-1).astype(jnp.int32)
+    p = pos.reshape(-1).astype(jnp.int32)
+    valid = (e >= 0) & (e < num_buckets) & (p >= 0) & (p < capacity)
+    slots = jnp.where(valid, e * capacity + p, num_buckets * capacity)
+    src = jnp.full((num_buckets * capacity,), -1, jnp.int32).at[slots].set(
+        jnp.arange(N * k, dtype=jnp.int32), mode="drop")
+    tsrc = jnp.where(src >= 0, src // k, -1)
+    if weights is None:
+        wrow = (src >= 0).astype(jnp.float32)
+    else:
+        wrow = jnp.where(
+            src >= 0,
+            weights.reshape(-1).astype(jnp.float32)[jnp.maximum(src, 0)],
+            0.0)
+    return tsrc, wrow
+
+
+def _plan_combine(expert, pos, gate, num_buckets: int, capacity: int):
+    """(srow [N·k] int32 flat slot or -1, grow [N·k] f32 zeroed-invalid)."""
+    e = expert.reshape(-1).astype(jnp.int32)
+    p = pos.reshape(-1).astype(jnp.int32)
+    valid = (e >= 0) & (e < num_buckets) & (p >= 0) & (p < capacity)
+    srow = jnp.where(valid, e * capacity + p, -1).astype(jnp.int32)
+    grow = jnp.where(valid, gate.reshape(-1).astype(jnp.float32), 0.0)
+    return srow, grow
+
+
+def _rowdot(buf, xlike, expert, pos):
+    """Per-(token, choice) row dot ⟨buf[e, p], xlike[n]⟩ — the gate /
+    weight cotangent (a segment-sum over d).  OOB slots gather zeros, so
+    dropped choices come out 0.  Accumulates in f32 without an explicit
+    upcast of the gathered rows."""
+    vals = buf.at[expert, pos].get(mode="fill", fill_value=0)   # [N,k,d]
+    return jnp.einsum("nkd,nd->nk", vals, xlike,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+def _dispatch_kernel(tsrc_ref, wbits_ref, x_ref, o_ref, *, bt: int):
+    """One [bt, bd] tile of the flattened [G·C, d] buffer: each row
+    gathers its source token row (or zeros) scaled by its slot weight."""
+    r0 = pl.program_id(1) * bt
+
+    def row(i, carry):
+        t = tsrc_ref[r0 + i]
+        w = jax.lax.bitcast_convert_type(wbits_ref[r0 + i], jnp.float32)
+        src = pl.load(x_ref, (pl.ds(jnp.maximum(t, 0), 1), slice(None)))
+        val = jnp.where(t >= 0, src.astype(jnp.float32) * w, 0.0)
+        pl.store(o_ref, (pl.ds(i, 1), slice(None)), val.astype(o_ref.dtype))
+        return carry
+
+    jax.lax.fori_loop(0, bt, row, 0)
+
+
+def _combine_kernel(srow_ref, gbits_ref, buf_ref, o_ref, *, bt: int, k: int):
+    """One [bt, bd] tile of y: each token row accumulates its k gathered
+    buffer rows × gate in f32 registers, casting once in the epilogue —
+    no [N, k, d] intermediate, let alone an f32 one."""
+    r0 = pl.program_id(1) * bt
+    bd = o_ref.shape[1]
+
+    def row(i, carry):
+        acc = jnp.zeros((1, bd), jnp.float32)
+        for j in range(k):                      # static unroll, ascending j
+            s = srow_ref[(r0 + i) * k + j]
+            g = jax.lax.bitcast_convert_type(gbits_ref[(r0 + i) * k + j],
+                                             jnp.float32)
+            v = pl.load(buf_ref, (pl.ds(jnp.maximum(s, 0), 1), slice(None)))
+            acc = acc + jnp.where(s >= 0, v.astype(jnp.float32) * g, 0.0)
+        pl.store(o_ref, (pl.ds(i, 1), slice(None)), acc.astype(o_ref.dtype))
+        return carry
+
+    jax.lax.fori_loop(0, bt, row, 0)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call plumbing
+# ---------------------------------------------------------------------------
+
+def _dispatch_impl(x, tsrc, wrow, num_buckets, capacity, bt, bd, interpret):
+    N, d = x.shape
+    R = num_buckets * capacity
+    x, _ = _pad_to(x, 0, _SUBLANE)
+    x, _ = _pad_to(x, 1, bd)
+    Rp = _ceil_to(max(R, 1), bt)
+    tsrc = jnp.pad(tsrc, (0, Rp - R), constant_values=-1)
+    wrow = jnp.pad(wrow, (0, Rp - R))
+    nr, ndb = Rp // bt, x.shape[1] // bd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # d outermost so the resident x panel is fetched once per slice.
+        grid=(ndb, nr),
+        in_specs=[pl.BlockSpec((x.shape[0], bd),
+                               lambda dd, r, ts, ws: (0, dd))],
+        out_specs=pl.BlockSpec((bt, bd), lambda dd, r, ts, ws: (r, dd)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_dispatch_kernel, bt=bt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Rp, x.shape[1]), x.dtype),
+        interpret=interpret,
+    )(tsrc, _f32_bits(wrow), x)
+    return out[:R, :d].reshape(num_buckets, capacity, d)
+
+
+def _combine_impl(buf, srow, grow, N, k, bt, bd, interpret):
+    G, C, d = buf.shape
+    flat = buf.reshape(G * C, d)
+    flat, _ = _pad_to(flat, 0, _SUBLANE)
+    flat, _ = _pad_to(flat, 1, bd)
+    Np = _ceil_to(max(N, 1), bt)
+    srow = jnp.pad(srow, (0, (Np - N) * k), constant_values=-1)
+    grow = jnp.pad(grow, (0, (Np - N) * k))
+    nr, ndb = Np // bt, flat.shape[1] // bd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndb, nr),
+        in_specs=[pl.BlockSpec((flat.shape[0], bd),
+                               lambda dd, r, ss, gs: (0, dd))],
+        out_specs=pl.BlockSpec((bt, bd), lambda dd, r, ss, gs: (r, dd)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, bt=bt, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Np, flat.shape[1]), buf.dtype),
+        interpret=interpret,
+    )(srow, _f32_bits(grow), flat)
+    return out[:N, :d]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJPs (each leg's backward is the other leg)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _dispatch(x, w, expert, pos, num_buckets, capacity, bt, bd, interpret,
+              need_dw):
+    tsrc, wrow = _plan_dispatch(expert, pos, num_buckets, capacity, w)
+    return _dispatch_impl(x, tsrc, wrow, num_buckets, capacity, bt, bd,
+                          interpret)
+
+
+def _dispatch_fwd(x, w, expert, pos, num_buckets, capacity, bt, bd,
+                  interpret, need_dw):
+    out = _dispatch(x, w, expert, pos, num_buckets, capacity, bt, bd,
+                    interpret, need_dw)
+    return out, (x, w, expert, pos)
+
+
+def _dispatch_bwd(num_buckets, capacity, bt, bd, interpret, need_dw, res,
+                  dbuf):
+    x, w, expert, pos = res
+    N, k = expert.shape
+    # dx[n] = Σ_j w[n,j] · dbuf[e,p] — the transpose gather, i.e. combine.
+    srow, grow = _plan_combine(expert, pos, w, num_buckets, capacity)
+    dx = _combine_impl(dbuf, srow, grow, N, k, bt, bd, interpret)
+    dw = (_rowdot(dbuf, x, expert, pos) if need_dw
+          else jnp.zeros(w.shape, jnp.float32))
+    return (dx.astype(x.dtype), dw.astype(w.dtype),
+            np.zeros(expert.shape, jax.dtypes.float0),
+            np.zeros(pos.shape, jax.dtypes.float0))
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _combine(buf, gate, expert, pos, bt, bd, interpret):
+    G, C, _ = buf.shape
+    N, k = expert.shape
+    srow, grow = _plan_combine(expert, pos, gate, G, C)
+    return _combine_impl(buf, srow, grow, N, k, bt, bd, interpret)
+
+
+def _combine_fwd(buf, gate, expert, pos, bt, bd, interpret):
+    out = _combine(buf, gate, expert, pos, bt, bd, interpret)
+    return out, (buf, gate, expert, pos)
+
+
+def _combine_bwd(bt, bd, interpret, res, dy):
+    buf, gate, expert, pos = res
+    G, C, _ = buf.shape
+    # dbuf[e,p] = gate[n,j] · dy[n] — the gate-weighted dispatch of dy.
+    tsrc, wrow = _plan_dispatch(expert, pos, G, C, gate)
+    dbuf = _dispatch_impl(dy, tsrc, wrow, G, C, bt, bd, interpret)
+    dgate = _rowdot(buf, dy, expert, pos)       # segment-sum over d
+    return (dbuf.astype(buf.dtype), dgate.astype(gate.dtype),
+            np.zeros(expert.shape, jax.dtypes.float0),
+            np.zeros(pos.shape, jax.dtypes.float0))
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "capacity",
+                                             "bt", "bd", "interpret"))
+def dispatch_tokens(x, expert, pos, *, num_buckets: int, capacity: int,
+                    weights=None, bt: int = 128, bd: int = 128,
+                    interpret: bool = False):
+    """Scatter ``x [N, d]`` into ``[num_buckets, capacity, d]`` by the
+    precomputed ``(expert, pos) [N, k]`` slot layout — as a sorted
+    gather, with no token repeat and no serialized scatter-add.
+
+    ``weights`` (optional ``[N, k]`` f32) scales each slot's row — this
+    is how :func:`combine_tokens`'s backward reuses the kernel with the
+    gates.  Out-of-range buckets and over-capacity positions drop.
+    Bit-identical to the jnp scatter path for ``weights=None``.
+    """
+    N, k = expert.shape
+    need_dw = weights is not None
+    w = (jnp.ones((N, k), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return _dispatch(x, w, expert.astype(jnp.int32), pos.astype(jnp.int32),
+                     num_buckets, capacity, bt, bd, interpret, need_dw)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
+def combine_tokens(buf, expert, pos, gate, *, bt: int = 128, bd: int = 128,
+                   interpret: bool = False):
+    """Gather per-(token, choice) rows of ``buf [G, C, d]`` and
+    gate-combine: ``y[n] = Σ_j gate[n,j] · buf[e[n,j], pos[n,j]]`` in
+    ``buf.dtype``, accumulated in f32 registers (ascending j) — the
+    ``[N, k, d]`` intermediate is never materialized in any dtype."""
+    return _combine(buf, gate.astype(jnp.float32),
+                    expert.astype(jnp.int32), pos.astype(jnp.int32),
+                    bt, bd, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Modeled HBM traffic (the table in the module docstring — feeds the
+# perfmodel permute terms and the dispatch microbenchmark; agreement
+# with PerfModel.t_dispatch/t_combine pinned in perfmodel_accuracy.py)
+# ---------------------------------------------------------------------------
+
+def dispatch_modeled_bytes(n_tokens: int, capacity_slots: int, d_model: int,
+                           *, top_k: int = 1, itemsize: int = 2,
+                           pallas: bool = True) -> float:
+    """HBM bytes of one capacity dispatch of ``n_tokens`` rows into
+    ``capacity_slots`` (= G·C) slots.  jnp: token read + [N·k, d] repeat
+    write+read + buffer init + scatter-add read-modify-write.  Pallas:
+    one token-panel read + one buffer write."""
+    if pallas:
+        return float((n_tokens + capacity_slots) * d_model * itemsize)
+    return float((n_tokens + 2 * n_tokens * top_k + 3 * capacity_slots)
+                 * d_model * itemsize)
+
+
+def combine_modeled_bytes(n_tokens: int, capacity_slots: int, d_model: int,
+                          *, top_k: int = 1, itemsize: int = 2,
+                          pallas: bool = True) -> float:
+    """HBM bytes of one gate-combine.  jnp: [N, k, d] gather read+write
+    plus its f32 copy write+read (the ``8·d·N·k`` term) plus the y
+    write.  Pallas: one buffer-panel read + one y write."""
+    if pallas:
+        return float((capacity_slots + n_tokens) * d_model * itemsize)
+    return float((2 * n_tokens * top_k + n_tokens) * d_model * itemsize
+                 + 8 * n_tokens * top_k * d_model)

@@ -32,6 +32,23 @@ reproduces the unchunked path bit-identically.  Per-chunk occupancies
 are threaded as ``group_sizes`` into the ragged Pallas kernels so tile
 skipping still applies chunk-locally.
 
+Token permutation (``REPRO_DISPATCH_PALLAS``, default on for TPU): the
+two data-dependent permutes around the expert FFN — ``capacity_dispatch``
+into the ``[E, C, d]`` buffer and the gate-weighted ``capacity_combine``
+out of it — run through the Pallas kernels in
+:mod:`repro.kernels.token_permute`.  Dispatch inverts the
+``(bucket, pos)`` layout into a per-slot source map and becomes a
+sorted *gather* (one read of the tokens, one write of the buffer — no
+``[N·k, d]`` activation repeat, no serialized ``.at[].add``); combine
+fuses the k-way gate reduction into the gather epilogue with f32
+register accumulation (the ``[N, k, d]`` gather is never materialized,
+let alone upcast to f32).  Both produce the *identical* slot layout,
+so the chunked pipeline's per-chunk capacity slices ``[lo, hi)`` and
+``chunk_occupancy`` are unchanged for any K.  The flag-off path is the
+original jnp scatter/gather, bit-identical to the pre-kernel layer;
+the perfmodel prices both legs (``PerfModel.t_dispatch``/``t_combine``)
+and ``benchmarks/dispatch.py`` sweeps the modeled traffic.
+
 All collectives are conditional on axis names so the same code runs
 single-device (axis=None ⇒ identity) for CPU smoke tests.
 """
@@ -86,32 +103,60 @@ def load_balance_loss(probs, idx, num_experts: int):
 def capacity_positions(expert: jnp.ndarray, num_buckets: int):
     """Position of each (token, choice) within its expert bucket.
 
-    expert: int32 [Nk] bucket ids (may include sentinel == num_buckets).
-    Returns pos int32 [Nk] — 0-based arrival order within the bucket.
+    expert: int32 [Nk] bucket ids in [0, num_buckets] (the top value is
+    the drop sentinel).  Returns pos int32 [Nk] — 0-based arrival order
+    within the bucket.
+
+    Within-bucket ranks come from one stable argsort plus a cumsum'd
+    histogram (position in sorted order minus the bucket's start): the
+    second O(Nk log Nk) pass the old ``searchsorted(sorted, sorted)``
+    formulation paid is gone, and the result is exactly equal (oracle
+    test in tests/test_token_permute.py).
     """
     nk = expert.shape[0]
+    hist = jnp.zeros((num_buckets + 1,), jnp.int32).at[expert].add(
+        1, mode="drop")
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(hist)[:-1]])
     order = jnp.argsort(expert, stable=True)
-    sorted_e = expert[order]
-    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
-    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - first.astype(jnp.int32)
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - starts[expert[order]]
     return jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted)
 
 
-def capacity_dispatch(xf, expert, capacity: int, num_buckets: int):
+def capacity_dispatch(xf, expert, capacity: int, num_buckets: int, *,
+                      use_pallas: bool = False):
     """Scatter tokens into [num_buckets, capacity, d] (drop over capacity
-    and sentinel buckets).  expert [N, k]; xf [N, d]."""
+    and sentinel buckets).  expert [N, k]; xf [N, d].
+
+    ``use_pallas`` (REPRO_DISPATCH_PALLAS) routes through the
+    token-permutation kernel (repro.kernels.token_permute): a sorted
+    gather over the same (bucket, pos) slot layout — bit-identical
+    buffer, no [N·k, d] repeat, no serialized scatter-add."""
     N, k = expert.shape
     d = xf.shape[-1]
     flat_e = expert.reshape(-1)
     pos = capacity_positions(flat_e, num_buckets)
+    if use_pallas:
+        from repro.kernels import ops
+        buf = ops.dispatch_tokens(xf, expert, pos.reshape(N, k),
+                                  num_buckets=num_buckets,
+                                  capacity=capacity)
+        return buf, pos.reshape(N, k)
     xrep = jnp.repeat(xf[:, None], k, axis=1).reshape(N * k, d)
     buf = jnp.zeros((num_buckets, capacity, d), xf.dtype)
     buf = buf.at[flat_e, pos].add(xrep, mode="drop")
     return buf, pos.reshape(N, k)
 
 
-def capacity_combine(buf, expert, pos, gate):
-    """Gather per-(token, choice) outputs and gate-combine. buf [G,C,d]."""
+def capacity_combine(buf, expert, pos, gate, *, use_pallas: bool = False):
+    """Gather per-(token, choice) outputs and gate-combine. buf [G,C,d].
+
+    ``use_pallas`` fuses the gate-weighted k-way reduction into the
+    gather epilogue (f32 register accumulation) instead of
+    materializing — and upcasting — the [N, k, d] gather."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.combine_tokens(buf, expert, pos, gate)
     vals = buf.at[expert, pos].get(mode="fill", fill_value=0)  # [N,k,d]
     return jnp.einsum("nkd,nk->nd", vals.astype(jnp.float32),
                       gate.astype(jnp.float32)).astype(buf.dtype)
@@ -228,7 +273,8 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
               shadow_devs, expert_slot, *, num_experts: int, capacity: int,
               shadow_capacity: int, ffn_kind: str, ep_axis: Optional[str],
               fsdp_axis: Optional[str], pod_axis: Optional[str],
-              s_max: int, use_pallas: bool = False, num_chunks: int = 1):
+              s_max: int, use_pallas: bool = False, num_chunks: int = 1,
+              permute_pallas: bool = False):
     """Expert-parallel MoE on local token shard.
 
     xf [T_loc, d]; gate/idx [T_loc, k]; wi/wg/wo local expert shards
@@ -245,6 +291,12 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     ``num_chunks`` splits the a2a path along the capacity axis into a
     dependency-free software pipeline (module docstring); 1 is the
     bit-identical serial path.
+    ``permute_pallas`` routes the token permutation (capacity dispatch +
+    gate combine, a2a and shadow buffers alike) through the Pallas
+    kernels in repro.kernels.token_permute (REPRO_DISPATCH_PALLAS): the
+    same (bucket, pos) slot layout — so per-chunk capacity slices and
+    ``chunk_occupancy`` are unchanged — with the k× dispatch repeat and
+    the [N, k, d] f32 combine blow-up gone.
     Returns (y [T_loc, d], counts [E] routing distribution of this EP
     member, dropped fraction scalar).
     """
@@ -302,8 +354,12 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
     # bucket s on device s // e_loc, i.e. on the expert's current owner.
     a2a_expert = jnp.where(use_local, E, tok_slot_a2a)           # sentinel ⇒ drop
     a2a_counts = kept_counts(a2a_expert, E, capacity)            # [E] per slot
-    buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E + 1)
-    buf = buf[:E]                                                # [E,C,d]
+    # num_buckets == E: the sentinel id E is out of range for both the
+    # jnp scatter (mode="drop") and the kernel's slot plan, so sentinel
+    # choices drop without allocating — or, on the Pallas path, gathering
+    # and writing — a throwaway [1, C, d] bucket.
+    buf, pos = capacity_dispatch(xf, a2a_expert, capacity, E,
+                                 use_pallas=permute_pallas)      # [E,C,d]
     bounds = _chunk_bounds(capacity, num_chunks)
     if ep_axis is not None:
         # Each peer's segment of the recv buffer has its own occupancy:
@@ -336,23 +392,30 @@ def moe_inner(xf, gate, idx, wi, wg, wo, shadow_idx, shadow_valid,
                                         concat_axis=0, tiled=True)  # [E,Ck,d]
         outs.append(hidden)
     buf_out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
-    y = capacity_combine(buf_out, jnp.where(use_local, 0, tok_slot_a2a),
-                         pos, gate * (~use_local))
+    # Locally-computed choices carry the drop sentinel E (not a clamp to
+    # bucket 0): their gates are zero either way, but the sentinel keeps
+    # the (bucket, pos) pairs of *valid* choices unique — the contract
+    # the sorted-gather dispatch in combine's backward inverts, and a
+    # slot a zero-gate clamp could otherwise collide with.
+    y = capacity_combine(buf_out, jnp.where(use_local, E, tok_slot_a2a),
+                         pos, gate * (~use_local),
+                         use_pallas=permute_pallas)
 
     # ---- Pro-Prophet shadow compute (weights already Trans'd above) ------
     if s_max > 0:
         s_expert = jnp.where(use_local, tok_slot, s_max)
         s_counts = kept_counts(s_expert, s_max, shadow_capacity)  # [s_max]
         sbuf, spos = capacity_dispatch(xf, s_expert, shadow_capacity,
-                                       s_max + 1)
-        sbuf = sbuf[:s_max]
+                                       s_max,
+                                       use_pallas=permute_pallas)
         s_hidden = expert_ffn(ffn_kind, sbuf, sh_wi, sh_wo, sh_wg,
                               group_sizes=s_counts[:, None],
                               seg_len=shadow_capacity,
                               use_pallas=use_pallas)
         y = y + capacity_combine(s_hidden,
-                                 jnp.where(use_local, tok_slot, 0),
-                                 spos, gate * use_local)
+                                 jnp.where(use_local, tok_slot, s_max),
+                                 spos, gate * use_local,
+                                 use_pallas=permute_pallas)
 
     # dropped-token fraction (over-capacity), for telemetry
     total = jnp.maximum(counts.sum(), 1)
@@ -462,7 +525,8 @@ def moe_apply(params, x, placement, ctx, *, num_experts: int, top_k: int,
         moe_inner, num_experts=num_experts, capacity=capacity,
         shadow_capacity=shadow_capacity, ffn_kind=ffn_kind,
         ep_axis=ctx.ep_axis, fsdp_axis=ctx.fsdp_axis, pod_axis=ctx.pod_axis,
-        s_max=s_max, use_pallas=_flags.moe_pallas(), num_chunks=num_chunks)
+        s_max=s_max, use_pallas=_flags.moe_pallas(), num_chunks=num_chunks,
+        permute_pallas=_flags.dispatch_pallas())
 
     wg = params.get("wg")
     if ctx.mesh is None:

@@ -363,5 +363,9 @@ def make_engine_for(cfg: ModelConfig, ctx: ParallelCtx, *,
         replan_interval=replan_interval,
         policy=policy,
         enable_migration=migration,
+        # permute-term pricing (PerfModel.t_dispatch/t_combine) mirrors
+        # the layer's real dispatch geometry
+        top_k=cfg.moe.top_k,
+        capacity_factor=cfg.moe.capacity_factor,
     )
     return ProProphetEngine(ec, hw)

@@ -48,6 +48,16 @@ def test_moe_pallas_mesh_equivalence():
 
 
 @pytest.mark.slow
+def test_dispatch_pallas_mesh_equivalence():
+    """REPRO_DISPATCH_PALLAS on/off parity through shard_map over skewed
+    routing and a live shadow placement (the Pallas token-permutation
+    dispatch/combine vs the jnp scatter/gather), serial and K=2 chunked,
+    forward and backward."""
+    out = run_dist_script("dispatch_equivalence.py", timeout=900)
+    assert "DISPATCH_MESH_EQUIVALENCE_PASS" in out
+
+
+@pytest.mark.slow
 def test_migration_mesh_equivalence():
     """Dynamic expert migration on a (2, 4) mesh: migrated layouts are
     bit-identical at the layer level, and a persistent-skew trainer run
