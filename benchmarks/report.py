@@ -167,6 +167,42 @@ def dispatch_section():
         table(), ""])
 
 
+def resilience_section():
+    from .resilience import run as resilience_run
+    rows = resilience_run(iters=30)
+    by = {name: (us, derived) for name, us, derived in rows}
+    free_us, _ = by["resilience/sim/fault_free"]
+    bad_us, slowdown = by["resilience/sim/faulted"]
+    _, fb_rate = by["resilience/sim/fallbacks"]
+    _, stale = by["resilience/sim/stale_frac"]
+    raw_us, _ = by["resilience/watchdog/raw_observe"]
+    plan_us, ratio = by["resilience/watchdog/plan"]
+    return "\n".join([
+        "## §Resilience", "",
+        "The self-healing runtime's two load-bearing numbers, measured by "
+        "`benchmarks.resilience` (the production watchdog "
+        "`repro.train.runtime.run_plan` + `repro.core.guard` driven "
+        "through `repro.testing.faults` inside the simulated planner "
+        "loop):", "",
+        "| row | iter/plan µs | derived |",
+        "|---|---|---|",
+        f"| sim fault-free | {free_us:.1f} | 1.0 |",
+        f"| sim faulted (2 planner faults + 2 corrupted-count batches) "
+        f"| {bad_us:.1f} | {slowdown:.4f}x slowdown |",
+        f"| fallback rate | - | {fb_rate:.3f}/iter "
+        f"(stale-placement iters: {stale:.3f}) |",
+        f"| bare engine.observe | {raw_us:.1f} | 1.0 |",
+        f"| watchdog plan (sanitize+snapshot+validate) | {plan_us:.1f} "
+        f"| {ratio:.2f}x observe |", "",
+        "Fallback-to-last-good is cheap because of the same locality "
+        "property that lets Plan overlap the device step: a stale "
+        "placement stays near-optimal for the handful of iterations a "
+        "fault costs, so the faulted run's iteration time is within "
+        "noise of fault-free.  Loss is *bit-identical* under every fault "
+        "class by construction (placements only move compute) — asserted "
+        "end-to-end in `tests/test_resilience.py`.", ""])
+
+
 def main():
     header = os.path.join(os.path.dirname(__file__), "..",
                           "EXPERIMENTS.header.md")
@@ -176,6 +212,7 @@ def main():
     print(roofline_section())
     print(moe_ffn_section())
     print(dispatch_section())
+    print(resilience_section())
     print(perf_section())
 
 

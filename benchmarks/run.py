@@ -12,7 +12,7 @@ import time
 def main() -> None:
     from . import (ablation, balance, breakdown, cadence, dispatch,
                    end_to_end, fine_grained, locality, moe_ffn,
-                   perfmodel_accuracy, policies, roofline)
+                   perfmodel_accuracy, policies, resilience, roofline)
     modules = [
         ("locality(Fig4)", locality),
         ("moe_ffn(ragged-GMM)", moe_ffn),
@@ -25,6 +25,7 @@ def main() -> None:
         ("policies(Fig15)", policies),
         ("balance(Fig16)", balance),
         ("cadence(beyond-paper)", cadence),
+        ("resilience(watchdog)", resilience),
         ("roofline(Roofline)", roofline),
     ]
     print("name,us_per_call,derived")

@@ -296,6 +296,90 @@ def migration_sweep(sim: SimConfig, *, window: float = 100.0,
     return out
 
 
+def fault_sweep(sim: SimConfig, *,
+                planner_faults=(4, 12), count_faults=(8, 16),
+                slow_faults=(), deadline_ms: float = 0.0
+                ) -> Dict[str, Dict[str, float]]:
+    """Resilience sweep: the pipelined planner loop driven through the
+    production plan watchdog (:func:`repro.train.runtime.run_plan`) with
+    and without injected faults (:mod:`repro.testing.faults`).
+
+    Per variant (``fault_free`` / ``faulted``) the loop observes one-step-
+    delayed counts through ``run_plan`` and prices each iteration with the
+    eq. 8 breakdown of whatever placements the engine currently holds —
+    a rejected plan means the next iteration runs on *stale* placements
+    (the watchdog's fallback), so ``slowdown`` quantifies the throughput
+    cost of degradation: under paper-like locality a stale plan stays
+    near-optimal, which is exactly why fallback-to-last-good is safe.
+
+    Returns per variant: ``iter_s`` (mean simulated iteration), ``plan_s``
+    (mean measured wall-clock watchdog latency, validation included),
+    ``fallbacks`` / ``sanitized`` (watchdog interventions), and
+    ``stale_frac`` (fraction of iterations run on stale placements).
+    """
+    import time as _time
+
+    from repro.core import EngineConfig, ProProphetEngine
+    from repro.testing import Fault, FaultInjector, injected
+    from repro.train.runtime import run_plan
+
+    cfg = get_config(sim.model)
+    E, D, L = cfg.moe.num_experts, sim.devices, cfg.num_moe_layers
+    hw = _hw_for(cfg, sim)
+
+    def one(inj: Optional[FaultInjector]) -> Dict[str, float]:
+        ec = EngineConfig(num_experts=E, num_devices=D, num_moe_layers=L,
+                          s_max=sim.s_max, n=sim.n, scheduled=True)
+        eng = ProProphetEngine(ec, hw)
+        perf = PerfModel(hw, D)
+        traces = [GatingTrace(D, E, sim.tokens // D, skew=sim.skew,
+                              drift=sim.drift, seed=sim.seed * 1000 + li)
+                  for li in range(L)]
+        iter_t, plan_t = [], []
+        fallbacks = sanitized = stale = 0
+        prev = None
+        ctx = injected(inj) if inj is not None else None
+        if ctx is not None:
+            ctx.__enter__()
+        try:
+            for _ in range(sim.iters):
+                gs = [t.step() * sim.top_k for t in traces]
+                if prev is not None:     # locality: plan on last counts
+                    t0 = _time.perf_counter()
+                    ev = run_plan(eng, np.stack(prev))
+                    plan_t.append(_time.perf_counter() - t0)
+                    sanitized += ev.sanitized_layers
+                    if not ev.ok:
+                        fallbacks += 1
+                        stale += 1
+                prev = gs
+                total = 0.0
+                for li, g in enumerate(gs):
+                    bd = perf.breakdown(eng.placements[li], g,
+                                        scheduled=True)
+                    total += bd["total"] + hw.t_fnec + hw.t_bnec
+                iter_t.append(total)
+        finally:
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        return {"iter_s": float(np.mean(iter_t)),
+                "plan_s": float(np.mean(plan_t)) if plan_t else 0.0,
+                "fallbacks": float(fallbacks),
+                "sanitized": float(sanitized),
+                "stale_frac": float(stale) / max(sim.iters, 1)}
+
+    schedule = ([Fault("planner_exception", a) for a in planner_faults]
+                + [Fault("corrupt_counts", a, {"mode": "mixed"})
+                   for a in count_faults]
+                + [Fault("slow_plan", a, {"delay_s": deadline_ms * 2e-3})
+                   for a in slow_faults])
+    out = {"fault_free": one(None),
+           "faulted": one(FaultInjector(schedule, seed=sim.seed))}
+    out["faulted"]["slowdown"] = (out["faulted"]["iter_s"]
+                                  / max(out["fault_free"]["iter_s"], 1e-12))
+    return out
+
+
 def measure_plan_overlap(engine, traces, step_window_fn, iters: int,
                          top_k: int = 1):
     """Shared pipelined-runtime measurement harness: per iteration,

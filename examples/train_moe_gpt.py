@@ -13,7 +13,7 @@ import dataclasses
 
 import jax
 
-from repro.checkpoint import save_train_state
+from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.moe_gpt import with_experts
 from repro.data import SyntheticLM
@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt", default="artifacts/moe_gpt_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100,
+                    help="atomic retained checkpoint cadence (0 = final "
+                         "save only; last 3 kept)")
     ap.add_argument("--async-plan", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="pipelined runtime (default on; --no-async-plan "
@@ -50,9 +53,12 @@ def main():
     data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
     telemetry = OverlapTelemetry()
     state, hist = trainer.run(state, data, num_steps=args.steps,
-                              log_every=20, telemetry=telemetry)
-    save_train_state(state, args.ckpt, step=args.steps,
-                     extra={"arch": cfg.name, "final_loss": hist[-1]})
+                              log_every=20, telemetry=telemetry,
+                              ckpt_dir=args.ckpt,
+                              ckpt_every=args.ckpt_every)
+    save_checkpoint(state, args.ckpt, step=args.steps,
+                    extra={"arch": cfg.name, "final_loss": hist[-1],
+                           "expert_layout": "home"})
     s = telemetry.summary()
     print(f"\nloss {hist[0]:.3f} -> {hist[-1]:.3f}; checkpoint at "
           f"{args.ckpt}")

@@ -2,6 +2,12 @@
 # Tier-1 verify — the single entry point CI and humans share (ROADMAP.md).
 #
 #   scripts/ci.sh             full suite (~10 min)
+#   scripts/ci.sh --faults    fault-injection lane only: the self-healing
+#                             runtime under deterministic injected faults
+#                             (tests/test_resilience.py — plan watchdog
+#                             fallback/rollback, transactional relocation,
+#                             atomic/torn checkpoints, and the 12-step
+#                             loss-bit-identity acceptance run)
 #   scripts/ci.sh --fast      fast lane: skips @slow (multi-device
 #                             subprocesses, long end-to-end trainer runs)
 #                             but keeps the async≡sync equivalence tests
@@ -38,5 +44,8 @@ cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   set -- -m "not slow" "$@"
+elif [[ "${1:-}" == "--faults" ]]; then
+  shift
+  set -- tests/test_resilience.py "$@"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

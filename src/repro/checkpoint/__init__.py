@@ -1,4 +1,7 @@
-from .ckpt import load_pytree, restore_train_state, save_pytree, save_train_state
+from .ckpt import (CheckpointError, list_checkpoints, load_pytree,
+                   restore_latest, restore_train_state, save_checkpoint,
+                   save_pytree, save_train_state, verify_checkpoint)
 
-__all__ = ["load_pytree", "restore_train_state", "save_pytree",
-           "save_train_state"]
+__all__ = ["CheckpointError", "list_checkpoints", "load_pytree",
+           "restore_latest", "restore_train_state", "save_checkpoint",
+           "save_pytree", "save_train_state", "verify_checkpoint"]

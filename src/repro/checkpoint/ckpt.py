@@ -4,12 +4,36 @@ No orbax in this environment; this is a self-contained implementation with
 the same contract: save(state) → directory; restore(state_like) → state
 with each leaf device_put to the target sharding (so a checkpoint written
 on one mesh restores onto another).
+
+Durability contract (the self-healing runtime's recovery anchor):
+
+* **Atomic writes** — :func:`save_train_state` stages the checkpoint in a
+  ``.tmp-``-prefixed sibling directory, fsyncs file contents and the
+  parent directory, and publishes with a single ``rename``.  A crash at
+  any point leaves either the previous checkpoint or an invisible temp
+  directory — never a half-written published one.
+
+* **Verifiable content** — ``meta.json`` records a SHA-256 digest of
+  ``state.npz``; :func:`verify_checkpoint` re-hashes on read, so torn or
+  bit-rotted state files are detected instead of silently restored.
+
+* **Retention + recovery** — :func:`save_checkpoint` writes
+  ``root/step-<n>`` and prunes to the last ``keep``;
+  :func:`restore_latest` scans newest-first and skips anything corrupt or
+  partial, recovering the last intact checkpoint.
+
+Structural mismatches on load raise :class:`CheckpointError` naming the
+offending key path; dtypes must match the restore target exactly (the
+old silent-cast path hid real mismatches — a bf16-saved leaf restores
+only into a bf16 slot, via the uint16 view round-trip).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any, Optional
+import shutil
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -18,6 +42,12 @@ _SEP = "::"
 
 
 _BF16 = "__bf16__"
+
+_TMP_PREFIX = ".tmp-"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written, verified, or restored."""
 
 
 def _flatten(tree) -> dict:
@@ -41,10 +71,19 @@ def save_pytree(tree, path: str) -> None:
 
 def load_pytree(tree_like, path: str, shardings: Optional[Any] = None):
     """Restore into the structure of ``tree_like``; device_put each leaf to
-    the matching sharding if given."""
+    the matching sharding if given.
+
+    Structural problems raise :class:`CheckpointError` naming the leaf's
+    key path: a missing array, a shape mismatch, or a dtype mismatch
+    (leaves restore only into slots of the dtype they were saved with —
+    bf16 leaves travel as a uint16 view and require a bf16 target)."""
     if not path.endswith(".npz"):
         path = path + ".npz"
-    data = np.load(path)
+    try:
+        data = np.load(path)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(f"cannot read checkpoint array file "
+                              f"{path}: {e}") from e
     flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
@@ -52,22 +91,129 @@ def load_pytree(tree_like, path: str, shardings: Optional[Any] = None):
     for (pth, like), shard in zip(flat_paths[0], shard_leaves):
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in pth)
+        like_dtype = np.dtype(like.dtype)
         if key + _BF16 in data:
+            if like_dtype.name != "bfloat16":
+                raise CheckpointError(
+                    f"leaf '{key}': checkpoint holds bfloat16 but the "
+                    f"restore target expects {like_dtype.name}")
             import ml_dtypes
             arr = data[key + _BF16].view(ml_dtypes.bfloat16)
-        else:
+        elif key in data:
             arr = data[key]
-        assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+            if arr.dtype != like_dtype:
+                raise CheckpointError(
+                    f"leaf '{key}': checkpoint dtype {arr.dtype} does not "
+                    f"match restore target dtype {like_dtype}")
+        else:
+            raise CheckpointError(
+                f"leaf '{key}' is missing from checkpoint {path}")
+        if arr.shape != tuple(like.shape):
+            raise CheckpointError(
+                f"leaf '{key}': checkpoint shape {arr.shape} does not "
+                f"match restore target shape {tuple(like.shape)}")
         leaves.append(jax.device_put(arr, shard) if shard is not None
                       else jax.numpy.asarray(arr, like.dtype))
     return jax.tree_util.tree_unflatten(flat_paths[1], leaves)
 
 
+# ---------------------------------------------------------------------------
+# Atomic directory checkpoints
+# ---------------------------------------------------------------------------
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_train_state(state, path: str, *, step: int, extra: dict = None):
-    os.makedirs(path, exist_ok=True)
-    save_pytree(state, os.path.join(path, "state.npz"))
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump({"step": step, **(extra or {})}, f)
+    """Atomically write ``path/{state.npz, meta.json}``.
+
+    The files are staged in a ``.tmp-``-prefixed sibling directory,
+    fsynced, and published with one ``rename`` — readers see either the
+    complete new checkpoint or whatever was there before, never a torn
+    one.  ``meta.json`` carries a SHA-256 digest of ``state.npz``
+    (checked by :func:`verify_checkpoint` / :func:`restore_latest`)."""
+    from repro.testing import faults as _faults
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent,
+                       f"{_TMP_PREFIX}{os.path.basename(path)}-{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    state_file = os.path.join(tmp, "state.npz")
+    save_pytree(state, state_file)
+    meta = {"step": int(step), "digest": _sha256_file(state_file),
+            **(extra or {})}
+    meta_file = os.path.join(tmp, "meta.json")
+    with open(meta_file, "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(state_file)
+    _fsync_path(tmp)
+
+    inj = _faults.active()
+    if inj is not None:
+        fault = inj.torn_checkpoint()
+        if fault is not None:
+            mode = fault.payload.get("mode", "truncate")
+            if mode == "abort":
+                # Simulated crash before the publish rename: the temp
+                # directory stays behind (invisible to step-* scans).
+                return
+            # Simulated torn write that still got published: truncate the
+            # array file after its digest was stamped.
+            size = os.path.getsize(state_file)
+            with open(state_file, "rb+") as f:
+                f.truncate(max(1, size // 2))
+
+    if os.path.exists(path):
+        old = f"{path}.old-{os.getpid()}"
+        os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, path)
+    _fsync_path(parent)
+
+
+def verify_checkpoint(path: str) -> Tuple[bool, str]:
+    """Integrity check of one checkpoint directory: readable metadata,
+    present array file, matching content digest.  Returns
+    ``(ok, reason)`` — reason is ``""`` when intact."""
+    meta_file = os.path.join(path, "meta.json")
+    state_file = os.path.join(path, "state.npz")
+    try:
+        with open(meta_file) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return False, f"unreadable meta.json: {e}"
+    if "step" not in meta:
+        return False, "meta.json missing 'step'"
+    if not os.path.exists(state_file):
+        return False, "state.npz missing"
+    digest = meta.get("digest")
+    if digest is None:
+        return True, ""        # pre-digest checkpoint: structurally intact
+    actual = _sha256_file(state_file)
+    if actual != digest:
+        return False, (f"state.npz digest mismatch: meta records "
+                       f"{digest[:12]}…, file hashes {actual[:12]}…")
+    return True, ""
 
 
 def restore_train_state(state_like, path: str, shardings=None):
@@ -76,3 +222,65 @@ def restore_train_state(state_like, path: str, shardings=None):
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     return state, meta
+
+
+# ---------------------------------------------------------------------------
+# Retained checkpoint roots (step-<n> directories)
+# ---------------------------------------------------------------------------
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step-{step:08d}")
+
+
+def list_checkpoints(root: str) -> List[Tuple[int, str]]:
+    """``[(step, path), ...]`` ascending for every published ``step-*``
+    directory under ``root`` (temp/aside directories never match)."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if not name.startswith("step-"):
+            continue
+        full = os.path.join(root, name)
+        if not os.path.isdir(full):
+            continue
+        try:
+            out.append((int(name[len("step-"):]), full))
+        except ValueError:
+            continue
+    return sorted(out)
+
+
+def save_checkpoint(state, root: str, *, step: int, keep: int = 3,
+                    extra: dict = None) -> str:
+    """Atomic retained checkpoint: write ``root/step-<n>`` via
+    :func:`save_train_state`, then prune to the newest ``keep``
+    directories.  Returns the checkpoint path."""
+    path = _step_dir(root, step)
+    save_train_state(state, path, step=step, extra=extra)
+    if keep and keep > 0:
+        for _, old in list_checkpoints(root)[:-keep]:
+            shutil.rmtree(old, ignore_errors=True)
+    return path
+
+
+def restore_latest(state_like, root: str, shardings=None):
+    """Restore the newest *intact* checkpoint under ``root`` →
+    ``(state, meta, path)``.  Corrupt or partial directories (failed
+    digest, unreadable metadata, structural mismatch) are skipped with
+    the next-newest tried; raises :class:`CheckpointError` when no
+    restorable checkpoint remains."""
+    tried = []
+    for step, path in reversed(list_checkpoints(root)):
+        ok, reason = verify_checkpoint(path)
+        if not ok:
+            tried.append(f"{path}: {reason}")
+            continue
+        try:
+            state, meta = restore_train_state(state_like, path, shardings)
+            return state, meta, path
+        except (CheckpointError, OSError) as e:
+            tried.append(f"{path}: {e}")
+    detail = ("; ".join(tried)) if tried else "no step-* directories"
+    raise CheckpointError(
+        f"no intact checkpoint under {root} ({detail})")

@@ -36,13 +36,13 @@ edge.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import scheduler
+from . import guard, scheduler
 from .perfmodel import HardwareSpec, PerfModel
-from .placement import ExpertPlacement, traditional
+from .placement import ExpertPlacement, default_owner, traditional
 from .planner import GreedyPlanner, LocalityPlanner, PlanResult
 
 Array = np.ndarray
@@ -158,8 +158,19 @@ class ProProphetEngine:
         plans the placements to use next step.  ``pool`` (an optional
         ``ThreadPoolExecutor``) fans the per-layer searches out in
         parallel; results are merged in layer order either way, so the
-        outcome is identical to the serial path."""
-        assert len(per_layer_g) == self.cfg.num_moe_layers
+        outcome is identical to the serial path.
+
+        Ingestion guard: each layer's matrix must be exactly ``[D, E]``,
+        finite, and non-negative (:func:`repro.core.guard.check_counts`)
+        — the watchdog path sanitizes before calling here, so a trip
+        means a caller fed garbage directly."""
+        if len(per_layer_g) != self.cfg.num_moe_layers:
+            raise guard.CountsError(
+                f"observe got {len(per_layer_g)} layer matrices, engine "
+                f"has {self.cfg.num_moe_layers} MoE layers")
+        shape = (self.cfg.num_devices, self.cfg.num_experts)
+        for li, g in enumerate(per_layer_g):
+            guard.check_counts(g, shape, layer=li)
         self._last_g = [np.asarray(g, dtype=np.float64)
                         for g in per_layer_g]
         self._obs_count += 1
@@ -186,6 +197,73 @@ class ProProphetEngine:
     @property
     def placements(self) -> List[ExpertPlacement]:
         return list(self._placements)
+
+    # ------------------------------------------------------------------
+    # Watchdog support: last-good rollback + fallback queries
+    # ------------------------------------------------------------------
+    def last_counts(self) -> List[Optional[Array]]:
+        """Copies of the last-good per-layer routing matrices (None where
+        no observation has landed yet) — the sanitizer's fallback source."""
+        return [None if g is None else g.copy() for g in self._last_g]
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Capture the full planning state so a failed/rejected plan can
+        be rolled back exactly (:meth:`restore`).  Placements and routing
+        matrices are immutable once stored (observe/replan replace, never
+        mutate), so shallow references suffice; the mutable containers
+        (_dirty, _device_slots, planner trackers) are copied."""
+        return {
+            "placements": list(self._placements),
+            "last_results": list(self.last_results),
+            "version": self._version,
+            "dirty": set(self._dirty),
+            "last_g": list(self._last_g),
+            "obs_count": self._obs_count,
+            "costs_cache": self._costs_cache,
+            "device_slots": [ds.copy() for ds in self._device_slots],
+            "planners": [p.snapshot() for p in self.planners],
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Roll the planning state back to a :meth:`snapshot` — the
+        watchdog's fall-back-to-last-good.  The packed array cache is kept
+        (cache + restored dirty set were consistent at snapshot time and
+        observe never touches the cache)."""
+        self._placements = list(snap["placements"])
+        self.last_results = list(snap["last_results"])
+        self._version = snap["version"]
+        self._dirty = set(snap["dirty"])
+        self._last_g = list(snap["last_g"])
+        self._obs_count = snap["obs_count"]
+        self._costs_cache = snap["costs_cache"]
+        self._device_slots = [ds.copy() for ds in snap["device_slots"]]
+        for p, ps in zip(self.planners, snap["planners"]):
+            p.restore(ps)
+
+    def cancel_migrations(self) -> int:
+        """Drop every planned owner re-layout: rebuild each migrated
+        placement at the identity slot order (shadows that would now sit
+        on their own owner are pruned).  Used by the trainer after a
+        failed relocation exchange — the device stays at (or returns to)
+        the home layout, so the plans must stop demanding a move the
+        exchange could not deliver.  The planner may re-propose the
+        migration at its next replan, which retries the exchange.
+        Returns the number of layers reset (version bumps once if > 0)."""
+        E, D = self.cfg.num_experts, self.cfg.num_devices
+        home = default_owner(E, D)
+        reset = 0
+        for li, pl in enumerate(self._placements):
+            if pl.slot_of is None:
+                continue
+            shadows = {e: tuple(d for d in devs if d != int(home[e]))
+                       for e, devs in pl.shadows.items()}
+            shadows = {e: devs for e, devs in shadows.items() if devs}
+            self._placements[li] = ExpertPlacement(E, D, shadows, None)
+            self._dirty.add(li)
+            reset += 1
+        if reset:
+            self._version += 1
+        return reset
 
     def step_arrays(self) -> Dict[str, Array]:
         """Stacked static-shape placement arrays for the jitted step.

@@ -1,0 +1,185 @@
+"""Placement-invariant and routing-count guards (the plan watchdog's teeth).
+
+Pro-Prophet mutates live training state every few steps: the background
+planner rewrites placements, relocations permute optimizer slabs, and the
+routing counts driving it all come straight off the device.  Any of those
+can go wrong — a planner bug, a NaN'd gate, a torn transfer — and without
+validation the damage surfaces steps later as silent mis-routing.  This
+module centralizes the checks the runtime watchdog
+(:func:`repro.train.runtime.run_plan`) applies at the two ingestion
+boundaries:
+
+* **counts in** — :func:`sanitize_counts` cleans the observed routing
+  matrices before the engine ingests them (NaN/inf/negative entries fall
+  back to the last-good layer, or a uniform distribution when there is no
+  history yet).  :func:`check_counts` is the strict variant
+  ``ProProphetEngine.observe`` applies as a backstop: garbage that slips
+  past sanitization raises instead of poisoning the planner.
+
+* **placements out** — :func:`validate_engine` checks every planner
+  output against the placement invariants the traced step relies on:
+  ``slot_of`` is a valid permutation, per-device slot counts stay static,
+  shadow sets name real devices/experts and exclude the owner, the
+  placement's device width matches the engine's EP axis, and the modeled
+  times are finite.  A violation raises
+  :class:`PlacementInvariantError`, which the watchdog converts into a
+  fall-back to the last-good placement version — training continues on
+  stale placements, never on corrupt ones.
+
+Failures here degrade throughput, not correctness: placements only decide
+*where* compute happens, so rejecting a plan costs balance, not loss bits.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+class GuardError(ValueError):
+    """Base class for ingestion/invariant guard failures."""
+
+
+class CountsError(GuardError):
+    """Routing counts failed the ingestion guard (shape/finiteness)."""
+
+
+class PlacementInvariantError(GuardError):
+    """A planner output violated the placement invariants."""
+
+
+# ---------------------------------------------------------------------------
+# Routing-count ingestion
+# ---------------------------------------------------------------------------
+
+def check_counts(g: Array, shape: Tuple[int, int], *, layer: int = -1) -> None:
+    """Strict ingestion guard for one layer's routing matrix: exact
+    ``(D, E)`` shape, all entries finite and non-negative.  Raises
+    :class:`CountsError` naming the layer and offense — the backstop
+    ``engine.observe`` applies so garbage can never poison the planner
+    (the watchdog path sanitizes *before* observe, so a trip here means a
+    caller bypassed :func:`sanitize_counts`)."""
+    g = np.asarray(g)
+    where = f" (layer {layer})" if layer >= 0 else ""
+    if g.shape != tuple(shape):
+        raise CountsError(
+            f"routing counts{where} have shape {g.shape}, expected {shape}")
+    if not np.issubdtype(g.dtype, np.number):
+        raise CountsError(
+            f"routing counts{where} have non-numeric dtype {g.dtype}")
+    if not np.isfinite(g).all():
+        raise CountsError(
+            f"routing counts{where} contain NaN/inf entries")
+    if (g < 0).any():
+        raise CountsError(
+            f"routing counts{where} contain negative entries")
+
+
+def _clean_layer(g: Array) -> bool:
+    return bool(np.isfinite(g).all() and not (g < 0).any())
+
+
+def sanitize_counts(counts: Array,
+                    fallback: Optional[Sequence[Optional[Array]]] = None
+                    ) -> Tuple[List[Array], int]:
+    """Split stacked ``[L, D, E]`` device counts into clean per-layer
+    float64 routing matrices.
+
+    A layer containing NaN/inf/negative entries is replaced wholesale by
+    its ``fallback`` layer (the engine's last-good observation) when that
+    is itself clean, else by a uniform all-ones matrix — planning from a
+    flat distribution is a safe no-op-ish prior, planning from NaNs is
+    corruption.  Returns ``(layers, num_sanitized)``.  A count array of
+    the wrong rank cannot be per-layer repaired and raises
+    :class:`CountsError` (the watchdog turns that into a plan fallback).
+    """
+    counts = np.asarray(counts)
+    if counts.ndim != 3:
+        raise CountsError(
+            f"stacked routing counts must be [L, D, E], got shape "
+            f"{counts.shape}")
+    layers: List[Array] = []
+    sanitized = 0
+    for li in range(counts.shape[0]):
+        g = counts[li].astype(np.float64)
+        if _clean_layer(g):
+            layers.append(g)
+            continue
+        sanitized += 1
+        fb = None
+        if fallback is not None and li < len(fallback):
+            fb = fallback[li]
+        if fb is not None and _clean_layer(np.asarray(fb)):
+            layers.append(np.asarray(fb, dtype=np.float64).copy())
+        else:
+            layers.append(np.ones_like(g))
+    return layers, sanitized
+
+
+# ---------------------------------------------------------------------------
+# Placement invariants
+# ---------------------------------------------------------------------------
+
+def validate_placement(pl, *, num_experts: int, num_devices: int,
+                       layer: int = -1) -> None:
+    """Check one placement against the invariants the traced step
+    assumes.  Raises :class:`PlacementInvariantError` naming the layer
+    and violated invariant."""
+    where = f"layer {layer}: " if layer >= 0 else ""
+    E, D = num_experts, num_devices
+    if getattr(pl, "num_experts", None) != E:
+        raise PlacementInvariantError(
+            f"{where}placement has {getattr(pl, 'num_experts', None)} "
+            f"experts, engine expects {E}")
+    if getattr(pl, "num_devices", None) != D:
+        raise PlacementInvariantError(
+            f"{where}placement is {getattr(pl, 'num_devices', None)} "
+            f"devices wide, engine EP axis is {D} — the packed "
+            f"shadow_devs arrays would mis-index")
+    slots = np.asarray(pl.slots)
+    if slots.shape != (E,) or not np.array_equal(np.sort(slots),
+                                                 np.arange(E)):
+        raise PlacementInvariantError(
+            f"{where}slot_of is not a permutation of {E} slots")
+    # Static per-device slot counts: every device must own exactly its
+    # home share of physical slots regardless of which experts sit in
+    # them (guaranteed for true permutations, but checked explicitly —
+    # it is the invariant the static-shape relocation exchange needs).
+    from .placement import default_owner
+    if E >= D:
+        per_dev = np.bincount(default_owner(E, D)[slots], minlength=D)
+        if not (per_dev == per_dev[0]).all():
+            raise PlacementInvariantError(
+                f"{where}per-device slot counts are not static: {per_dev}")
+    owner = pl.owner
+    for e, devs in pl.shadows.items():
+        if not (0 <= int(e) < E):
+            raise PlacementInvariantError(
+                f"{where}shadow entry names expert {e} outside [0, {E})")
+        for d in devs:
+            if not (0 <= int(d) < D):
+                raise PlacementInvariantError(
+                    f"{where}expert {e} shadows onto device {d} outside "
+                    f"[0, {D})")
+        if int(owner[int(e)]) in devs:
+            raise PlacementInvariantError(
+                f"{where}expert {e}'s shadow set contains its owner "
+                f"{int(owner[int(e)])}")
+
+
+def validate_engine(engine) -> None:
+    """Post-plan invariant sweep the watchdog runs after every
+    ``engine.observe``: every layer's placement is structurally valid for
+    this engine's geometry and the modeled times are finite.  Raises
+    :class:`PlacementInvariantError` on the first violation."""
+    cfg = engine.cfg
+    for li, pl in enumerate(engine.placements):
+        validate_placement(pl, num_experts=cfg.num_experts,
+                           num_devices=cfg.num_devices, layer=li)
+    pt = engine.predicted_times()
+    for k, v in pt.items():
+        if not np.isfinite(v):
+            raise PlacementInvariantError(
+                f"modeled time '{k}' is not finite: {v}")

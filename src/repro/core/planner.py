@@ -274,6 +274,25 @@ class LocalityPlanner:
     def current(self) -> Optional[PlanResult]:
         return self._cached
 
+    def snapshot(self) -> Tuple:
+        """Capture the replan cadence/tracker state for watchdog rollback.
+        The tracker's stored matrices are never mutated in place, so
+        shallow references suffice."""
+        t = self.tracker
+        return (list(t._hist), None if t._ema is None else t._ema.copy(),
+                self._cached, self._iteration)
+
+    def restore(self, snap: Tuple) -> None:
+        """Roll back to a :meth:`snapshot` (see
+        ``ProProphetEngine.restore``)."""
+        hist, ema, cached, iteration = snap
+        t = self.tracker
+        t._hist.clear()
+        t._hist.extend(hist)
+        t._ema = ema
+        self._cached = cached
+        self._iteration = iteration
+
     def maybe_plan(self, g_observed: Array) -> PlanResult:
         self._iteration += 1
         self.tracker.update(np.asarray(g_observed, dtype=np.float64))

@@ -55,6 +55,13 @@ REPRO_MIGRATION=0/1     Dynamic expert migration (owner re-layout): the
                         EngineConfig.enable_migration policy decides
                         (default off; disabled is bit-identical to the
                         shadow-only planner).
+REPRO_PLAN_DEADLINE_MS=N  Plan watchdog deadline: a Plan primitive whose
+                        host latency exceeds N milliseconds is treated as
+                        failed — the engine rolls back to the last-good
+                        placements (training continues on stale
+                        placements, never blocks on a wedged planner) and
+                        the fallback is counted in StepStats/
+                        OverlapTelemetry.  Unset or 0 ⇒ no deadline.
 REPRO_ASYNC_PLAN=0/1    Trainer runtime selection (escape hatch).  Unset
                         or 1 ⇒ the pipelined async runtime: the Plan
                         primitive (engine.observe + the per-layer greedy
@@ -131,6 +138,15 @@ def a2a_chunks():
     where no engine runs).  See the module docstring."""
     v = _flag("REPRO_A2A_CHUNKS", "")
     return max(1, int(v)) if v else None
+
+
+def plan_deadline_ms() -> float:
+    """REPRO_PLAN_DEADLINE_MS: watchdog deadline for the Plan primitive
+    in milliseconds (0.0 ⇒ disabled).  A plan finishing past the deadline
+    is discarded and the engine falls back to the last-good placements —
+    see the module docstring and repro.train.runtime.run_plan."""
+    v = _flag("REPRO_PLAN_DEADLINE_MS", "")
+    return float(v) if v else 0.0
 
 
 def async_plan() -> bool:

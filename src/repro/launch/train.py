@@ -46,7 +46,16 @@ def main() -> None:
                     help="device mesh shape: '8' (model/EP axis), "
                          "'2,4' (data, model) or '2,2,2' "
                          "(pod, data, model)")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint root: atomic step-<n> directories "
+                         "(repro.checkpoint.save_checkpoint), a final "
+                         "save at --steps, and periodic saves with "
+                         "--ckpt-every")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save an atomic retained checkpoint every N "
+                         "steps during the run (0 = final save only)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retained step-<n> checkpoints under --ckpt")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     if args.a2a_chunks is not None:
@@ -95,7 +104,10 @@ def main() -> None:
     with ctxmgr:
         state, hist = trainer.run(state, data, num_steps=args.steps,
                                   log_every=args.log_every,
-                                  telemetry=telemetry)
+                                  telemetry=telemetry,
+                                  ckpt_dir=args.ckpt,
+                                  ckpt_every=args.ckpt_every,
+                                  ckpt_keep=args.ckpt_keep)
     print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
     if engine is not None:
         s = telemetry.summary()
@@ -108,13 +120,15 @@ def main() -> None:
                   f"{s['comm_hidden_frac']:.0%} hidden under the chunked "
                   f"expert pipeline (modeled)")
     if args.ckpt:
-        from repro.checkpoint import save_train_state
+        from repro.checkpoint import save_checkpoint
         # Checkpoints are always in the home (identity) expert layout —
         # a restored run binds a fresh engine that assumes it.
         state = trainer.restore_home_layout(state)
-        save_train_state(state, args.ckpt, step=args.steps,
-                         extra={"arch": cfg.name})
-        print(f"checkpoint written to {args.ckpt}")
+        path = save_checkpoint(state, args.ckpt, step=args.steps,
+                               keep=args.ckpt_keep,
+                               extra={"arch": cfg.name,
+                                      "expert_layout": "home"})
+        print(f"checkpoint written to {path}")
 
 
 class _null:

@@ -1,0 +1,7 @@
+"""Testing utilities: deterministic fault injection for the resilience
+layer (see :mod:`repro.testing.faults`)."""
+from .faults import (Fault, FaultInjector, InjectedFault, active, injected,
+                     install, uninstall)
+
+__all__ = ["Fault", "FaultInjector", "InjectedFault", "active", "injected",
+           "install", "uninstall"]

@@ -1,0 +1,195 @@
+"""Deterministic seeded fault injection for the self-healing runtime.
+
+The resilience layer (plan watchdog, transactional relocation, atomic
+checkpoints) only earns its keep if the degradation paths are exercised
+on every CI run, not just when hardware actually misbehaves.  This module
+is the injection harness: a :class:`FaultInjector` holds a schedule of
+:class:`Fault` records, each naming a *site* (what goes wrong) and an
+occurrence index *at* (the n-th time that site is reached — for per-step
+sites like planning, this equals the training step whose counts are being
+processed).  Production code reaches the injector through module-level
+hooks that cost one ``None`` check when no injector is installed:
+
+===================  =====================================================
+site (kind)          effect at the hook
+===================  =====================================================
+``planner_exception``  raises :class:`InjectedFault` inside the Plan
+                       primitive, before ``engine.observe`` runs — the
+                       watchdog must fall back to the last-good placements.
+``slow_plan``          sleeps ``payload['delay_s']`` (default 0.05) inside
+                       the Plan window — with ``REPRO_PLAN_DEADLINE_MS``
+                       set, the watchdog must reject the overrun plan.
+``corrupt_counts``     rewrites seeded entries of the fetched routing
+                       counts to NaN / negative values
+                       (``payload['mode']`` ∈ {``nan``, ``negative``,
+                       ``inf``, ``mixed``}) — sanitization must repair
+                       them from the last-good observation.
+``fail_relocation``    makes the transactional weight/optimizer exchange
+                       fail: ``payload['mode']='raise'`` raises mid-
+                       exchange, ``'corrupt'`` (default) perturbs one
+                       relocated leaf so the fingerprint round-trip check
+                       catches it — either way the trainer must roll back.
+``torn_checkpoint``    simulates a crash mid-save: ``payload['mode']``
+                       ``'truncate'`` (default) truncates ``state.npz``
+                       after the digest was stamped (a torn write the
+                       digest check must catch), ``'abort'`` abandons the
+                       temp directory before the atomic rename (a partial
+                       ``restore_latest`` must skip).
+===================  =====================================================
+
+Everything is deterministic: the schedule is explicit, per-site counters
+advance exactly once per hook reach, and the corruption positions come
+from a seeded ``numpy`` generator — the same injector config always
+produces the same faults, which is what lets ``tests/test_resilience.py``
+assert *bit-identical* loss under planner faults.
+
+Usage::
+
+    inj = FaultInjector([Fault("planner_exception", at=3),
+                         Fault("corrupt_counts", at=5)], seed=0)
+    with faults.injected(inj):
+        trainer.run(...)
+    assert ("planner_exception", 3) in inj.fired
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+KINDS = ("planner_exception", "slow_plan", "corrupt_counts",
+         "fail_relocation", "torn_checkpoint")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by injection sites that simulate a crash."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: ``kind`` names the site, ``at`` the 0-based
+    occurrence index at that site (for per-step sites this is the
+    training step whose counts/relocation/save is being processed), and
+    ``payload`` carries site-specific knobs (see module docstring)."""
+
+    kind: str
+    at: int
+    payload: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.at < 0:
+            raise ValueError(f"fault occurrence index must be >= 0, "
+                             f"got {self.at}")
+
+
+class FaultInjector:
+    """Deterministic schedule of faults keyed by (site, occurrence)."""
+
+    def __init__(self, faults: Sequence[Fault], *, seed: int = 0):
+        self.faults: List[Fault] = [f if isinstance(f, Fault) else Fault(*f)
+                                    for f in faults]
+        self.rng = np.random.default_rng(seed)
+        self._counters: Dict[str, int] = defaultdict(int)
+        self.fired: List[Tuple[str, int]] = []
+
+    def _take(self, kind: str) -> Optional[Fault]:
+        """Advance the site counter; return the scheduled fault for this
+        occurrence (and log it) or None."""
+        i = self._counters[kind]
+        self._counters[kind] += 1
+        for f in self.faults:
+            if f.kind == kind and f.at == i:
+                self.fired.append((kind, i))
+                return f
+        return None
+
+    # -- site hooks ------------------------------------------------------
+    def planner_fault(self) -> None:
+        f = self._take("planner_exception")
+        if f is not None:
+            raise InjectedFault(
+                f"injected planner exception (plan #{f.at})")
+
+    def plan_delay(self) -> float:
+        """Seconds to stall the Plan primitive (0.0 when unscheduled)."""
+        f = self._take("slow_plan")
+        return float(f.payload.get("delay_s", 0.05)) if f is not None else 0.0
+
+    def corrupt_counts(self, counts: Array) -> Array:
+        """Maybe corrupt the fetched ``[L, D, E]`` routing counts.  The
+        corrupted copy is float64 (ints can't hold NaN); positions come
+        from the seeded generator."""
+        f = self._take("corrupt_counts")
+        if f is None:
+            return counts
+        mode = f.payload.get("mode", "mixed")
+        out = np.array(counts, dtype=np.float64, copy=True)
+        flat = out.reshape(-1)
+        n_bad = max(1, flat.size // 16)
+        idx = self.rng.choice(flat.size, size=n_bad, replace=False)
+        if mode == "nan":
+            flat[idx] = np.nan
+        elif mode == "inf":
+            flat[idx] = np.inf
+        elif mode == "negative":
+            flat[idx] = -1.0 - np.abs(flat[idx])
+        else:  # mixed
+            thirds = np.array_split(idx, 3)
+            flat[thirds[0]] = np.nan
+            flat[thirds[1]] = np.inf
+            flat[thirds[2]] = -7.0
+        return out
+
+    def relocation_fault(self) -> Optional[Fault]:
+        """The transactional relocation hook: the caller applies the
+        returned fault's mode (``raise`` | ``corrupt``), or nothing."""
+        return self._take("fail_relocation")
+
+    def torn_checkpoint(self) -> Optional[Fault]:
+        """The checkpoint-save hook: the caller simulates the returned
+        fault's crash mode (``truncate`` | ``abort``), or nothing."""
+        return self._take("torn_checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# Process-wide installation (hooks are no-ops when nothing is installed)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def active() -> Optional[FaultInjector]:
+    """The installed injector, or None (the common, zero-cost case)."""
+    return _ACTIVE
+
+
+def install(inj: FaultInjector) -> Optional[FaultInjector]:
+    """Install ``inj`` process-wide; returns the previously installed
+    injector (if any) so callers can restore it."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, inj
+    return prev
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+@contextlib.contextmanager
+def injected(inj: FaultInjector):
+    """Scoped installation: ``with faults.injected(inj): trainer.run(...)``."""
+    prev = install(inj)
+    try:
+        yield inj
+    finally:
+        global _ACTIVE
+        _ACTIVE = prev

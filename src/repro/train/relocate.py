@@ -102,13 +102,15 @@ def _permute_stages(cfg: ModelConfig, stages_params, perms):
     return new_stages
 
 
-def make_relocate_fn(cfg: ModelConfig):
+def make_relocate_fn(cfg: ModelConfig, *, donate: bool = True):
     """Jitted ``(state, perms) -> state`` applying a slot gather to the
     expert-stacked params and optimizer moments.  ``perms`` is the
     :func:`active_gathers` list (a pytree — None entries and dict keys
     are structural, so distinct relocation patterns get their own cached
-    trace; relocations are rare, patterns few).  The input state is
-    donated: relocations reuse its buffers."""
+    trace; relocations are rare, patterns few).  With ``donate=True``
+    (default) the input state is donated so relocations reuse its
+    buffers; the transactional path passes ``donate=False`` so the
+    pre-exchange state survives a failed/corrupt exchange for rollback."""
 
     def fn(state, perms):
         params = dict(state.params)
@@ -121,7 +123,7 @@ def make_relocate_fn(cfg: ModelConfig):
         nu["stages"] = _permute_stages(cfg, opt.nu["stages"], perms)
         return type(state)(params, opt._replace(mu=mu, nu=nu))
 
-    return jax.jit(fn, donate_argnums=(0,))
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
 def apply_relocation(state, cfg: ModelConfig, gather: Array, *,
@@ -135,3 +137,115 @@ def apply_relocation(state, cfg: ModelConfig, gather: Array, *,
         return state
     fn = relocate_fn or make_relocate_fn(cfg)
     return fn(state, perms)
+
+
+# ---------------------------------------------------------------------------
+# Transactional exchange: fingerprint → permute → verify → commit/rollback
+# ---------------------------------------------------------------------------
+
+def expert_fingerprints(state, cfg: ModelConfig, perms) -> dict:
+    """Per-expert content fingerprints of every slab the exchange will
+    touch: ``{(stage, macro_j, slab, leaf): np [repeats, E]}`` where each
+    entry is ``sum(|row|)`` over the expert row's trailing axes in f32.
+
+    The reduction runs *within* one expert's row, so it is bit-identical
+    under any permutation of the expert axis — the property the
+    round-trip check relies on: after a correct exchange,
+    ``post[r] == pre[r][rows[r]]`` exactly, on one device or across the
+    EP mesh (rows move intact; the recomputed sum reads the same bytes
+    in the same order)."""
+    out = {}
+    slabs = (("params", state.params["stages"]),
+             ("mu", state.opt.mu["stages"]),
+             ("nu", state.opt.nu["stages"]))
+    for si, (st, perm) in enumerate(zip(cfg.stages, perms)):
+        if perm is None:
+            continue
+        mpos = blocks.moe_positions(st)
+        for j_str in perm:
+            pos = mpos[int(j_str)]
+            for slab_name, stages_tree in slabs:
+                mp = stages_tree[si][str(pos)]["moe"]
+                for nm in _EXPERT_LEAVES:
+                    if nm not in mp:
+                        continue
+                    arr = mp[nm]
+                    fp = jnp.sum(jnp.abs(arr.astype(jnp.float32)),
+                                 axis=tuple(range(2, arr.ndim)))
+                    out[(si, j_str, slab_name, nm)] = np.asarray(fp)
+    return out
+
+
+def _fingerprints_roundtrip(pre: dict, post: dict, perms) -> bool:
+    """True iff every post-exchange fingerprint equals its pre-exchange
+    fingerprint gathered through the planned permutation, bitwise."""
+    for key, fp_post in post.items():
+        si, j_str = key[0], key[1]
+        rows = np.asarray(perms[si][j_str])
+        fp_pre = pre[key]
+        for r in range(rows.shape[0]):
+            if not np.array_equal(fp_post[r], fp_pre[r][rows[r]]):
+                return False
+    return True
+
+
+def _corrupt_first_touched_leaf(state, cfg: ModelConfig, perms):
+    """Fault-injection helper: perturb one element of the first
+    expert leaf the exchange touched (a corruption the fingerprint
+    round-trip check must catch)."""
+    for si, (st, perm) in enumerate(zip(cfg.stages, perms)):
+        if perm is None:
+            continue
+        mpos = blocks.moe_positions(st)
+        j_str = next(iter(perm))
+        pos = mpos[int(j_str)]
+        params = dict(state.params)
+        stages = list(params["stages"])
+        sp = dict(stages[si])
+        lp = dict(sp[str(pos)])
+        mp = dict(lp["moe"])
+        nm = next(n for n in _EXPERT_LEAVES if n in mp)
+        leaf = mp[nm]
+        mp[nm] = leaf.at[(0,) * leaf.ndim].add(jnp.asarray(1.0, leaf.dtype))
+        lp["moe"] = mp
+        sp[str(pos)] = lp
+        stages[si] = sp
+        params["stages"] = stages
+        return type(state)(params, state.opt)
+    return state
+
+
+def apply_relocation_transactional(state, cfg: ModelConfig, gather: Array,
+                                   *, relocate_fn=None):
+    """Transactional :func:`apply_relocation` → ``(state, ok)``.
+
+    Fingerprints the touched expert slabs, runs a **non-donating**
+    exchange, and verifies the fingerprint round-trip before committing:
+    any exception mid-exchange or any fingerprint mismatch returns the
+    original state untouched with ``ok=False`` (the caller falls back —
+    see ``Trainer._maybe_relocate``).  A supplied ``relocate_fn`` must
+    have been built with ``donate=False``; a donating one would free the
+    rollback copy."""
+    perms = active_gathers(cfg, gather)
+    if all(p is None for p in perms):
+        return state, True
+    from repro.testing import faults as _faults
+    try:
+        pre = expert_fingerprints(state, cfg, perms)
+        fn = relocate_fn or make_relocate_fn(cfg, donate=False)
+        new_state = fn(state, perms)
+        inj = _faults.active()
+        if inj is not None:
+            f = inj.relocation_fault()
+            if f is not None:
+                if f.payload.get("mode", "corrupt") == "raise":
+                    raise _faults.InjectedFault(
+                        f"injected relocation failure (#{f.at})")
+                new_state = _corrupt_first_touched_leaf(new_state, cfg,
+                                                        perms)
+        post = expert_fingerprints(new_state, cfg, perms)
+        if not _fingerprints_roundtrip(pre, post, perms):
+            return state, False
+        return new_state, True
+    except Exception:
+        return state, False

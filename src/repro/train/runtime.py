@@ -74,6 +74,15 @@ class StepStats:
     # Dynamic expert migration: experts re-homed by the weight/optimizer
     # exchange that ran at this step's dispatch (0 on steady-state steps).
     relocations: int = 0
+    # Self-healing runtime: plans rejected by the watchdog (and why),
+    # fall-backs to the last-good placements, routing-count layers the
+    # sanitizer repaired, and relocation exchanges rolled back by the
+    # transactional fingerprint check.
+    plan_failures: int = 0
+    fallbacks: int = 0
+    sanitized_counts: int = 0
+    relocation_failures: int = 0
+    plan_failure_kind: str = ""
 
     @property
     def hidden_frac(self) -> float:
@@ -96,6 +105,13 @@ class StepStats:
                       f" comm_hidden={self.comm_hidden_frac:.0%}")
         if self.relocations:
             extra += f" relocated={self.relocations}"
+        if self.plan_failures:
+            kind = f":{self.plan_failure_kind}" if self.plan_failure_kind else ""
+            extra += f" plan_fallback{kind}"
+        if self.sanitized_counts:
+            extra += f" sanitized={self.sanitized_counts}"
+        if self.relocation_failures:
+            extra += f" reloc_rollback={self.relocation_failures}"
         return (f"step {self.step:5d} loss {self.loss:.4f} "
                 f"({avg_step:.3f}s/it){extra}")
 
@@ -115,6 +131,14 @@ class OverlapTelemetry:
         self.upload_times: List[float] = []
         self.comm_hidden_fracs: List[float] = []
         self.a2a_gbytes: List[float] = []
+        # Self-healing totals: watchdog rejections (by failure kind),
+        # fall-backs to last-good placements, sanitized count layers, and
+        # rolled-back relocation exchanges.
+        self.plan_failures = 0
+        self.fallbacks = 0
+        self.sanitized_counts = 0
+        self.relocation_failures = 0
+        self.fault_fallbacks: Dict[str, int] = {}
 
     def record(self, *, plan: float, step: float, exposed: float,
                upload: float = 0.0, comm_hidden: float = 0.0,
@@ -126,12 +150,33 @@ class OverlapTelemetry:
         self.comm_hidden_fracs.append(float(comm_hidden))
         self.a2a_gbytes.append(float(a2a_gbytes))
 
+    def record_failure(self, kind: str) -> None:
+        """Count one watchdog fall-back, bucketed by failure kind."""
+        self.plan_failures += 1
+        self.fallbacks += 1
+        if kind:
+            self.fault_fallbacks[kind] = self.fault_fallbacks.get(kind, 0) + 1
+
     def record_stats(self, stats: StepStats) -> None:
         self.record(plan=stats.plan_time, step=stats.step_time,
                     exposed=stats.exposed_plan_time,
                     upload=stats.upload_time,
                     comm_hidden=stats.comm_hidden_frac,
                     a2a_gbytes=stats.a2a_gbytes)
+        if stats.plan_failures:
+            self.plan_failures += stats.plan_failures
+            self.fallbacks += stats.fallbacks or stats.plan_failures
+            if stats.plan_failure_kind:
+                k = stats.plan_failure_kind
+                self.fault_fallbacks[k] = (self.fault_fallbacks.get(k, 0)
+                                           + stats.plan_failures)
+        self.sanitized_counts += stats.sanitized_counts
+        if stats.relocation_failures:
+            self.relocation_failures += stats.relocation_failures
+            self.fallbacks += stats.relocation_failures
+            k = "relocation"
+            self.fault_fallbacks[k] = (self.fault_fallbacks.get(k, 0)
+                                       + stats.relocation_failures)
 
     @property
     def hidden_frac(self) -> float:
@@ -159,6 +204,12 @@ class OverlapTelemetry:
             # scheduler timeline on the dispatched chunk plan).
             "comm_hidden_frac": sum(self.comm_hidden_fracs) / n,
             "mean_a2a_gbytes": sum(self.a2a_gbytes) / n,
+            # Self-healing runtime: watchdog/transaction fall-back totals
+            # (per-kind breakdown in ``fault_fallbacks``).
+            "plan_failures": float(self.plan_failures),
+            "fallbacks": float(self.fallbacks),
+            "sanitized_counts": float(self.sanitized_counts),
+            "relocation_failures": float(self.relocation_failures),
         }
 
 
@@ -242,31 +293,114 @@ class PlanEvent:
     version: int              # engine placements_version after observe
     exposed: float = 0.0      # filled in by wait(): plan time the dispatch
                               # path actually waited for
+    # Watchdog outcome: ``ok`` is False when the plan was rejected and the
+    # engine rolled back to the last-good placements.  ``failure`` names
+    # why (planner_exception | invariant | deadline | bad_counts |
+    # worker_crash); ``sanitized_layers`` counts routing-count layers the
+    # sanitizer had to repair before observe.
+    ok: bool = True
+    failure: str = ""
+    sanitized_layers: int = 0
 
 
 def counts_to_layers(counts: Array) -> List[Array]:
     """Split the stacked ``[L, D, E]`` device counts into the per-layer
     float64 routing matrices the engine ingests."""
     counts = np.asarray(counts)
+    if counts.ndim != 3:
+        from repro.core.guard import CountsError
+        raise CountsError(f"stacked routing counts must be [L, D, E], got "
+                          f"shape {counts.shape}")
     return [counts[i].astype(np.float64) for i in range(counts.shape[0])]
 
 
 def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
-    """Execute one Plan primitive: fetch the (possibly in-flight) device
-    counts, run ``engine.observe`` (per-layer searches on ``layer_pool``
-    when given), and collect the telemetry.  Shared by the background
-    worker and the serial runtime so both report identical numbers."""
+    """Execute one Plan primitive under the watchdog: fetch the (possibly
+    in-flight) device counts, sanitize them, snapshot the engine, run
+    ``engine.observe`` (per-layer searches on ``layer_pool`` when given),
+    validate the planner output against the placement invariants, and
+    collect the telemetry.  Shared by the background worker and the
+    serial runtime so both report identical numbers.
+
+    Failure semantics: a planner exception, an invariant violation
+    (:mod:`repro.core.guard`), or a deadline overrun
+    (``REPRO_PLAN_DEADLINE_MS``) rolls the engine back to its pre-plan
+    snapshot — training continues on the last-good placements, the event
+    records ``ok=False`` and the failure kind, and nothing propagates to
+    the dispatch path.  Placements only decide *where* compute happens,
+    so a rejected plan costs balance, not loss bits.
+
+    Engines without the watchdog surface (test stubs implementing only
+    ``observe``/``predicted_times``) are driven best-effort: no snapshot
+    means no rollback, but sanitization and failure capture still apply.
+    """
+    from repro import flags
+    from repro.core import guard
+    from repro.testing import faults as _faults
+
     t0 = time.perf_counter()
-    counts = np.asarray(counts_device)   # blocks the *calling thread*
+    inj = _faults.active()
+    sanitized = 0
+    failure = ""
+    try:
+        counts = np.asarray(counts_device)   # blocks the *calling thread*
+    except Exception:                        # torn transfer: nothing to plan
+        t1 = time.perf_counter()
+        return PlanEvent(plan_time=0.0, fetch_time=t1 - t0, counts_ready=t1,
+                         done=t1, plan_speedup=1.0, num_shadowed=0,
+                         version=getattr(engine, "placements_version", 0),
+                         ok=False, failure="bad_counts")
     t1 = time.perf_counter()             # until the device fwd pass is done
-    engine.observe(counts_to_layers(counts), pool=layer_pool)
+
+    if inj is not None:
+        counts = inj.corrupt_counts(counts)
+    last_good = getattr(engine, "last_counts", lambda: None)()
+    try:
+        layers, sanitized = guard.sanitize_counts(counts, fallback=last_good)
+    except guard.CountsError:
+        t2 = time.perf_counter()
+        return PlanEvent(plan_time=t2 - t1, fetch_time=t1 - t0,
+                         counts_ready=t1, done=t2, plan_speedup=1.0,
+                         num_shadowed=0,
+                         version=getattr(engine, "placements_version", 0),
+                         ok=False, failure="bad_counts")
+
+    snap = getattr(engine, "snapshot", lambda: None)()
+
+    def _rollback() -> None:
+        if snap is not None:
+            engine.restore(snap)
+
+    try:
+        if inj is not None:
+            inj.planner_fault()
+            delay = inj.plan_delay()
+            if delay > 0.0:
+                time.sleep(delay)
+        engine.observe(layers, pool=layer_pool)
+        if snap is not None:   # full engines expose the invariant surface
+            guard.validate_engine(engine)
+    except guard.PlacementInvariantError:
+        _rollback()
+        failure = "invariant"
+    except Exception:
+        _rollback()
+        failure = "planner_exception"
+
+    t2 = time.perf_counter()
+    deadline_ms = flags.plan_deadline_ms()
+    if not failure and deadline_ms > 0.0 and (t2 - t1) * 1e3 > deadline_ms:
+        _rollback()
+        failure = "deadline"
+
     pt = engine.predicted_times()
     shadows = sum(p.num_shadowed for p in engine.placements)
-    t2 = time.perf_counter()
     return PlanEvent(plan_time=t2 - t1, fetch_time=t1 - t0,
                      counts_ready=t1, done=t2,
                      plan_speedup=pt["speedup"], num_shadowed=shadows,
-                     version=engine.placements_version)
+                     version=engine.placements_version,
+                     ok=not failure, failure=failure,
+                     sanitized_layers=sanitized)
 
 
 class PlanPipeline:
@@ -290,33 +424,78 @@ class PlanPipeline:
             max_workers=layer_workers, thread_name_prefix="repro-plan-layer")
             if layer_workers > 1 and n_layers > 1 else None)
         self._future: Optional[Future] = None
+        self._closed = False
+        self.worker_restarts = 0
 
     # -- worker side ----------------------------------------------------
     def _job(self, counts_device) -> PlanEvent:
         return run_plan(self._engine, counts_device, self._layer_pool)
 
+    def _restart_worker(self) -> None:
+        """Replace the planner thread after a failed plan: a worker that
+        just crashed (or sat past the deadline) may be wedged on foreign
+        state; a fresh thread guarantees the next submit starts clean."""
+        old = self._exec
+        self._exec = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="repro-plan")
+        self.worker_restarts += 1
+        old.shutdown(wait=False, cancel_futures=True)
+
     # -- dispatch side ---------------------------------------------------
     def submit(self, counts_device) -> None:
+        if self._closed:
+            raise RuntimeError("PlanPipeline is closed")
         assert self._future is None, "previous plan was never consumed"
         self._future = self._exec.submit(self._job, counts_device)
 
     def wait(self) -> Optional[PlanEvent]:
         """Join the in-flight plan (no-op if none).  Must run before any
-        dispatch that depends on the planned placements."""
+        dispatch that depends on the planned placements.
+
+        Never raises on plan failure: ``run_plan`` converts planner
+        faults into ``ok=False`` events (engine already rolled back), and
+        a crash of the pipeline machinery itself is converted into a
+        synthetic ``failure="worker_crash"`` event.  After any failed
+        event the planner thread is replaced so the next submit starts on
+        a clean worker."""
         if self._future is None:
             return None
         t_wait = time.perf_counter()
-        event = self._future.result()
-        self._future = None
+        f, self._future = self._future, None
+        try:
+            event = f.result()
+        except Exception:
+            now = time.perf_counter()
+            event = PlanEvent(
+                plan_time=0.0, fetch_time=0.0, counts_ready=now, done=now,
+                plan_speedup=1.0, num_shadowed=0,
+                version=getattr(self._engine, "placements_version", 0),
+                ok=False, failure="worker_crash")
         # Plan time the dispatch path spent waiting: overlap of
         # [t_wait, now] with the worker's [counts_ready, done] window.
         event.exposed = max(0.0, event.done - max(t_wait, event.counts_ready))
+        if not event.ok:
+            self._restart_worker()
         return event
 
     def close(self) -> None:
-        self._exec.shutdown(wait=True)
+        """Idempotent shutdown: cancel the pending plan if it has not
+        started, else drain it with a bounded join (a wedged worker must
+        not block interpreter exit) — its result/exception is discarded
+        either way."""
+        if self._closed:
+            return
+        self._closed = True
+        f, self._future = self._future, None
+        drained = True
+        if f is not None and not f.cancel():
+            try:
+                f.result(timeout=5.0)
+            except Exception:
+                drained = f.done()
+        self._exec.shutdown(wait=drained, cancel_futures=True)
         if self._layer_pool is not None:
-            self._layer_pool.shutdown(wait=True)
+            self._layer_pool.shutdown(wait=drained, cancel_futures=True)
 
     def __enter__(self) -> "PlanPipeline":
         return self

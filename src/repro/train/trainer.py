@@ -115,6 +115,7 @@ class _Pending:
     a2a_chunks: int = 1
     chunk_stats: Optional[Dict[str, float]] = None
     relocations: int = 0         # experts re-homed at this dispatch
+    relocation_failures: int = 0 # exchanges rolled back at this dispatch
 
 
 @dataclasses.dataclass
@@ -134,6 +135,7 @@ class Trainer:
                                         attn_impl=self.attn_impl,
                                         remat=self.remat)
         self._relocate_fn = None     # jitted lazily on first migration
+        self._relocate_tx_fn = None  # non-donating twin (transactional)
         if self.engine is not None:
             # The engine's device width is the single source of truth the
             # packed placement arrays are shaped with; it must match the
@@ -151,16 +153,25 @@ class Trainer:
     def run(self, state: TrainState, batches, num_steps: int,
             log_every: int = 10, log_fn=print,
             stats_sink: Optional[List[StepStats]] = None,
-            telemetry: Optional[OverlapTelemetry] = None) -> tuple:
+            telemetry: Optional[OverlapTelemetry] = None,
+            ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+            ckpt_keep: int = 3) -> tuple:
         """Train for ``num_steps``; returns ``(state, history)`` where
         ``history`` is the per-step float loss — identical between the
         sync and async runtimes.  ``stats_sink``/``telemetry`` collect the
-        per-step :class:`StepStats` / aggregate overlap telemetry."""
+        per-step :class:`StepStats` / aggregate overlap telemetry.
+
+        ``ckpt_dir``/``ckpt_every``: save an atomic retained checkpoint
+        (``repro.checkpoint.save_checkpoint``) every ``ckpt_every``
+        completed steps, keeping the last ``ckpt_keep``.  Saves land in
+        the planner-idle window and always in the home expert layout
+        (``restore_home_layout`` first), so a restored run can bind a
+        fresh engine."""
         use_async = (self.async_plan if self.async_plan is not None
                      else flags.async_plan())
         runner = self._run_async if use_async else self._run_sync
         return runner(state, iter(batches), num_steps, log_every, log_fn,
-                      stats_sink, telemetry)
+                      stats_sink, telemetry, ckpt_dir, ckpt_every, ckpt_keep)
 
     # -- shared pieces ---------------------------------------------------
     def _emit(self, stats: StepStats, history, t0, log_every, log_fn,
@@ -180,27 +191,64 @@ class Trainer:
         event.exposed = event.plan_time      # serial: fully exposed
         return event
 
+    def _maybe_checkpoint(self, state: TrainState, step: int,
+                          ckpt_dir: Optional[str], ckpt_every: int,
+                          ckpt_keep: int) -> TrainState:
+        """Cadenced atomic checkpoint after ``step`` completed steps.
+        Runs on the dispatch path (async: in the planner-idle window) and
+        returns the state in the home expert layout — the next dispatch
+        simply re-executes any still-planned relocation."""
+        if not ckpt_dir or not ckpt_every or step <= 0 \
+                or step % ckpt_every != 0:
+            return state
+        from repro.checkpoint import ckpt as _ckpt
+        state = self.restore_home_layout(state)
+        extra: Dict[str, Any] = {"expert_layout": "home"}
+        if self.engine is not None:
+            extra["placements_version"] = int(self.engine.placements_version)
+        _ckpt.save_checkpoint(state, ckpt_dir, step=step, keep=ckpt_keep,
+                              extra=extra)
+        return state
+
     def _maybe_relocate(self, state: TrainState) -> tuple:
         """Execute a pending owner re-layout before the dependent
-        dispatch: permutes the expert-stacked params + optimizer slabs to
-        the planned slot layout (EP-axis exchange on a mesh).  Must run
-        after ``arrays_for_dispatch`` picked up the placement version that
-        carries the matching ``expert_slot`` arrays, and — in the async
-        runtime — between ``wait()`` and ``submit()``, where the planner
-        worker is idle.  Returns ``(state, num_experts_moved)``."""
+        dispatch, transactionally: fingerprint the touched expert slabs,
+        run a non-donating exchange, and commit only when the fingerprint
+        round-trip verifies (``relocate.apply_relocation_transactional``).
+        On failure the pre-exchange state is kept, the device returns to
+        the home layout, and the engine's planned migrations are
+        cancelled (``engine.cancel_migrations`` — the planner may
+        re-propose, which retries the exchange later).  Must run before
+        ``arrays_for_dispatch`` so the cancel's version bump is picked up
+        by the same dispatch, and — in the async runtime — between
+        ``wait()`` and ``submit()``, where the planner worker is idle.
+        Returns ``(state, num_experts_moved, num_failures)``."""
         if self.engine is None or not getattr(self.engine,
                                               "migration_enabled", False):
-            return state, 0
+            return state, 0, 0
         gather = self.engine.pending_relocation()
         if gather is None:
-            return state, 0
+            return state, 0, 0
         moved = len(self.engine.relocations())
-        if self._relocate_fn is None:
-            self._relocate_fn = relocate.make_relocate_fn(self.cfg)
-        state = relocate.apply_relocation(state, self.cfg, gather,
-                                          relocate_fn=self._relocate_fn)
-        self.engine.mark_relocated()
-        return state, moved
+        if self._relocate_tx_fn is None:
+            self._relocate_tx_fn = relocate.make_relocate_fn(self.cfg,
+                                                             donate=False)
+        state, ok = relocate.apply_relocation_transactional(
+            state, self.cfg, gather, relocate_fn=self._relocate_tx_fn)
+        if ok:
+            self.engine.mark_relocated()
+            return state, moved, 0
+        # Roll back: the state is untouched (pre-exchange); bring the
+        # device back to the home layout if an earlier migration had
+        # moved it, and drop the plans demanding the failed move.
+        home = self.engine.reset_layout()
+        if home is not None:
+            if self._relocate_fn is None:
+                self._relocate_fn = relocate.make_relocate_fn(self.cfg)
+            state = relocate.apply_relocation(state, self.cfg, home,
+                                              relocate_fn=self._relocate_fn)
+        self.engine.cancel_migrations()
+        return state, 0, 1
 
     def restore_home_layout(self, state: TrainState) -> TrainState:
         """Undo any owner re-layout: expert-stacked weights and moments
@@ -224,6 +272,7 @@ class Trainer:
     def _stats_for(pending: _Pending, loss: float, t_next: float) -> StepStats:
         ev = pending.plan
         cs = pending.chunk_stats or {}
+        failed = 1 if (ev is not None and not ev.ok) else 0
         return StepStats(
             step=pending.step, loss=loss,
             step_time=t_next - pending.t_dispatch,
@@ -238,6 +287,11 @@ class Trainer:
             a2a_gbytes=cs.get("a2a_gbytes", 0.0),
             comm_hidden_frac=cs.get("comm_hidden_frac", 0.0),
             relocations=pending.relocations,
+            plan_failures=failed,
+            fallbacks=failed,
+            sanitized_counts=ev.sanitized_layers if ev else 0,
+            relocation_failures=pending.relocation_failures,
+            plan_failure_kind=ev.failure if ev else "",
         )
 
     def _chunks_for_dispatch(self) -> tuple:
@@ -256,14 +310,20 @@ class Trainer:
 
     # -- serial baseline -------------------------------------------------
     def _run_sync(self, state, it, num_steps, log_every, log_fn,
-                  stats_sink, telemetry) -> tuple:
+                  stats_sink, telemetry, ckpt_dir=None, ckpt_every=0,
+                  ckpt_keep=3) -> tuple:
         history: List[float] = []
         cache = PlacementCache(self.engine)
         t0 = time.perf_counter()
         for step in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            state = self._maybe_checkpoint(state, step, ckpt_dir,
+                                           ckpt_every, ckpt_keep)
+            # Relocation (and a failed exchange's migration-cancel version
+            # bump) must land before arrays_for_dispatch so the dispatch
+            # runs with weights matching its expert_slot arrays.
+            state, relocated, reloc_failed = self._maybe_relocate(state)
             placements = cache.arrays_for_dispatch()
-            state, relocated = self._maybe_relocate(state)
             chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
             state, metrics = self._step_fn(state, batch, placements,
@@ -275,14 +335,15 @@ class Trainer:
             pending = _Pending(step, metrics, t_dispatch,
                                cache.last_upload_time, cache.version,
                                cache.fingerprint, plan, chunks, chunk_stats,
-                               relocated)
+                               relocated, reloc_failed)
             self._emit(self._stats_for(pending, loss, time.perf_counter()),
                        history, t0, log_every, log_fn, stats_sink, telemetry)
         return state, history
 
     # -- pipelined runtime -----------------------------------------------
     def _run_async(self, state, it, num_steps, log_every, log_fn,
-                   stats_sink, telemetry) -> tuple:
+                   stats_sink, telemetry, ckpt_dir=None, ckpt_every=0,
+                   ckpt_keep=3) -> tuple:
         history: List[float] = []
         cache = PlacementCache(self.engine)
         pipeline = (PlanPipeline(self.engine)
@@ -297,12 +358,17 @@ class Trainer:
                 event = pipeline.wait() if pipeline is not None else None
                 if pending is not None:
                     pending.plan = event
+                # The planner worker is idle between wait() and the
+                # submit() below — the window every engine-mutating host
+                # action must land in: the cadenced checkpoint, the
+                # relocation exchange (so the dispatch runs with weights
+                # matching expert_slot — including a failed exchange's
+                # migration-cancel version bump, which is why relocation
+                # precedes arrays_for_dispatch), and the chunk choice.
+                state = self._maybe_checkpoint(state, step, ckpt_dir,
+                                               ckpt_every, ckpt_keep)
+                state, relocated, reloc_failed = self._maybe_relocate(state)
                 placements = cache.arrays_for_dispatch()
-                # Safe to read engine state here: the planner worker is
-                # idle between wait() and the submit() below — the same
-                # window the relocation exchange must land in, so the
-                # dispatch below runs with weights matching expert_slot.
-                state, relocated = self._maybe_relocate(state)
                 chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
                 state, metrics = self._step_fn(state, batch, placements,
@@ -322,7 +388,8 @@ class Trainer:
                                    cache.fingerprint,
                                    a2a_chunks=chunks,
                                    chunk_stats=chunk_stats,
-                                   relocations=relocated)
+                                   relocations=relocated,
+                                   relocation_failures=reloc_failed)
             # Drain: the final step's loss and its (now unused) plan.
             if pipeline is not None:
                 final_event = pipeline.wait()

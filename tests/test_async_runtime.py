@@ -179,7 +179,11 @@ class TestPlanPipelineOrdering:
         with PlanPipeline(eng) as pipe:
             assert pipe.wait() is None
 
-    def test_observe_error_propagates_at_wait(self):
+    def test_observe_error_becomes_fallback_event(self):
+        """The watchdog converts a planner explosion into a failed
+        PlanEvent instead of propagating — training must continue on the
+        last-good placements, and the next submit runs on a fresh
+        worker."""
         eng = _SlowEngine()
 
         def boom(*a, **k):
@@ -187,8 +191,16 @@ class TestPlanPipelineOrdering:
         eng.observe = boom
         with PlanPipeline(eng) as pipe:
             pipe.submit(np.zeros((2, 1, 4), np.int32))
-            with pytest.raises(RuntimeError, match="planner exploded"):
-                pipe.wait()
+            event = pipe.wait()
+            assert event is not None and not event.ok
+            assert event.failure == "planner_exception"
+            assert pipe.worker_restarts == 1
+            # the pipeline stays usable: a healthy plan lands afterwards
+            del eng.observe            # un-shadow the class method
+            eng.delay = 0.0
+            pipe.submit(np.zeros((2, 1, 4), np.int32))
+            event = pipe.wait()
+            assert event.ok and eng.placements_version == 1
 
 
 # ---------------------------------------------------------------------------

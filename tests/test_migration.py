@@ -435,6 +435,89 @@ class TestRelocationDevicePath:
             got.append(float(m["loss"]))
         assert got == base
 
+    def test_checkpoint_restore_onto_migrated_run_bit_identity(self,
+                                                               tmp_path):
+        """Checkpoint taken mid-run while experts are migrated: the save
+        is in home order, a fresh run restoring it (with an
+        identity-assuming engine) continues the loss trajectory
+        bit-identically — and so does the original migrated run, i.e.
+        checkpointing is numerically side-effect-free."""
+        from repro.checkpoint import restore_latest, save_checkpoint
+        from repro.configs import get_config, reduced
+        from repro.data import SyntheticLM
+        from repro.optim import adamw, cosine
+        from repro.parallel import local_ctx
+        from repro.train import relocate
+        from repro.train.trainer import make_train_step
+
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+        E, L = cfg.moe.num_experts, cfg.num_moe_layers
+        opt = adamw(cosine(3e-3, 2, 6), clip_norm=None)
+        step_fn = make_train_step(cfg, ctx, opt, attn_impl="naive",
+                                  remat=False, donate=False)
+        rfn = relocate.make_relocate_fn(cfg, donate=False)
+        import itertools
+        data = list(itertools.islice(iter(SyntheticLM(cfg, batch=2,
+                                                      seq=16)), 6))
+
+        def arrays(slot_of):
+            s_max = cfg.moe.s_max
+            return {
+                "shadow_idx": jnp.full((L, s_max), E, jnp.int32),
+                "shadow_valid": jnp.zeros((L, s_max), jnp.float32),
+                "shadow_devs": jnp.zeros((L, s_max, 1), jnp.float32),
+                "expert_slot": jnp.tile(jnp.asarray(slot_of, jnp.int32),
+                                        (L, 1)),
+            }
+
+        def init():
+            from repro.train import Trainer
+            return Trainer(cfg, ctx, opt, attn_impl="naive",
+                           remat=False).init_state(jax.random.PRNGKey(0))
+
+        # baseline: identity layout throughout
+        state, base = init(), []
+        for b in data:
+            state, m = step_fn(state, b, arrays(np.arange(E)))
+            base.append(float(m["loss"]))
+
+        # migrated run: swap at step 3, checkpoint (home order) after 4
+        slot_of = np.arange(E)
+        slot_of[0], slot_of[-1] = slot_of[-1], slot_of[0]
+        gather = np.tile(np.argsort(slot_of).astype(np.int32), (L, 1))
+        gather_home = np.tile(slot_of.astype(np.int32), (L, 1))
+        state, got = init(), []
+        root = str(tmp_path / "ckpts")
+        for i, b in enumerate(data[:4]):
+            if i == 3:
+                state = relocate.apply_relocation(state, cfg, gather,
+                                                  relocate_fn=rfn)
+            state, m = step_fn(state, b, arrays(slot_of if i >= 3
+                                                else np.arange(E)))
+            got.append(float(m["loss"]))
+        home = relocate.apply_relocation(state, cfg, gather_home,
+                                         relocate_fn=rfn)
+        save_checkpoint(home, root, step=4,
+                        extra={"expert_layout": "home"})
+        # original run continues, still migrated
+        for b in data[4:]:
+            state, m = step_fn(state, b, arrays(slot_of))
+            got.append(float(m["loss"]))
+        assert got == base
+
+        # fresh run restores the checkpoint and continues at home layout
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape,
+                                           np.asarray(x).dtype), home)
+        restored, meta, _ = restore_latest(like, root)
+        assert meta["step"] == 4 and meta["expert_layout"] == "home"
+        resumed = []
+        for b in data[4:]:
+            restored, m = step_fn(restored, b, arrays(np.arange(E)))
+            resumed.append(float(m["loss"]))
+        assert resumed == base[4:]
+
 
 # ---------------------------------------------------------------------------
 # Fast-lane CI guard: migration-disabled trainer ≡ pre-migration numerics
