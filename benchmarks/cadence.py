@@ -75,16 +75,24 @@ def overlap_rows(iters: int = 30):
                 + L * (hw.t_fnec + hw.t_bnec))
 
     rows = []
-    for interval in (1, 5, 20):
+    variants = [(f"interval{i}", dict(replan_interval=i)) for i in (1, 5, 20)]
+    # Forecast cadence backoff: per-step cadence that backs itself off on
+    # stable layers (bounded by plan_cadence_max) — comparable to the
+    # fixed-interval rows above because the plans-per-iteration counter
+    # comes from the same cadence-aware engine accounting.
+    variants.append(("forecast", dict(replan_interval=1,
+                                      enable_forecast=True,
+                                      plan_cadence_max=16)))
+    for label, kw in variants:
         ec = EngineConfig(num_experts=E, num_devices=D, num_moe_layers=L,
-                          s_max=8, n=2, replan_interval=interval,
-                          scheduled=True)
+                          s_max=8, n=2, scheduled=True, **kw)
         eng = ProProphetEngine(ec, hw)
         traces = [GatingTrace(D, E, 1024, skew=0.25, drift=0.05, seed=li)
                   for li in range(L)]
-        tel, uploads = measure_plan_overlap(eng, traces, step_window, iters)
+        tel, uploads, plans = measure_plan_overlap(eng, traces, step_window,
+                                                   iters)
         s = tel.summary()
-        pre = f"cadence/overlap/interval{interval}"
+        pre = f"cadence/overlap/{label}"
         rows.append((f"{pre}/plan", s["mean_plan_s"] * 1e6,
                      s["hidden_frac"]))
         rows.append((f"{pre}/step", s["mean_step_s"] * 1e6,
@@ -94,4 +102,5 @@ def overlap_rows(iters: int = 30):
                                                 1e-12)))
         rows.append((f"{pre}/uploads", s["mean_upload_s"] * 1e6,
                      uploads / iters))
+        rows.append((f"{pre}/plans", 0.0, plans / (iters * L)))
     return rows

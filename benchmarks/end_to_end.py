@@ -53,6 +53,16 @@ def run(iters: int = 20):
                     rows.append((f"e2e/{cluster}/{model}/host_plan",
                                  ov["mean_plan_s"] * 1e6,
                                  ov["hidden_frac"]))
+                    # Forecast cadence backoff vs per-step planning on
+                    # the same traces: derived = fraction of per-layer
+                    # Plan primitives the backoff still executes
+                    # (cadence-aware accounting, so the rows compare).
+                    ovf = host_overlap(sim, pp.mean_iter, forecast=True)
+                    rows.append((
+                        f"e2e/{cluster}/{model}/host_plan_forecast",
+                        ovf["mean_plan_s"] * 1e6,
+                        ovf["plans_per_iter"]
+                        / max(ov["plans_per_iter"], 1e-12)))
                     sweep = chunk_sweep(
                         SimConfig(model=model, cluster=cluster,
                                   devices=devices, tokens=tokens,

@@ -203,6 +203,21 @@ def resilience_section():
         "end-to-end in `tests/test_resilience.py`.", ""])
 
 
+def forecast_section():
+    from .forecast import table
+    return "\n".join([
+        "## §Predictive planning", "",
+        "Forecast-driven plan-cadence backoff + prefetched relocation "
+        "(`repro.core.forecast`, `REPRO_FORECAST` / "
+        "`REPRO_PLAN_CADENCE_MAX` / `REPRO_RELOC_PREFETCH`) vs per-step "
+        "synchronous planning, on identical fluctuating→stabilizing "
+        "gating streams (`benchmarks.simlib.forecast_sweep`; seed JSON "
+        "in `BENCH_forecast.json`).  Loss is bit-identical by "
+        "construction — placements and relocation *timing* only move "
+        "compute — asserted end-to-end in `tests/test_forecast.py`.", "",
+        table(), ""])
+
+
 def main():
     header = os.path.join(os.path.dirname(__file__), "..",
                           "EXPERIMENTS.header.md")
@@ -213,6 +228,7 @@ def main():
     print(moe_ffn_section())
     print(dispatch_section())
     print(resilience_section())
+    print(forecast_section())
     print(perf_section())
 
 

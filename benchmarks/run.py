@@ -11,7 +11,7 @@ import time
 
 def main() -> None:
     from . import (ablation, balance, breakdown, cadence, dispatch,
-                   end_to_end, fine_grained, locality, moe_ffn,
+                   end_to_end, fine_grained, forecast, locality, moe_ffn,
                    perfmodel_accuracy, policies, resilience, roofline)
     modules = [
         ("locality(Fig4)", locality),
@@ -25,6 +25,7 @@ def main() -> None:
         ("policies(Fig15)", policies),
         ("balance(Fig16)", balance),
         ("cadence(beyond-paper)", cadence),
+        ("forecast(predictive)", forecast),
         ("resilience(watchdog)", resilience),
         ("roofline(Roofline)", roofline),
     ]

@@ -8,6 +8,15 @@
 #                             fallback/rollback, transactional relocation,
 #                             atomic/torn checkpoints, and the 12-step
 #                             loss-bit-identity acceptance run)
+#   scripts/ci.sh --forecast  predictive-planning lane only: the load
+#                             forecaster + plan-cadence backoff +
+#                             prefetched relocation (tests/
+#                             test_forecast.py — forecaster property
+#                             tests, engine backoff/reset, snapshot
+#                             rollback of the forecast state, the
+#                             forecast_sweep acceptance ratios, and the
+#                             forecast+prefetch ≡ per-step-sync loss
+#                             bit-identity run)
 #   scripts/ci.sh --fast      fast lane: skips @slow (multi-device
 #                             subprocesses, long end-to-end trainer runs)
 #                             but keeps the async≡sync equivalence tests
@@ -47,5 +56,8 @@ if [[ "${1:-}" == "--fast" ]]; then
 elif [[ "${1:-}" == "--faults" ]]; then
   shift
   set -- tests/test_resilience.py "$@"
+elif [[ "${1:-}" == "--forecast" ]]; then
+  shift
+  set -- tests/test_forecast.py "$@"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

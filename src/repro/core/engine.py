@@ -70,6 +70,27 @@ class EngineConfig:
     enable_migration: bool = False
     migrate_window: float = 0.0
     migrate_state_factor: float = 3.0   # params + AdamW mu/nu
+    # Churn control (modeled-win ≥ exchange-cost hysteresis): new owner
+    # moves are adopted only when their steady-state win over the best
+    # migration-free alternative is ≥ this multiple of the amortized
+    # exchange cost.  Planning always starts from the *current* device
+    # layout (already-executed moves are free), so 1.0 is exact
+    # break-even; the default demands the win pay for the move twice.
+    migrate_hysteresis: float = 2.0
+    # Predictive load planning (core/forecast.py): an EMA forecaster per
+    # layer classifies it fluctuating | drifting | stable, the planner
+    # consumes the forecast for step j+1 instead of step j−1's counts,
+    # and stable layers back their replan cadence off exponentially up
+    # to `plan_cadence_max` observations (0 ⇒ REPRO_PLAN_CADENCE_MAX,
+    # default 16), reset the moment the layer drifts.  Off by default —
+    # the disabled path is bit-identical to the last-value planner.
+    # REPRO_FORECAST=0/1 overrides.
+    enable_forecast: bool = False
+    forecast_decay: float = 0.5
+    forecast_stable_threshold: float = 0.15
+    forecast_drift_threshold: float = 0.4
+    forecast_patience: int = 3
+    plan_cadence_max: int = 0
     # Chunked a2a↔FEC pipelining (repro.models.moe): candidate chunk
     # counts the scheduler timeline picks from, and the modeled per-chunk
     # launch cost (collective setup + kernel dispatch) that keeps the
@@ -102,7 +123,8 @@ class ProProphetEngine:
             scheduled=cfg.scheduled,
             strategy="both" if self.migration_enabled else "shadow",
             migrate_window=window,
-            migrate_state_factor=cfg.migrate_state_factor)
+            migrate_state_factor=cfg.migrate_state_factor,
+            migrate_hysteresis=cfg.migrate_hysteresis)
         self.planners: List[LocalityPlanner] = [
             LocalityPlanner(greedy, cfg.num_devices, cfg.num_experts,
                             replan_interval=cfg.replan_interval,
@@ -130,6 +152,34 @@ class ProProphetEngine:
             np.arange(cfg.num_experts, dtype=np.int64)
             for _ in range(cfg.num_moe_layers)
         ]
+        # Predictive load planning: per-layer forecaster + cadence
+        # backoff state.  The forecaster only updates when enabled, so
+        # the disabled path stays bit-identical to the last-value
+        # planner; the plans_executed/skipped counters tick either way
+        # (a cached-plan reuse at replan_interval > 1 is also a skip) —
+        # the cadence-aware accounting the overlap telemetry reads.
+        fflag = flags.forecast()
+        self.forecast_enabled = (
+            (cfg.enable_forecast if fflag is None else fflag)
+            and cfg.policy == "pro_prophet")
+        self.cadence_max = max(1, cfg.plan_cadence_max
+                               or flags.plan_cadence_max())
+        from .forecast import LoadForecaster
+        self.forecasters: List[LoadForecaster] = [
+            LoadForecaster(cfg.num_devices, cfg.num_experts,
+                           decay=cfg.forecast_decay,
+                           stable_threshold=cfg.forecast_stable_threshold,
+                           drift_threshold=cfg.forecast_drift_threshold,
+                           patience=cfg.forecast_patience)
+            for _ in range(cfg.num_moe_layers)
+        ]
+        base = max(1, cfg.replan_interval)
+        self._plan_interval: List[int] = [base] * cfg.num_moe_layers
+        self._since_plan: List[int] = [0] * cfg.num_moe_layers
+        self.plans_executed = 0
+        self.plans_skipped = 0
+        self.last_plan_info: Dict[str, int] = {
+            "planned": 0, "skipped": 0, "stable": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -138,19 +188,54 @@ class ProProphetEngine:
         trainer re-uploads device arrays only on a version change."""
         return self._version
 
+    def _device_layout(self, li: int) -> ExpertPlacement:
+        """The slot layout physically on the device for layer ``li`` —
+        the base the planner plans *from* when migration is enabled, so
+        already-executed owner moves are free and only new moves pay
+        ``t_migrate``."""
+        return ExpertPlacement(
+            self.cfg.num_experts, self.cfg.num_devices, {},
+            tuple(int(s) for s in self._device_slots[li]))
+
     def _plan_layer(self, li: int, g: Array):
-        """One layer's planning step → (placement, PlanResult|None).
-        Layers are independent, so these may run on a thread pool."""
+        """One layer's planning step → (placement, PlanResult|None,
+        planned?).  Layers are independent, so these may run on a thread
+        pool (each call touches only its own layer's slots of the
+        per-layer state lists)."""
         from .baselines import fastermoe_plan, topk_policy
         if self.cfg.policy == "pro_prophet":
-            res = self.planners[li].maybe_plan(g)
-            return res.placement, res
+            planner = self.planners[li]
+            current = (self._device_layout(li) if self.migration_enabled
+                       else None)
+            if not self.forecast_enabled:
+                res, planned = planner.step(g, current=current)
+                return res.placement, res, planned
+            fc = self.forecasters[li]
+            phase = fc.update(g)
+            base = max(1, self.cfg.replan_interval)
+            if phase != "stable":
+                # Reset the backoff the moment the layer drifts; a
+                # fluctuating layer additionally replans immediately.
+                self._plan_interval[li] = base
+            self._since_plan[li] += 1
+            due = (planner.current is None
+                   or phase == "fluctuating"
+                   or self._since_plan[li] >= self._plan_interval[li])
+            g_plan = fc.predict() if due else None
+            res, planned = planner.step(g, replan=due, g_plan=g_plan,
+                                        current=current)
+            if planned:
+                self._since_plan[li] = 0
+                if phase == "stable":
+                    self._plan_interval[li] = min(
+                        self._plan_interval[li] * 2, self.cadence_max)
+            return res.placement, res, planned
         if self.cfg.policy == "fastermoe":
             res = fastermoe_plan(self.perf, g, max_shadows=self.cfg.s_max)
-            return res.placement, res
+            return res.placement, res, True
         if self.cfg.policy in ("top2", "top3"):
             k = int(self.cfg.policy[-1])
-            return topk_policy(g, min(k, self.cfg.s_max)), None
+            return topk_policy(g, min(k, self.cfg.s_max)), None, True
         raise ValueError(f"unknown policy {self.cfg.policy}")
 
     def observe(self, per_layer_g: Sequence[Array], *, pool=None) -> None:
@@ -184,13 +269,23 @@ class ProProphetEngine:
             results = [self._plan_layer(li, g)
                        for li, g in enumerate(per_layer_g)]
         changed = False
-        for li, (placement, res) in enumerate(results):
+        planned = stable = 0
+        for li, (placement, res, ran) in enumerate(results):
             if res is not None:
                 self.last_results[li] = res
+            if ran:
+                planned += 1
+            if self.forecasters[li].phase == "stable":
+                stable += 1
             if placement != self._placements[li]:
                 self._placements[li] = placement
                 self._dirty.add(li)
                 changed = True
+        self.plans_executed += planned
+        self.plans_skipped += len(results) - planned
+        self.last_plan_info = {"planned": planned,
+                               "skipped": len(results) - planned,
+                               "stable": stable}
         if changed:
             self._version += 1
 
@@ -222,6 +317,15 @@ class ProProphetEngine:
             "costs_cache": self._costs_cache,
             "device_slots": [ds.copy() for ds in self._device_slots],
             "planners": [p.snapshot() for p in self.planners],
+            # Predictive planning: the phase detector and cadence backoff
+            # advance inside observe, so a rejected plan must roll them
+            # back with the placements — otherwise the backoff would keep
+            # doubling past plans that never took effect.
+            "forecasters": [f.snapshot() for f in self.forecasters],
+            "plan_interval": list(self._plan_interval),
+            "since_plan": list(self._since_plan),
+            "plan_counters": (self.plans_executed, self.plans_skipped),
+            "last_plan_info": dict(self.last_plan_info),
         }
 
     def restore(self, snap: Dict[str, Any]) -> None:
@@ -239,6 +343,12 @@ class ProProphetEngine:
         self._device_slots = [ds.copy() for ds in snap["device_slots"]]
         for p, ps in zip(self.planners, snap["planners"]):
             p.restore(ps)
+        for f, fs in zip(self.forecasters, snap["forecasters"]):
+            f.restore(fs)
+        self._plan_interval = list(snap["plan_interval"])
+        self._since_plan = list(snap["since_plan"])
+        self.plans_executed, self.plans_skipped = snap["plan_counters"]
+        self.last_plan_info = dict(snap["last_plan_info"])
 
     def cancel_migrations(self) -> int:
         """Drop every planned owner re-layout: rebuild each migrated

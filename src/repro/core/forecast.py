@@ -1,0 +1,117 @@
+"""Per-layer load forecasting: EMA prediction + drift/stability phases.
+
+"Prediction Is All MoE Needs" (PAPERS.md) observes that expert load
+distributions move from *fluctuating* to *stabilizing* as training
+progresses — exactly the regime split Pro-Prophet's locality property
+already exploits implicitly.  This module makes the signal explicit: a
+:class:`LoadForecaster` per MoE layer maintains an EMA over the observed
+routing matrices, scores each new observation by its **prediction
+error** (relative L1 distance between the observation and the forecast
+that would have been used for it), and classifies the layer into one of
+three phases:
+
+* ``fluctuating`` — prediction error above ``drift_threshold`` (or no
+  history yet).  The forecast is untrustworthy; the planner should run
+  every step and the cadence backoff resets.
+* ``drifting``    — error between the thresholds: loads are moving but
+  slowly enough that the EMA tracks them.  Plan at the base cadence.
+* ``stable``      — error below ``stable_threshold`` for ``patience``
+  consecutive observations.  The cached plan stays near-optimal; the
+  engine backs the replan cadence off exponentially
+  (``EngineConfig.plan_cadence_max`` / ``REPRO_PLAN_CADENCE_MAX``).
+
+The engine plans from :meth:`predict` — the forecast for step *j+1* —
+instead of step *j−1*'s raw counts, and the EMA's smoothing also damps
+the multinomial sampling noise that makes last-value planning churn.
+
+Invariants the property tests pin (``tests/test_forecast.py``):
+constant loads are an exact EMA fixed point (the update uses the
+``ema + (1−decay)·(g − ema)`` form, so ``g == ema`` leaves the EMA
+bitwise unchanged for any decay) with drift exactly 0.0; an injected
+step change re-flags the layer ``fluctuating`` within one update.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+PHASES = ("fluctuating", "drifting", "stable")
+
+
+class LoadForecaster:
+    """EMA forecast of one layer's routing matrix + phase detector.
+
+    ``decay`` is the weight kept on history (0 ⇒ last-value predictor,
+    1 ⇒ frozen first observation); thresholds are on the *relative* L1
+    prediction error ``|g − forecast|₁ / |g|₁`` so they are invariant to
+    token count; ``patience`` is the number of consecutive calm
+    observations required before the layer is declared ``stable``.
+    """
+
+    def __init__(self, num_devices: int, num_experts: int, *,
+                 decay: float = 0.5, stable_threshold: float = 0.15,
+                 drift_threshold: float = 0.4, patience: int = 3):
+        assert 0.0 <= decay < 1.0, decay
+        assert 0.0 < stable_threshold <= drift_threshold, (
+            stable_threshold, drift_threshold)
+        self.D, self.E = int(num_devices), int(num_experts)
+        self.decay = float(decay)
+        self.stable_threshold = float(stable_threshold)
+        self.drift_threshold = float(drift_threshold)
+        self.patience = max(1, int(patience))
+        self._ema: Optional[Array] = None
+        self.phase: str = "fluctuating"   # cold start: nothing to trust
+        self.drift: float = float("inf")  # last prediction error
+        self._calm = 0                    # consecutive sub-stable errors
+
+    def update(self, g: Array) -> str:
+        """Ingest one observed routing matrix; returns the new phase.
+
+        The drift metric is computed against the *pre-update* EMA — the
+        forecast a consumer would actually have planned step ``j`` with —
+        then the EMA absorbs the observation.
+        """
+        g = np.asarray(g, dtype=np.float64)
+        assert g.shape == (self.D, self.E), (g.shape, (self.D, self.E))
+        if self._ema is None:
+            self._ema = g.copy()
+            self.phase = "fluctuating"
+            self.drift = float("inf")
+            self._calm = 0
+            return self.phase
+        total = float(np.abs(g).sum())
+        self.drift = float(np.abs(g - self._ema).sum()) / max(total, 1.0)
+        # g == ema keeps the EMA bitwise fixed for any decay (the
+        # correction term is exactly zero) — the fixed-point property.
+        self._ema = self._ema + (1.0 - self.decay) * (g - self._ema)
+        if self.drift > self.drift_threshold:
+            self.phase, self._calm = "fluctuating", 0
+        elif self.drift > self.stable_threshold:
+            self.phase, self._calm = "drifting", 0
+        else:
+            self._calm += 1
+            self.phase = "stable" if self._calm >= self.patience \
+                else "drifting"
+        return self.phase
+
+    def predict(self) -> Optional[Array]:
+        """Forecast routing matrix for the next step (None before any
+        observation).  A copy — safe to hand to the greedy search."""
+        return None if self._ema is None else self._ema.copy()
+
+    def snapshot(self) -> Tuple:
+        """State capture for watchdog rollback (``ProProphetEngine
+        .snapshot``): a rejected plan must not leave the phase detector
+        advanced past the placements it was rolled back with."""
+        return (None if self._ema is None else self._ema.copy(),
+                self.phase, self.drift, self._calm)
+
+    def restore(self, snap: Tuple) -> None:
+        ema, phase, drift, calm = snap
+        self._ema = None if ema is None else ema.copy()
+        self.phase = phase
+        self.drift = drift
+        self._calm = calm

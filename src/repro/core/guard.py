@@ -183,3 +183,31 @@ def validate_engine(engine) -> None:
         if not np.isfinite(v):
             raise PlacementInvariantError(
                 f"modeled time '{k}' is not finite: {v}")
+    validate_forecast(engine)
+
+
+def validate_forecast(engine) -> None:
+    """Predictive-planning state invariants: every layer's forecast EMA
+    is finite, its phase is a known label, and the cadence backoff sits
+    in ``[1, cadence_max]`` — corrupt counts that slip into the
+    forecaster would otherwise poison every future predicted-load plan.
+    Engines without the forecast surface (test stubs) are skipped."""
+    fcs = getattr(engine, "forecasters", None)
+    if not fcs:
+        return
+    from .forecast import PHASES
+    for li, fc in enumerate(fcs):
+        ema = fc.predict()
+        if ema is not None and not np.isfinite(ema).all():
+            raise PlacementInvariantError(
+                f"layer {li}: forecast EMA contains NaN/inf entries")
+        if fc.phase not in PHASES:
+            raise PlacementInvariantError(
+                f"layer {li}: unknown forecast phase {fc.phase!r}")
+    cap = max(int(getattr(engine, "cadence_max", 1)),
+              int(getattr(engine.cfg, "replan_interval", 1)), 1)
+    for li, iv in enumerate(getattr(engine, "_plan_interval", [])):
+        if not (1 <= int(iv) <= cap):
+            raise PlacementInvariantError(
+                f"layer {li}: plan cadence interval {iv} outside "
+                f"[1, {cap}]")

@@ -175,23 +175,32 @@ class PerfModel:
         return self._t_transfer(s, n, self.hw.expert_param_bytes)
 
     # -- migration (beyond-paper: FlexMoE/LAER-MoE-style owner re-layout) --
-    def t_migrate(self, m: int, *, window: float,
-                  state_factor: float = 3.0) -> float:
-        """Amortized per-step cost of ``m`` expert migrations.
-
-        A migration swaps one expert's home slot with a partner slot on the
-        destination device: a ONE-TIME bidirectional p2p exchange of the
-        two experts' parameter + optimizer slabs (``state_factor`` ≈ 3 for
-        AdamW: params + mu + nu), amortized over the ``window`` steps the
-        locality property (§IV.B) keeps the placement valid.  Contrast
-        with :meth:`t_trans`, which shadowing pays EVERY step — migration
-        dominates exactly when the skew is stable (window ≫ 1) and loses
-        when it is transient (window → 1).
-        """
+    def t_exchange(self, m: int, *, state_factor: float = 3.0) -> float:
+        """One-time (unamortized) cost of ``m`` expert migrations: each
+        swaps one expert's home slot with a partner slot on the
+        destination device, a bidirectional p2p exchange of the two
+        experts' parameter + optimizer slabs (``state_factor`` ≈ 3 for
+        AdamW: params + mu + nu).  This is the wall-clock a synchronous
+        relocation blocks the dispatch for — and what the prefetched
+        relocation hides under the previous step — as well as the cost
+        the planner's hysteresis gate weighs a modeled win against."""
         if m <= 0:
             return 0.0
-        bytes_moved = 2.0 * state_factor * self.hw.expert_param_bytes
-        return m * bytes_moved / self.hw.bandwidth / max(float(window), 1.0)
+        return (m * 2.0 * state_factor * self.hw.expert_param_bytes
+                / self.hw.bandwidth)
+
+    def t_migrate(self, m: int, *, window: float,
+                  state_factor: float = 3.0) -> float:
+        """Amortized per-step cost of ``m`` expert migrations: the
+        :meth:`t_exchange` one-time move spread over the ``window`` steps
+        the locality property (§IV.B) keeps the placement valid.
+        Contrast with :meth:`t_trans`, which shadowing pays EVERY step —
+        migration dominates exactly when the skew is stable (window ≫ 1)
+        and loses when it is transient (window → 1)."""
+        if m <= 0:
+            return 0.0
+        return (self.t_exchange(m, state_factor=state_factor)
+                / max(float(window), 1.0))
 
     # -- eq. 6: unscheduled layer time -------------------------------------
     def layer_time(self, R: Array, H: Array, s: int, n: int) -> float:

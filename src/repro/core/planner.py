@@ -73,7 +73,8 @@ class GreedyPlanner:
     def __init__(self, perf: PerfModel, *, n: int = 0, alpha: float = 0.25,
                  s_max: int = 8, scheduled: bool = False,
                  strategy: str = "shadow", migrate_window: float = 50.0,
-                 migrate_state_factor: float = 3.0):
+                 migrate_state_factor: float = 3.0,
+                 migrate_hysteresis: float = 1.0):
         self.perf = perf
         self.n = int(n)
         self.alpha = float(alpha)
@@ -85,6 +86,13 @@ class GreedyPlanner:
         self.strategy = strategy
         self.migrate_window = float(migrate_window)
         self.migrate_state_factor = float(migrate_state_factor)
+        # Churn control: new migrations are adopted only when their
+        # modeled steady-state win over the best migration-free prefix is
+        # at least `migrate_hysteresis` × the amortized exchange cost.
+        # 1.0 is the break-even the amortized scoring already enforces
+        # (the gate is then vacuous); > 1 suppresses epsilon-win moves
+        # that would churn the weights for negligible balance gain.
+        self.migrate_hysteresis = float(migrate_hysteresis)
 
     def _balanced(self, H: Array, total_inputs: float, num_experts: int) -> bool:
         return (H.max() - H.min()) < self.alpha * total_inputs / num_experts
@@ -109,7 +117,15 @@ class GreedyPlanner:
                     tokens_per_expert[partners]))])
         return None
 
-    def plan(self, g: Array) -> PlanResult:
+    def plan(self, g: Array, *, current: Optional[ExpertPlacement] = None
+             ) -> PlanResult:
+        """Greedy search from ``current``'s slot layout (identity when
+        None — the pre-migration behavior, bit-identical for the shadow
+        strategy).  Migration moves are charged ``t_migrate`` only for
+        *new* owner changes relative to ``current`` — moves the device
+        already executed are free, which is what stops a replan from
+        re-paying (and re-proposing) its own history every step.  Shadows
+        are re-decided from scratch each plan."""
         g = np.asarray(g, dtype=np.float64)
         D, E = g.shape
         assert D == self.perf.D, (D, self.perf.D)
@@ -127,15 +143,25 @@ class GreedyPlanner:
                     state_factor=self.migrate_state_factor)
             return t
 
-        placement = traditional(E, D)
+        base = traditional(E, D)
+        if current is not None and current.slot_of is not None:
+            base = ExpertPlacement(E, D, {}, current.slot_of)
+        placement = base
         H, R = placement.compute_loads(g)
         t_best = score(R, H, 0, 0)
-        baseline = t_best
+        if base.slot_of is None:
+            baseline = t_best
+        else:
+            Ht, Rt = traditional(E, D).compute_loads(g)
+            baseline = score(Rt, Ht, 0, 0)
 
         used_devices: set[int] = set()
         # ("shadow", e, devs) | ("migrate", e, dst, partner)
         moves: List[Tuple] = []
         cnt = 0  # best prefix length
+        # Best *migration-free* prefix (only prefixes before the first
+        # migrate move qualify) — the hysteresis gate's fallback.
+        cnt_free, t_free = 0, t_best
         steps = 0
         n_shadow = n_mig = 0
         migrated: set[int] = set()
@@ -230,9 +256,26 @@ class GreedyPlanner:
             if t < t_best:
                 t_best = t
                 cnt = len(moves)
+            if n_mig == 0 and t < t_free:
+                t_free = t
+                cnt_free = len(moves)
+
+        # Hysteresis gate: adopting new migrations must beat the best
+        # migration-free prefix by ≥ hysteresis × the amortized exchange
+        # cost (modeled-win ≥ exchange-cost).  The prefix scores already
+        # charge the amortized t_migrate, so at hysteresis 1.0 the prefix
+        # argmin enforces exactly break-even; > 1 demands real margin.
+        m_new = sum(1 for mv in moves[:cnt] if mv[0] == "migrate")
+        if m_new > 0:
+            t_move = self.perf.t_migrate(
+                m_new, window=self.migrate_window,
+                state_factor=self.migrate_state_factor)
+            win = t_free - (t_best - t_move)   # steady-state win
+            if win < self.migrate_hysteresis * t_move:
+                cnt, t_best = cnt_free, t_free
 
         # Keep only the best prefix (paper: PoE ← L[0:cnt]).
-        best = traditional(E, D)
+        best = base
         for mv in moves[:cnt]:
             if mv[0] == "shadow":
                 best = best.with_shadow(mv[1], mv[2])
@@ -293,10 +336,32 @@ class LocalityPlanner:
         self._cached = cached
         self._iteration = iteration
 
-    def maybe_plan(self, g_observed: Array) -> PlanResult:
+    def step(self, g_observed: Array, *, replan: Optional[bool] = None,
+             g_plan: Optional[Array] = None,
+             current: Optional[ExpertPlacement] = None
+             ) -> Tuple[PlanResult, bool]:
+        """One observation with externally-driven cadence: the caller
+        (the engine's forecast backoff) decides whether this observation
+        triggers a greedy search (``replan``; None ⇒ the internal
+        ``replan_interval`` cadence) and may supply the distribution to
+        plan from (``g_plan``, e.g. the layer forecast; None ⇒ the
+        tracker's ``predictor``) and the layout to plan *from*
+        (``current``, e.g. the device's slot layout so already-executed
+        migrations are free).  Returns ``(result, planned)`` where
+        ``planned`` says a fresh search actually ran — the
+        plans-executed/skipped accounting the cadence-aware overlap
+        telemetry needs."""
         self._iteration += 1
         self.tracker.update(np.asarray(g_observed, dtype=np.float64))
-        if self._cached is None or self._iteration % self.replan_interval == 0:
-            g_pred = self.tracker.predict_next(self.predictor)
-            self._cached = self.greedy.plan(g_pred)
-        return self._cached
+        due = bool(self._cached is None
+                   or (replan if replan is not None
+                       else self._iteration % self.replan_interval == 0))
+        if due:
+            g = (np.asarray(g_plan, dtype=np.float64) if g_plan is not None
+                 else self.tracker.predict_next(self.predictor))
+            self._cached = self.greedy.plan(g, current=current)
+        return self._cached, due
+
+    def maybe_plan(self, g_observed: Array, *,
+                   current: Optional[ExpertPlacement] = None) -> PlanResult:
+        return self.step(g_observed, current=current)[0]

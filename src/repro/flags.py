@@ -55,6 +55,41 @@ REPRO_MIGRATION=0/1     Dynamic expert migration (owner re-layout): the
                         EngineConfig.enable_migration policy decides
                         (default off; disabled is bit-identical to the
                         shadow-only planner).
+REPRO_FORECAST=0/1      Predictive load planning: a per-layer EMA
+                        forecaster (core/forecast.py) classifies layers
+                        fluctuating | drifting | stable, the planner
+                        consumes the *forecast* for step j+1 instead of
+                        step j−1's raw counts, and stable layers back
+                        their replan cadence off exponentially (bounded
+                        by REPRO_PLAN_CADENCE_MAX, reset the moment the
+                        layer drifts).  Unset ⇒ the
+                        EngineConfig.enable_forecast policy decides
+                        (default off; disabled is bit-identical to the
+                        last-value planner).
+REPRO_PLAN_CADENCE_MAX=N  Upper bound of the forecast-driven cadence
+                        backoff: a stable layer's replan interval
+                        doubles after each executed search up to N
+                        observations (default 16).  Larger ⇒ less host
+                        plan work and fewer PlacementCache uploads in
+                        the stabilized regime, slower reaction if the
+                        stability detector misses a shift (the
+                        fluctuating flag still forces an immediate
+                        replan regardless of the backoff).
+REPRO_RELOC_PREFETCH=0/1  Prefetched relocation: a pending owner
+                        re-layout is dispatched once more on the old
+                        device layout while the non-donating exchange is
+                        issued *under* that step (queued behind it on
+                        the device stream), and the pre-staged slabs are
+                        swapped in at the next dispatch after the
+                        fingerprint round-trip verifies — the exchange
+                        transfer leaves the dispatch critical path.
+                        Unset ⇒ the Trainer.reloc_prefetch policy
+                        decides (default off; the relocation then runs
+                        synchronously at dispatch as before).  Either
+                        way the transactional verify/rollback and the
+                        retry-once policy apply, and losses stay
+                        bit-identical — placements and relocation timing
+                        only decide *where/when* compute happens.
 REPRO_PLAN_DEADLINE_MS=N  Plan watchdog deadline: a Plan primitive whose
                         host latency exceeds N milliseconds is treated as
                         failed — the engine rolls back to the last-good
@@ -161,6 +196,32 @@ def migration():
     engine config decides; default off — the disabled path is
     bit-identical to the shadow-only planner)."""
     v = _flag("REPRO_MIGRATION", "")
+    return None if v == "" else v == "1"
+
+
+def forecast():
+    """REPRO_FORECAST=0/1: override the engine's predictive-planning
+    policy (EngineConfig.enable_forecast).  Unset ⇒ None (the engine
+    config decides; default off — the disabled path is bit-identical to
+    the last-value planner)."""
+    v = _flag("REPRO_FORECAST", "")
+    return None if v == "" else v == "1"
+
+
+def plan_cadence_max() -> int:
+    """REPRO_PLAN_CADENCE_MAX: bound of the forecast-driven exponential
+    cadence backoff, in observations between replans of a stable layer
+    (default 16).  See the module docstring."""
+    v = _flag("REPRO_PLAN_CADENCE_MAX", "")
+    return max(1, int(v)) if v else 16
+
+
+def reloc_prefetch():
+    """REPRO_RELOC_PREFETCH=0/1: override the trainer's prefetched-
+    relocation policy (Trainer.reloc_prefetch).  Unset ⇒ None (the
+    trainer field decides; default off — relocations then execute
+    synchronously at dispatch)."""
+    v = _flag("REPRO_RELOC_PREFETCH", "")
     return None if v == "" else v == "1"
 
 

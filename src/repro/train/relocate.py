@@ -22,7 +22,8 @@ differ in the last ulp).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import dataclasses
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -143,17 +144,13 @@ def apply_relocation(state, cfg: ModelConfig, gather: Array, *,
 # Transactional exchange: fingerprint → permute → verify → commit/rollback
 # ---------------------------------------------------------------------------
 
-def expert_fingerprints(state, cfg: ModelConfig, perms) -> dict:
-    """Per-expert content fingerprints of every slab the exchange will
-    touch: ``{(stage, macro_j, slab, leaf): np [repeats, E]}`` where each
-    entry is ``sum(|row|)`` over the expert row's trailing axes in f32.
-
-    The reduction runs *within* one expert's row, so it is bit-identical
-    under any permutation of the expert axis — the property the
-    round-trip check relies on: after a correct exchange,
-    ``post[r] == pre[r][rows[r]]`` exactly, on one device or across the
-    EP mesh (rows move intact; the recomputed sum reads the same bytes
-    in the same order)."""
+def _device_fingerprints(state, cfg: ModelConfig, perms) -> dict:
+    """Device-resident variant of :func:`expert_fingerprints` — the same
+    ``{(stage, macro_j, slab, leaf): [repeats, E]}`` reductions left as
+    lazy ``jnp`` arrays.  The prefetch path issues these alongside the
+    staged exchange so both queue behind the in-flight step; the commit
+    materializes them (tiny ``[repeats, E]`` transfers) only when the
+    swap actually lands."""
     out = {}
     slabs = (("params", state.params["stages"]),
              ("mu", state.opt.mu["stages"]),
@@ -172,8 +169,23 @@ def expert_fingerprints(state, cfg: ModelConfig, perms) -> dict:
                     arr = mp[nm]
                     fp = jnp.sum(jnp.abs(arr.astype(jnp.float32)),
                                  axis=tuple(range(2, arr.ndim)))
-                    out[(si, j_str, slab_name, nm)] = np.asarray(fp)
+                    out[(si, j_str, slab_name, nm)] = fp
     return out
+
+
+def expert_fingerprints(state, cfg: ModelConfig, perms) -> dict:
+    """Per-expert content fingerprints of every slab the exchange will
+    touch: ``{(stage, macro_j, slab, leaf): np [repeats, E]}`` where each
+    entry is ``sum(|row|)`` over the expert row's trailing axes in f32.
+
+    The reduction runs *within* one expert's row, so it is bit-identical
+    under any permutation of the expert axis — the property the
+    round-trip check relies on: after a correct exchange,
+    ``post[r] == pre[r][rows[r]]`` exactly, on one device or across the
+    EP mesh (rows move intact; the recomputed sum reads the same bytes
+    in the same order)."""
+    return {k: np.asarray(v)
+            for k, v in _device_fingerprints(state, cfg, perms).items()}
 
 
 def _fingerprints_roundtrip(pre: dict, post: dict, perms) -> bool:
@@ -249,3 +261,83 @@ def apply_relocation_transactional(state, cfg: ModelConfig, gather: Array,
         return new_state, True
     except Exception:
         return state, False
+
+
+# ---------------------------------------------------------------------------
+# Prefetched exchange: stage under the in-flight step, commit at the swap
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StagedRelocation:
+    """An issued-but-uncommitted transactional exchange.
+
+    ``stage_relocation`` enqueues the non-donating exchange and the
+    fingerprint reductions on the device queue *behind* the step already
+    dispatched — none of it blocks the host.  The trainer holds the
+    handle for one step and calls :func:`commit_staged` when the
+    placement swap is due; staleness is detected structurally (the
+    trainer compares ``src_state`` identity and the gather bytes before
+    committing).  ``faulted`` records a stage-time injected ``raise``
+    fault so the commit reports the same failure the synchronous path
+    would have."""
+    gather: Array
+    perms: Any
+    pre: dict
+    post: dict
+    new_state: Any
+    src_state: Any
+    faulted: bool = False
+
+
+def stage_relocation(state, cfg: ModelConfig, gather: Array, *,
+                     relocate_fn=None) -> Optional[StagedRelocation]:
+    """Issue the transactional exchange for ``gather`` without waiting
+    for it: returns a :class:`StagedRelocation` whose ``new_state`` and
+    fingerprints are lazy device arrays, or None for an identity gather.
+    Fault injection fires here (stage time) so injected failures land on
+    the same relocation occurrence as the synchronous path; any host-side
+    exception is reported as a pre-faulted handle the commit turns into
+    a clean ``(src_state, False)``."""
+    perms = active_gathers(cfg, gather)
+    if all(p is None for p in perms):
+        return None
+    from repro.testing import faults as _faults
+    gather = np.asarray(gather).copy()
+    try:
+        pre = _device_fingerprints(state, cfg, perms)
+        fn = relocate_fn or make_relocate_fn(cfg, donate=False)
+        new_state = fn(state, perms)
+        faulted = False
+        inj = _faults.active()
+        if inj is not None:
+            f = inj.relocation_fault()
+            if f is not None:
+                if f.payload.get("mode", "corrupt") == "raise":
+                    faulted = True
+                else:
+                    new_state = _corrupt_first_touched_leaf(new_state, cfg,
+                                                            perms)
+        post = _device_fingerprints(new_state, cfg, perms)
+        return StagedRelocation(gather, perms, pre, post, new_state, state,
+                                faulted=faulted)
+    except Exception:
+        return StagedRelocation(gather, perms, {}, {}, state, state,
+                                faulted=True)
+
+
+def commit_staged(staged: StagedRelocation):
+    """Finish a staged exchange → ``(state, ok)`` with the same contract
+    as :func:`apply_relocation_transactional`: verify the fingerprint
+    round-trip (materializing the tiny ``[repeats, E]`` reductions — the
+    only blocking transfers on the commit path) and return the exchanged
+    state, or the untouched source state with ``ok=False``."""
+    if staged.faulted:
+        return staged.src_state, False
+    try:
+        pre = {k: np.asarray(v) for k, v in staged.pre.items()}
+        post = {k: np.asarray(v) for k, v in staged.post.items()}
+        if not _fingerprints_roundtrip(pre, post, staged.perms):
+            return staged.src_state, False
+        return staged.new_state, True
+    except Exception:
+        return staged.src_state, False

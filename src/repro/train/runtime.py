@@ -83,6 +83,15 @@ class StepStats:
     sanitized_counts: int = 0
     relocation_failures: int = 0
     plan_failure_kind: str = ""
+    # Predictive planning: layers whose Plan primitive was skipped this
+    # step by the forecast cadence backoff, and how many of them the
+    # forecaster currently classifies as stable.
+    plans_skipped: int = 0
+    stable_layers: int = 0
+    # Relocation retry policy: exchanges re-attempted after a transient
+    # rollback, and rollbacks declared persistent (migration cancelled).
+    relocation_retries: int = 0
+    relocation_persistent: int = 0
 
     @property
     def hidden_frac(self) -> float:
@@ -112,6 +121,13 @@ class StepStats:
             extra += f" sanitized={self.sanitized_counts}"
         if self.relocation_failures:
             extra += f" reloc_rollback={self.relocation_failures}"
+        if self.relocation_retries:
+            extra += f" reloc_retry={self.relocation_retries}"
+        if self.relocation_persistent:
+            extra += f" reloc_cancelled={self.relocation_persistent}"
+        if self.plans_skipped:
+            extra += (f" plan_skips={self.plans_skipped}"
+                      f" stable={self.stable_layers}")
         return (f"step {self.step:5d} loss {self.loss:.4f} "
                 f"({avg_step:.3f}s/it){extra}")
 
@@ -139,6 +155,11 @@ class OverlapTelemetry:
         self.sanitized_counts = 0
         self.relocation_failures = 0
         self.fault_fallbacks: Dict[str, int] = {}
+        # Predictive planning / retry-policy totals.
+        self.plans_skipped = 0
+        self.stable_layers = 0
+        self.relocation_retries = 0
+        self.relocation_persistent = 0
 
     def record(self, *, plan: float, step: float, exposed: float,
                upload: float = 0.0, comm_hidden: float = 0.0,
@@ -177,6 +198,14 @@ class OverlapTelemetry:
             k = "relocation"
             self.fault_fallbacks[k] = (self.fault_fallbacks.get(k, 0)
                                        + stats.relocation_failures)
+        self.plans_skipped += stats.plans_skipped
+        self.stable_layers += stats.stable_layers
+        self.relocation_retries += stats.relocation_retries
+        if stats.relocation_persistent:
+            self.relocation_persistent += stats.relocation_persistent
+            k = "relocation_persistent"
+            self.fault_fallbacks[k] = (self.fault_fallbacks.get(k, 0)
+                                       + stats.relocation_persistent)
 
     @property
     def hidden_frac(self) -> float:
@@ -210,6 +239,12 @@ class OverlapTelemetry:
             "fallbacks": float(self.fallbacks),
             "sanitized_counts": float(self.sanitized_counts),
             "relocation_failures": float(self.relocation_failures),
+            # Predictive planning: per-layer Plan invocations the cadence
+            # backoff skipped, and retry-policy outcomes.
+            "plans_skipped": float(self.plans_skipped),
+            "stable_layers": float(self.stable_layers),
+            "relocation_retries": float(self.relocation_retries),
+            "relocation_persistent": float(self.relocation_persistent),
         }
 
 
@@ -254,13 +289,23 @@ class PlacementCache:
         background planner may already have bumped past it)."""
         return self._version
 
-    def arrays_for_dispatch(self):
+    def arrays_for_dispatch(self, *, hold: bool = False):
         """Device placement arrays for the next dispatch (None ⇒ no MoE
         engine).  Sets ``last_upload_time`` to the upload cost actually
-        paid this step (0.0 on the cached path)."""
+        paid this step (0.0 on the cached path).
+
+        ``hold=True`` pins the previously dispatched arrays even if the
+        engine has bumped past them — the relocation prefetch path uses
+        it to dispatch one more step on the *old* layout while the
+        exchange for the new one is staged behind the in-flight step
+        (placements must match the physical slot contents, so the upload
+        is deferred together with the commit)."""
         if self._engine is None:
             self.last_upload_time = 0.0
             return None
+        if hold and self._arrays is not None:
+            self.last_upload_time = 0.0
+            return self._arrays
         import jax.numpy as jnp
         v = self._engine.placements_version
         if self._arrays is None or v != self._version:
@@ -301,6 +346,12 @@ class PlanEvent:
     ok: bool = True
     failure: str = ""
     sanitized_layers: int = 0
+    # Predictive planning: how the forecast cadence backoff split this
+    # observe across layers (planned + skipped = num_moe_layers for
+    # engines with the forecast surface; all zero for stubs).
+    planned_layers: int = 0
+    skipped_layers: int = 0
+    stable_layers: int = 0
 
 
 def counts_to_layers(counts: Array) -> List[Array]:
@@ -395,12 +446,16 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
 
     pt = engine.predicted_times()
     shadows = sum(p.num_shadowed for p in engine.placements)
+    info = getattr(engine, "last_plan_info", None) or {}
     return PlanEvent(plan_time=t2 - t1, fetch_time=t1 - t0,
                      counts_ready=t1, done=t2,
                      plan_speedup=pt["speedup"], num_shadowed=shadows,
                      version=engine.placements_version,
                      ok=not failure, failure=failure,
-                     sanitized_layers=sanitized)
+                     sanitized_layers=sanitized,
+                     planned_layers=int(info.get("planned", 0)),
+                     skipped_layers=int(info.get("skipped", 0)),
+                     stable_layers=int(info.get("stable", 0)))
 
 
 class PlanPipeline:

@@ -56,6 +56,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import flags
 from repro.configs.base import ModelConfig
@@ -102,6 +103,18 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
 
 
 @dataclasses.dataclass
+class RelocOutcome:
+    """What one ``_maybe_relocate`` call did: experts re-homed, exchanges
+    rolled back, rollbacks scheduled for a retry, and rollbacks declared
+    persistent (migration cancelled, device back to the home layout)."""
+
+    moved: int = 0
+    failures: int = 0
+    retries: int = 0
+    persistent: int = 0
+
+
+@dataclasses.dataclass
 class _Pending:
     """A dispatched step whose metrics have not been consumed yet."""
 
@@ -116,6 +129,8 @@ class _Pending:
     chunk_stats: Optional[Dict[str, float]] = None
     relocations: int = 0         # experts re-homed at this dispatch
     relocation_failures: int = 0 # exchanges rolled back at this dispatch
+    relocation_retries: int = 0  # rollbacks scheduled for a retry
+    relocation_persistent: int = 0  # rollbacks declared persistent
 
 
 @dataclasses.dataclass
@@ -129,6 +144,12 @@ class Trainer:
     engine: Optional[ProProphetEngine] = None
     # None ⇒ flags.async_plan() (REPRO_ASYNC_PLAN, default on).
     async_plan: Optional[bool] = None
+    # Prefetched relocation: stage the weight/optimizer exchange one step
+    # ahead (behind the in-flight step) and commit the pre-staged slabs at
+    # the version swap instead of running the exchange on the dispatch
+    # path.  None ⇒ flags.reloc_prefetch() (REPRO_RELOC_PREFETCH,
+    # default off).
+    reloc_prefetch: Optional[bool] = None
 
     def __post_init__(self):
         self._step_fn = make_train_step(self.cfg, self.ctx, self.optimizer,
@@ -136,6 +157,12 @@ class Trainer:
                                         remat=self.remat)
         self._relocate_fn = None     # jitted lazily on first migration
         self._relocate_tx_fn = None  # non-donating twin (transactional)
+        pf = flags.reloc_prefetch()
+        self._prefetch = bool(self.reloc_prefetch if pf is None else pf)
+        self._staged = None          # in-flight StagedRelocation, if any
+        self._want_stage = None      # gather to stage after the dispatch
+        self._reloc_hold = False     # dispatch on the held (old) arrays
+        self._reloc_attempts = 0     # consecutive failed exchanges
         if self.engine is not None:
             # The engine's device width is the single source of truth the
             # packed placement arrays are shaped with; it must match the
@@ -214,21 +241,37 @@ class Trainer:
         """Execute a pending owner re-layout before the dependent
         dispatch, transactionally: fingerprint the touched expert slabs,
         run a non-donating exchange, and commit only when the fingerprint
-        round-trip verifies (``relocate.apply_relocation_transactional``).
-        On failure the pre-exchange state is kept, the device returns to
-        the home layout, and the engine's planned migrations are
-        cancelled (``engine.cancel_migrations`` — the planner may
-        re-propose, which retries the exchange later).  Must run before
-        ``arrays_for_dispatch`` so the cancel's version bump is picked up
+        round-trip verifies.  With prefetch on, the exchange was already
+        staged behind the previous step (``relocate.stage_relocation``)
+        and only the verify/commit runs here; otherwise the synchronous
+        ``relocate.apply_relocation_transactional`` path runs inline.
+
+        Retry policy: a first rollback is treated as transient — the
+        dispatch holds the old placement arrays for one step
+        (``_reloc_hold``) and the exchange is re-attempted at the next
+        dispatch.  A second consecutive rollback is persistent: the
+        device returns to the home layout and the engine's planned
+        migrations are cancelled (``engine.cancel_migrations`` — the
+        planner may re-propose later).  Must run before
+        ``arrays_for_dispatch`` so any cancel's version bump is picked up
         by the same dispatch, and — in the async runtime — between
         ``wait()`` and ``submit()``, where the planner worker is idle.
-        Returns ``(state, num_experts_moved, num_failures)``."""
+        Returns ``(state, RelocOutcome)``."""
+        out = RelocOutcome()
         if self.engine is None or not getattr(self.engine,
                                               "migration_enabled", False):
-            return state, 0, 0
+            return state, out
         gather = self.engine.pending_relocation()
         if gather is None:
-            return state, 0, 0
+            # Nothing pending: drop any stale stage/hold bookkeeping (a
+            # watchdog rollback or cancel may have retired the plan).
+            self._staged = None
+            self._want_stage = None
+            self._reloc_hold = False
+            self._reloc_attempts = 0
+            return state, out
+        if self._prefetch:
+            return self._relocate_prefetched(state, gather, out)
         moved = len(self.engine.relocations())
         if self._relocate_tx_fn is None:
             self._relocate_tx_fn = relocate.make_relocate_fn(self.cfg,
@@ -237,10 +280,78 @@ class Trainer:
             state, self.cfg, gather, relocate_fn=self._relocate_tx_fn)
         if ok:
             self.engine.mark_relocated()
-            return state, moved, 0
-        # Roll back: the state is untouched (pre-exchange); bring the
+            self._reloc_hold = False
+            self._reloc_attempts = 0
+            out.moved = moved
+            return state, out
+        return self._reloc_failure(state, out)
+
+    def _relocate_prefetched(self, state: TrainState, gather,
+                             out: RelocOutcome) -> tuple:
+        """Commit a pre-staged exchange, or request one.  A valid stage
+        (same source state, same gather) commits here — the heavy
+        exchange already ran behind the previous step, only the tiny
+        fingerprint round-trip blocks.  Without one (first sighting of
+        this relocation, or a stale stage after the plan changed) the
+        dispatch holds the old arrays for one more step and the exchange
+        is staged right after it, off the dispatch path."""
+        st, self._staged = self._staged, None
+        if (st is not None and st.src_state is state
+                and np.array_equal(st.gather, np.asarray(gather))):
+            moved = len(self.engine.relocations())
+            new_state, ok = relocate.commit_staged(st)
+            if ok:
+                self.engine.mark_relocated()
+                self._want_stage = None
+                self._reloc_hold = False
+                self._reloc_attempts = 0
+                out.moved = moved
+                return new_state, out
+            state, out = self._reloc_failure(state, out)
+            if out.retries:
+                # Re-stage behind the upcoming (held) dispatch so the
+                # retry commits at the very next one.
+                self._want_stage = np.asarray(gather).copy()
+            return state, out
+        self._want_stage = np.asarray(gather).copy()
+        self._reloc_hold = True
+        return state, out
+
+    def _maybe_stage(self, state: TrainState) -> None:
+        """Issue the requested relocation exchange *after* a dispatch so
+        all of it — gather collective and fingerprint reductions — queues
+        behind the in-flight step (under its backward pass).  Nothing
+        here blocks the host or touches the engine."""
+        if self._want_stage is None:
+            return
+        gather, self._want_stage = self._want_stage, None
+        if self._relocate_tx_fn is None:
+            self._relocate_tx_fn = relocate.make_relocate_fn(self.cfg,
+                                                             donate=False)
+        try:
+            self._staged = relocate.stage_relocation(
+                state, self.cfg, gather, relocate_fn=self._relocate_tx_fn)
+        except Exception:
+            self._staged = None
+
+    def _reloc_failure(self, state: TrainState, out: RelocOutcome) -> tuple:
+        """Handle one rolled-back exchange under the retry policy."""
+        out.failures = 1
+        self._reloc_attempts += 1
+        if self._reloc_attempts <= 1:
+            # Transient: keep the plan, dispatch this step on the held
+            # (old) arrays, re-attempt at the next dispatch.
+            out.retries = 1
+            self._reloc_hold = True
+            return state, out
+        # Persistent: the state is untouched (pre-exchange); bring the
         # device back to the home layout if an earlier migration had
         # moved it, and drop the plans demanding the failed move.
+        out.persistent = 1
+        self._reloc_attempts = 0
+        self._reloc_hold = False
+        self._staged = None
+        self._want_stage = None
         home = self.engine.reset_layout()
         if home is not None:
             if self._relocate_fn is None:
@@ -248,7 +359,7 @@ class Trainer:
             state = relocate.apply_relocation(state, self.cfg, home,
                                               relocate_fn=self._relocate_fn)
         self.engine.cancel_migrations()
-        return state, 0, 1
+        return state, out
 
     def restore_home_layout(self, state: TrainState) -> TrainState:
         """Undo any owner re-layout: expert-stacked weights and moments
@@ -292,6 +403,10 @@ class Trainer:
             sanitized_counts=ev.sanitized_layers if ev else 0,
             relocation_failures=pending.relocation_failures,
             plan_failure_kind=ev.failure if ev else "",
+            plans_skipped=ev.skipped_layers if ev else 0,
+            stable_layers=ev.stable_layers if ev else 0,
+            relocation_retries=pending.relocation_retries,
+            relocation_persistent=pending.relocation_persistent,
         )
 
     def _chunks_for_dispatch(self) -> tuple:
@@ -321,13 +436,16 @@ class Trainer:
                                            ckpt_every, ckpt_keep)
             # Relocation (and a failed exchange's migration-cancel version
             # bump) must land before arrays_for_dispatch so the dispatch
-            # runs with weights matching its expert_slot arrays.
-            state, relocated, reloc_failed = self._maybe_relocate(state)
-            placements = cache.arrays_for_dispatch()
+            # runs with weights matching its expert_slot arrays.  A held
+            # relocation pins the old arrays instead — the staged
+            # exchange commits at the next dispatch.
+            state, reloc = self._maybe_relocate(state)
+            placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
             chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
             state, metrics = self._step_fn(state, batch, placements,
                                            a2a_chunks=chunks)
+            self._maybe_stage(state)
             loss = float(metrics["loss"])          # blocks on the device
             plan = None
             if self.engine is not None and "counts" in metrics:
@@ -335,7 +453,8 @@ class Trainer:
             pending = _Pending(step, metrics, t_dispatch,
                                cache.last_upload_time, cache.version,
                                cache.fingerprint, plan, chunks, chunk_stats,
-                               relocated, reloc_failed)
+                               reloc.moved, reloc.failures, reloc.retries,
+                               reloc.persistent)
             self._emit(self._stats_for(pending, loss, time.perf_counter()),
                        history, t0, log_every, log_fn, stats_sink, telemetry)
         return state, history
@@ -367,14 +486,19 @@ class Trainer:
                 # precedes arrays_for_dispatch), and the chunk choice.
                 state = self._maybe_checkpoint(state, step, ckpt_dir,
                                                ckpt_every, ckpt_keep)
-                state, relocated, reloc_failed = self._maybe_relocate(state)
-                placements = cache.arrays_for_dispatch()
+                state, reloc = self._maybe_relocate(state)
+                placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
                 chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
                 state, metrics = self._step_fn(state, batch, placements,
                                                a2a_chunks=chunks)
                 if pipeline is not None and "counts" in metrics:
                     pipeline.submit(metrics["counts"])
+                # Stage any requested relocation exchange now — it queues
+                # on the device behind the step just dispatched (under
+                # its backward pass) and commits at the next
+                # _maybe_relocate, in the planner-idle window.
+                self._maybe_stage(state)
                 # Consume the *previous* step's loss only now — the device
                 # already has this step queued, so the host never blocks
                 # the dispatch path on a device_get.
@@ -388,8 +512,10 @@ class Trainer:
                                    cache.fingerprint,
                                    a2a_chunks=chunks,
                                    chunk_stats=chunk_stats,
-                                   relocations=relocated,
-                                   relocation_failures=reloc_failed)
+                                   relocations=reloc.moved,
+                                   relocation_failures=reloc.failures,
+                                   relocation_retries=reloc.retries,
+                                   relocation_persistent=reloc.persistent)
             # Drain: the final step's loss and its (now unused) plan.
             if pipeline is not None:
                 final_event = pipeline.wait()

@@ -388,9 +388,8 @@ class TestTransactionalRelocation:
         for a, b in zip(before, jax.tree.leaves(out)):
             np.testing.assert_array_equal(a, np.asarray(b))
 
-    def test_trainer_fallback_cancels_migrations(self, reloc_setup):
-        """A failed exchange must leave the trainer consistent: state
-        untouched, device at home, planned migrations cancelled."""
+    @staticmethod
+    def _trainer_with_pending(reloc_setup, **trainer_kw):
         from repro.optim import adamw
         from repro.parallel import local_ctx
         from repro.train import Trainer
@@ -406,16 +405,90 @@ class TestTransactionalRelocation:
         eng._version += 1
         assert eng.pending_relocation() is not None
         tr = Trainer(cfg, local_ctx(), adamw(1e-3), attn_impl="naive",
-                     remat=False, engine=eng)
+                     remat=False, engine=eng, **trainer_kw)
+        return cfg, state, eng, tr
+
+    def test_trainer_transient_failure_retries_once(self, reloc_setup):
+        """One rolled-back exchange is transient: the plan survives, the
+        dispatch holds the old arrays, and the next attempt succeeds."""
+        cfg, state, eng, tr = self._trainer_with_pending(reloc_setup)
         before = [np.asarray(a) for a in jax.tree.leaves(state)]
         with faults.injected(FaultInjector(
                 [Fault("fail_relocation", 0, {"mode": "corrupt"})])):
-            out, moved, failed = tr._maybe_relocate(state)
-        assert moved == 0 and failed == 1
+            out, reloc = tr._maybe_relocate(state)
+        assert reloc.failures == 1 and reloc.retries == 1
+        assert reloc.persistent == 0 and reloc.moved == 0
+        assert tr._reloc_hold          # dispatch pins the old arrays
+        assert eng.pending_relocation() is not None   # plan kept
+        for a, b in zip(before, jax.tree.leaves(out)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        # Retry at the next dispatch succeeds (the fault fired once).
+        out2, reloc2 = tr._maybe_relocate(out)
+        assert reloc2.failures == 0 and not tr._reloc_hold
+        assert eng.pending_relocation() is None
+
+    def test_trainer_persistent_failure_cancels_migrations(self,
+                                                           reloc_setup):
+        """Two consecutive rollbacks are persistent: state untouched,
+        device at home, planned migrations cancelled."""
+        cfg, state, eng, tr = self._trainer_with_pending(reloc_setup)
+        before = [np.asarray(a) for a in jax.tree.leaves(state)]
+        with faults.injected(FaultInjector(
+                [Fault("fail_relocation", 0, {"mode": "corrupt"}),
+                 Fault("fail_relocation", 1, {"mode": "corrupt"})])):
+            out, reloc = tr._maybe_relocate(state)
+            assert reloc.retries == 1
+            out, reloc = tr._maybe_relocate(out)
+        assert reloc.moved == 0 and reloc.failures == 1
+        assert reloc.persistent == 1 and reloc.retries == 0
+        assert not tr._reloc_hold
         assert eng.pending_relocation() is None
         assert all(p.slot_of is None for p in eng.placements)
         for a, b in zip(before, jax.tree.leaves(out)):
             np.testing.assert_array_equal(a, np.asarray(b))
+
+    def test_trainer_prefetch_stages_then_commits(self, reloc_setup):
+        """Prefetch mode: first sighting holds + requests a stage, the
+        post-dispatch stage issues the exchange, the next sighting
+        commits the pre-staged slabs bit-identically to the synchronous
+        exchange."""
+        from repro.train import relocate
+        cfg, state, eng, tr = self._trainer_with_pending(
+            reloc_setup, reloc_prefetch=True)
+        gather = eng.pending_relocation()
+        expect = relocate.apply_relocation(
+            state, cfg, gather,
+            relocate_fn=relocate.make_relocate_fn(cfg, donate=False))
+        out, reloc = tr._maybe_relocate(state)
+        assert out is state and reloc.moved == 0    # held, nothing moved
+        assert tr._reloc_hold and tr._want_stage is not None
+        tr._maybe_stage(state)                       # "after the dispatch"
+        assert tr._staged is not None
+        out2, reloc2 = tr._maybe_relocate(state)
+        assert reloc2.failures == 0 and not tr._reloc_hold
+        assert eng.pending_relocation() is None
+        for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(out2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_trainer_prefetch_faulted_stage_rolls_back(self, reloc_setup):
+        """A fault injected at stage time surfaces at the commit exactly
+        like the synchronous path: transient first, retry next."""
+        cfg, state, eng, tr = self._trainer_with_pending(
+            reloc_setup, reloc_prefetch=True)
+        before = [np.asarray(a) for a in jax.tree.leaves(state)]
+        with faults.injected(FaultInjector(
+                [Fault("fail_relocation", 0, {"mode": "raise"})])):
+            out, _ = tr._maybe_relocate(state)       # hold + request stage
+            tr._maybe_stage(out)                     # fault fires here
+            out, reloc = tr._maybe_relocate(out)     # commit → rollback
+        assert reloc.failures == 1 and reloc.retries == 1
+        assert eng.pending_relocation() is not None
+        for a, b in zip(before, jax.tree.leaves(out)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        # Retry: stage cleanly, commit succeeds.
+        tr._maybe_stage(out)
+        out2, reloc2 = tr._maybe_relocate(out)
+        assert reloc2.failures == 0 and eng.pending_relocation() is None
 
 
 # ---------------------------------------------------------------------------
