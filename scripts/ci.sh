@@ -46,10 +46,38 @@
 #                             lane; the (2,4)-mesh on/off sweep is
 #                             @slow: tests/test_distributed.py::
 #                             test_dispatch_pallas_mesh_equivalence
+#   scripts/ci.sh --lint      static-analysis lane only: prophetlint
+#                             (tools/prophetlint — host-sync, env
+#                             discipline, jit-cache boundedness,
+#                             shared-state registries, Pallas kernel
+#                             contracts; see README.md §Static analysis
+#                             & sanitizers) plus ruff (committed
+#                             ruff.toml) when installed.  The lane also
+#                             runs at the start of the default full
+#                             suite.
 #
 # Extra args pass through to pytest, e.g.  scripts/ci.sh -k planner
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+run_lint() {
+  python -m tools.prophetlint src
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check
+  else
+    echo "lint: ruff not installed — skipping the style pass" \
+         "(pinned in requirements-dev.txt)"
+  fi
+}
+
+if [[ "${1:-}" == "--lint" ]]; then
+  shift
+  run_lint
+  exit 0
+fi
+if [[ $# -eq 0 ]]; then
+  run_lint          # the default full run gates on the lint lane too
+fi
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   set -- -m "not slow" "$@"

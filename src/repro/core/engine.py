@@ -110,6 +110,28 @@ class EngineConfig:
 
 
 class ProProphetEngine:
+    """Planner state machine shared between the dispatch thread and the
+    PlanPipeline worker.
+
+    Shared-state discipline (checked statically by prophetlint R4): every
+    engine mutation happens either on the worker thread inside
+    ``observe`` (during the submit→wait window) or on the dispatch
+    thread in the planner-idle window between ``wait()`` and
+    ``submit()`` — the two never overlap, which is the happens-before
+    edge that makes the registry below a plain owner list rather than a
+    lock.  New methods touching these fields must be added to the
+    registry or carry an ``allow(shared-state)`` annotation.
+    """
+
+    # prophetlint: shared(_placements, _version, _dirty, _cache, _last_g,
+    #   _obs_count, _costs_cache, _device_slots, last_results,
+    #   _plan_interval, _since_plan, plans_executed, plans_skipped,
+    #   last_plan_info): owner=observe, _plan_layer, snapshot, restore,
+    #   cancel_migrations, step_arrays, pending_relocation, relocations,
+    #   mark_relocated, reset_layout, last_counts, _layer_costs,
+    #   _all_layer_costs, chunk_plan, chunk_stats, predicted_times,
+    #   placements, placements_version, _device_layout
+
     def __init__(self, cfg: EngineConfig, hw: HardwareSpec):
         from repro import flags
         self.cfg = cfg

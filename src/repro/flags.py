@@ -109,6 +109,43 @@ REPRO_ASYNC_PLAN=0/1    Trainer runtime selection (escape hatch).  Unset
                         losses and placements — planning is one-step-
                         delayed by design — so this only moves *when*
                         host work happens (tests/test_async_runtime.py).
+REPRO_NORM_BF16=1       RMSNorm keeps the normalization in bf16 (variance
+                        still f32-accumulated) so delayed TP all-reduces
+                        of the backward move bf16 tensors (§Perf
+                        collective lever; only active on bf16 inputs).
+REPRO_ATTN_BF16_SCORES=1  Chunked-attention score einsums read bf16
+                        operands with f32 accumulation via
+                        preferred_element_type — halves score-traffic
+                        bytes with the same f32 softmax statistics
+                        (§Perf memory lever).
+REPRO_ATTN_NAIVE_MAX=N  Sequence-length threshold below which attn_impl
+                        "auto" picks the naive-scores path over the
+                        chunked lax.map path (default 2048; §Perf lever —
+                        naive + head-TP + remat beats chunked at moderate
+                        S, whose q-block loop forces SPMD involuntary-
+                        remat all-gathers).
+REPRO_PIN_NORM=1        Constrain rmsnorm outputs to P(batch, None, None)
+                        so the TP backward all-reduces ONE bf16 cotangent
+                        at the boundary instead of three f32 x-shaped
+                        intermediates inside the norm's backward (§Perf).
+REPRO_SANITIZE=1        Runtime sanitizer mode (repro.train.sanitize):
+                        arms jax.transfer_guard("disallow") around the
+                        trainer's step dispatch (any implicit host↔device
+                        transfer on the hot path raises instead of
+                        silently serializing), enables jax_debug_nans /
+                        jax_debug_infs, and switches PlacementCache into
+                        its torn-read assertion mode (the placement
+                        version is re-read after the re-pack; a
+                        background bump mid-pack raises TornReadError
+                        instead of dispatching a torn placement).  The
+                        static twin of these checks is
+                        tools/prophetlint (scripts/ci.sh --lint).
+
+All accessors in this module re-read their env var on every call (so
+tests and dry-run probes can flip a flag mid-process); only the backend
+probe below is cached, because jax pins the default backend at init.
+prophetlint rule R2 (env-discipline) keeps this module — plus launch/ —
+the only place ``os.environ`` is consulted.
 """
 import os
 
@@ -223,6 +260,38 @@ def reloc_prefetch():
     synchronously at dispatch)."""
     v = _flag("REPRO_RELOC_PREFETCH", "")
     return None if v == "" else v == "1"
+
+
+def norm_bf16() -> bool:
+    """REPRO_NORM_BF16=1: bf16 RMSNorm normalization (f32-accumulated
+    variance) — see the module docstring."""
+    return _flag("REPRO_NORM_BF16") == "1"
+
+
+def attn_bf16_scores() -> bool:
+    """REPRO_ATTN_BF16_SCORES=1: bf16 operands / f32 accumulation for the
+    chunked-attention score einsums — see the module docstring."""
+    return _flag("REPRO_ATTN_BF16_SCORES") == "1"
+
+
+def attn_naive_max() -> int:
+    """REPRO_ATTN_NAIVE_MAX: max sequence length for the naive-scores
+    auto-impl choice (default 2048) — see the module docstring."""
+    v = _flag("REPRO_ATTN_NAIVE_MAX", "")
+    return int(v) if v else 2048
+
+
+def pin_norm() -> bool:
+    """REPRO_PIN_NORM=1: constrain rmsnorm outputs to
+    P(batch, None, None) — see the module docstring."""
+    return _flag("REPRO_PIN_NORM") == "1"
+
+
+def sanitize() -> bool:
+    """REPRO_SANITIZE=1: runtime sanitizer mode (transfer guard around
+    dispatch, debug_nans/debug_infs, PlacementCache torn-read assertions)
+    — see the module docstring and repro.train.sanitize."""
+    return _flag("REPRO_SANITIZE") == "1"
 
 
 def pin_residual() -> bool:

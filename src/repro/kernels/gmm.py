@@ -41,6 +41,10 @@ def _pad_to(x, axis: int, mult: int):
     return jnp.pad(x, widths), pad
 
 
+# prophetlint: bounded(bt): config — MXU tile size
+# prophetlint: bounded(bf): config — MXU tile size
+# prophetlint: bounded(bd): config — MXU tile size
+# prophetlint: bounded(interpret): bool
 @functools.partial(jax.jit,
                    static_argnames=("bt", "bf", "bd", "interpret"))
 def gmm(x, w, *, bt: int = 128, bf: int = 128, bd: int = 128,

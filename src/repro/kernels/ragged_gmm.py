@@ -328,6 +328,12 @@ _gmm_swiglu.defvjp(_gmm_swiglu_fwd, _gmm_swiglu_bwd)
 # Public entry points
 # ---------------------------------------------------------------------------
 
+# prophetlint: bounded(seg_len): shape-derived — T // S from the traced
+#   capacity-buffer shape (one value per (shape, chunking) pair)
+# prophetlint: bounded(bt): config — MXU tile size
+# prophetlint: bounded(bf): config — MXU tile size
+# prophetlint: bounded(bd): config — MXU tile size
+# prophetlint: bounded(interpret): bool
 @functools.partial(jax.jit,
                    static_argnames=("seg_len", "bt", "bf", "bd", "interpret"))
 def ragged_gmm(x, w, group_sizes, *, seg_len: int = None, bt: int = 128,
@@ -342,6 +348,12 @@ def ragged_gmm(x, w, group_sizes, *, seg_len: int = None, bt: int = 128,
     return _ragged_gmm(x, w, gs, seg, bt, bf, bd, interpret)
 
 
+# prophetlint: bounded(seg_len): shape-derived — T // S from the traced
+#   capacity-buffer shape (one value per (shape, chunking) pair)
+# prophetlint: bounded(bt): config — MXU tile size
+# prophetlint: bounded(bf): config — MXU tile size
+# prophetlint: bounded(bd): config — MXU tile size
+# prophetlint: bounded(interpret): bool
 @functools.partial(jax.jit,
                    static_argnames=("seg_len", "bt", "bf", "bd", "interpret"))
 def gmm_swiglu(x, wg, wi, group_sizes, *, seg_len: int = None, bt: int = 128,
@@ -363,6 +375,8 @@ def _ceil_to(n: int, m: int) -> int:
 def active_row_tiles(T: int, group_sizes, seg_len: int = None,
                      *, bt: int = 128):
     """(active, total) row tiles across groups for the given occupancy."""
+    # prophetlint: allow(host-sync): host-side cost model — callers pass
+    #   engine-side numpy counts, never in-flight device arrays
     gs = np.asarray(group_sizes)
     if gs.ndim == 1:
         gs = gs[:, None]
@@ -375,6 +389,7 @@ def active_row_tiles(T: int, group_sizes, seg_len: int = None,
     for g in range(G):
         for t in range(nt):
             t0, t1 = t * bt, t * bt + bt
+            # prophetlint: allow(host-sync): gs is host numpy (see above)
             if any(min(t1, p * seg_len + int(gs[g, p])) > max(t0, p * seg_len)
                    for p in range(S)):
                 active += 1

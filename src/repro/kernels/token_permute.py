@@ -225,6 +225,10 @@ def _dispatch_impl(x, tsrc, wrow, num_buckets, capacity, bt, bd, interpret):
                                lambda dd, r, ts, ws: (0, dd))],
         out_specs=pl.BlockSpec((bt, bd), lambda dd, r, ts, ws: (r, dd)),
     )
+    # prophetlint: allow(pallas-vmem): the resident x panel is
+    #   (N_padded, bd) — N is the per-device token count, ≤ a few K rows
+    #   · 128 lanes · 4 B ≈ 2 MiB for every config in configs/; the
+    #   whole point of the d-outermost grid is keeping it VMEM-resident
     out = pl.pallas_call(
         functools.partial(_dispatch_kernel, bt=bt),
         grid_spec=grid_spec,
@@ -250,6 +254,9 @@ def _combine_impl(buf, srow, grow, N, k, bt, bd, interpret):
                                lambda dd, r, ss, gs: (0, dd))],
         out_specs=pl.BlockSpec((bt, bd), lambda dd, r, ss, gs: (r, dd)),
     )
+    # prophetlint: allow(pallas-vmem): the resident buffer panel is
+    #   (G·C padded, bd) — capacity slots ≈ top_k · capacity_factor ·
+    #   local tokens, same ≤ few-MiB bound as the dispatch leg
     out = pl.pallas_call(
         functools.partial(_combine_kernel, bt=bt, k=k),
         grid_spec=grid_spec,
@@ -327,6 +334,13 @@ _combine.defvjp(_combine_fwd, _combine_bwd)
 # Public entry points
 # ---------------------------------------------------------------------------
 
+# prophetlint: bounded(num_buckets): config — the expert count from the
+#   model config
+# prophetlint: bounded(capacity): shape-derived — top_k · capacity_factor
+#   · local tokens, fixed by the traced batch shape
+# prophetlint: bounded(bt): config — tile size
+# prophetlint: bounded(bd): config — tile size
+# prophetlint: bounded(interpret): bool
 @functools.partial(jax.jit, static_argnames=("num_buckets", "capacity",
                                              "bt", "bd", "interpret"))
 def dispatch_tokens(x, expert, pos, *, num_buckets: int, capacity: int,
@@ -349,6 +363,9 @@ def dispatch_tokens(x, expert, pos, *, num_buckets: int, capacity: int,
                      num_buckets, capacity, bt, bd, interpret, need_dw)
 
 
+# prophetlint: bounded(bt): config — tile size
+# prophetlint: bounded(bd): config — tile size
+# prophetlint: bounded(interpret): bool
 @functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
 def combine_tokens(buf, expert, pos, gate, *, bt: int = 128, bd: int = 128,
                    interpret: bool = False):

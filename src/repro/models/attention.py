@@ -89,8 +89,8 @@ def _online_block(carry, qb, kb, vb, mask, scale):
     einsums read bf16 operands and accumulate in f32 via
     preferred_element_type — halves the score-traffic bytes with the same
     f32 softmax statistics."""
-    import os
-    bf16_ops = os.environ.get("REPRO_ATTN_BF16_SCORES") == "1"
+    from repro import flags
+    bf16_ops = flags.attn_bf16_scores()
     m, l, o = carry
     if bf16_ops:
         # jnp.einsum upcasts operands even with preferred_element_type in
@@ -242,12 +242,12 @@ def multihead_attention(params, x, positions, *, num_heads: int,
     scale = head_dim ** -0.5
 
     if impl == "auto":
-        import os
+        from repro import flags
         # §Perf lever (REPRO_ATTN_NAIVE_MAX): at moderate S, naive scores
         # with head-TP + remat beat the chunked lax.map path, whose
         # q-block loop forces SPMD "involuntary full rematerialization"
         # all-gathers.  Default threshold keeps the original behaviour.
-        naive_max = int(os.environ.get("REPRO_ATTN_NAIVE_MAX", "2048"))
+        naive_max = flags.attn_naive_max()
         if window is not None and causal and S > 2 * q_block and window < S:
             impl = "banded"
         elif S > naive_max:

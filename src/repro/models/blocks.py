@@ -118,8 +118,8 @@ def _pin_norm(y, ctx):
     P(batch, None, None).  The TP backward then all-reduces ONE bf16
     cotangent at this boundary instead of three f32 x-shaped intermediates
     inside the norm's backward (observed 8.56 GB/layer → bf16 boundary)."""
-    import os
-    if os.environ.get("REPRO_PIN_NORM") != "1" or ctx.mesh is None:
+    from repro import flags
+    if not flags.pin_norm() or ctx.mesh is None:
         return y
     from jax.sharding import PartitionSpec as _P
     ba = ctx.batch_axes

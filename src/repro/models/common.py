@@ -26,8 +26,8 @@ def rmsnorm_init(d: int, dtype=jnp.float32):
 
 def rmsnorm(params, x, eps: float = 1e-6):
     dt = x.dtype
-    import os
-    if os.environ.get("REPRO_NORM_BF16") == "1" and dt == jnp.bfloat16:
+    from repro import flags
+    if flags.norm_bf16() and dt == jnp.bfloat16:
         # §Perf collective lever: no f32 x-shaped island — the variance is
         # f32-accumulated from bf16 reads, the normalization stays bf16,
         # so delayed TP all-reduces of the backward move bf16 tensors.

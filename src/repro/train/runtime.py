@@ -254,6 +254,8 @@ def fingerprint_arrays(arrays: Optional[Dict[str, Array]]) -> str:
         return ""
     h = hashlib.sha1()
     for k in sorted(arrays):
+        # prophetlint: allow(host-sync): inputs are the engine's host-side
+        #   numpy step_arrays copies — no device transfer happens here
         a = np.ascontiguousarray(np.asarray(arrays[k]))
         h.update(k.encode())
         h.update(str(a.shape).encode())
@@ -272,15 +274,45 @@ class PlacementCache:
     the placements are stable; a version bump from the engine triggers a
     re-pack + re-upload (the double buffer: the device keeps executing
     from the old arrays until the next dispatch hands over the new ones).
+
+    Threading: single-consumer.  Every field below is read/written only
+    by the dispatch thread inside :meth:`arrays_for_dispatch` (and the
+    :attr:`version` view of it); the engine side is only ever *read*
+    here, ordered after the producing observe by ``PlanPipeline.wait``.
+    In sanitize mode (``REPRO_SANITIZE=1``) that contract is asserted
+    dynamically: a re-pack observing the engine version move under it,
+    or a call from a second thread, raises
+    :class:`repro.train.sanitize.TornReadError`.
     """
 
+    # prophetlint: shared(_version, _arrays, fingerprint, last_upload_time,
+    #   uploads, _consumer): owner=arrays_for_dispatch, version,
+    #   _check_consumer
+
     def __init__(self, engine) -> None:
+        from repro import flags
         self._engine = engine
         self._version = -1
         self._arrays = None
         self.fingerprint = ""
         self.last_upload_time = 0.0
         self.uploads = 0
+        self._sanitize = flags.sanitize()
+        self._consumer: Optional[int] = None   # dispatch thread id
+
+    def _check_consumer(self) -> None:
+        """Sanitize mode: all dispatch-side reads must stay on the one
+        thread whose ordering ``PlanPipeline.wait`` guarantees."""
+        import threading
+        me = threading.get_ident()
+        if self._consumer is None:
+            self._consumer = me
+        elif self._consumer != me:
+            from repro.train.sanitize import TornReadError
+            raise TornReadError(
+                f"PlacementCache consumed from thread {me} after thread "
+                f"{self._consumer} — placement reads are only ordered on "
+                f"the dispatch thread (PlanPipeline.wait happens-before)")
 
     @property
     def version(self) -> int:
@@ -303,6 +335,8 @@ class PlacementCache:
         if self._engine is None:
             self.last_upload_time = 0.0
             return None
+        if self._sanitize:
+            self._check_consumer()
         if hold and self._arrays is not None:
             self.last_upload_time = 0.0
             return self._arrays
@@ -316,6 +350,18 @@ class PlacementCache:
             self._version = v
             self.uploads += 1
             self.last_upload_time = time.perf_counter() - t0
+            if self._sanitize and self._engine.placements_version != v:
+                # The planner bumped the version *while* we were packing:
+                # step_arrays may mix layers from two plans — exactly the
+                # torn read the submit→wait alternation is meant to rule
+                # out.  Fail loudly instead of dispatching it.
+                from repro.train.sanitize import TornReadError
+                raise TornReadError(
+                    f"engine placements_version moved {v} → "
+                    f"{self._engine.placements_version} during the "
+                    f"placement re-pack — a planner ran concurrently "
+                    f"with arrays_for_dispatch (broken submit→wait "
+                    f"ordering)")
         else:
             self.last_upload_time = 0.0
         return self._arrays
@@ -357,6 +403,8 @@ class PlanEvent:
 def counts_to_layers(counts: Array) -> List[Array]:
     """Split the stacked ``[L, D, E]`` device counts into the per-layer
     float64 routing matrices the engine ingests."""
+    # prophetlint: allow(host-sync): planner-side ingestion — runs on the
+    #   worker thread (or the serial baseline), never the dispatch path
     counts = np.asarray(counts)
     if counts.ndim != 3:
         from repro.core.guard import CountsError
@@ -394,6 +442,11 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
     sanitized = 0
     failure = ""
     try:
+        # prophetlint: allow(host-sync): intentional — this is the Plan
+        #   primitive's designed blocking fetch of the in-flight counts; it
+        #   blocks the planner *worker* thread under the device's backward
+        #   pass, not the dispatch path (serial runtime: fully exposed by
+        #   design and reported as such)
         counts = np.asarray(counts_device)   # blocks the *calling thread*
     except Exception:                        # torn transfer: nothing to plan
         t1 = time.perf_counter()
@@ -466,7 +519,16 @@ class PlanPipeline:
     worker before the next dependent dispatch and reports how much of the
     plan latency was exposed.  The strict submit→wait alternation is
     asserted — it is what rules out torn placement reads.
+
+    Shared-state discipline (checked statically by prophetlint R4): the
+    pipeline bookkeeping below is dispatch-thread-only — the worker runs
+    ``_job`` and touches none of it.  Any new method touching these
+    fields must be added to the registry (a conscious concurrency
+    decision) or carry an ``allow(shared-state)`` annotation.
     """
+
+    # prophetlint: shared(_future, _closed, _exec, worker_restarts):
+    #   owner=submit, wait, close, _restart_worker
 
     def __init__(self, engine, *, layer_workers: Optional[int] = None):
         self._engine = engine

@@ -1,0 +1,69 @@
+"""Runtime sanitizer wiring (``REPRO_SANITIZE=1``).
+
+prophetlint (tools/prophetlint, ``scripts/ci.sh --lint``) enforces the
+hot-path invariants *statically*: no host syncs on the dispatch path, no
+stray env reads, bounded jit caches, lock/version discipline on shared
+planner state.  This module is the *dynamic* twin — cheap runtime traps
+that catch what static analysis cannot see (a numpy array smuggled into
+the jitted step through a config object, a NaN'd gate, a placement
+re-pack racing a background version bump):
+
+* :func:`dispatch_guard` — ``jax.transfer_guard("disallow")`` scoped to
+  the trainer's step dispatch.  Any *implicit* host↔device transfer on
+  the dispatch path (the classic silent serializer: a host numpy operand
+  forcing a synchronous upload per step) raises instead of quietly
+  costing a round trip.  The guard is context-scoped and thread-local,
+  so the planner worker's intentional blocking fetch
+  (``runtime.run_plan``) and the deferred loss consumption are
+  unaffected.  Note: on the CPU backend device↔host is zero-copy and
+  only the host-to-device direction can trip; on TPU/GPU both do.
+
+* :func:`arm` — process-level debug lanes: ``jax_debug_nans`` and
+  ``jax_debug_infs`` so a non-finite loss/gradient faults at the op that
+  produced it rather than steps later in the forecaster's EMA.
+
+* :class:`TornReadError` — raised by
+  :class:`repro.train.runtime.PlacementCache` in sanitize mode when the
+  engine's ``placements_version`` moves *while* the cache is re-packing
+  placement arrays, or when dispatch-side reads migrate off the thread
+  that first consumed them.  Either means the submit→wait ordering
+  contract (the happens-before edge that makes torn placement reads
+  impossible) was broken by a caller.
+
+Everything here is a no-op unless ``REPRO_SANITIZE=1``
+(:func:`repro.flags.sanitize`), so the production hot path carries zero
+overhead.  ``tests/test_sanitize.py`` runs the trainer smoke lane with
+the full sanitizer armed.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro import flags
+
+
+class TornReadError(AssertionError):
+    """A shared placement structure was read while a concurrent writer
+    was (or may have been) mid-update — the submit→wait ordering
+    contract was violated by a caller."""
+
+
+def dispatch_guard():
+    """Context manager for the step-dispatch region: transfer guard in
+    sanitize mode, free nullcontext otherwise."""
+    if not flags.sanitize():
+        return contextlib.nullcontext()
+    import jax
+    return jax.transfer_guard("disallow")
+
+
+def arm() -> bool:
+    """Enable the process-level debug lanes when sanitize mode is on
+    (idempotent; returns whether the sanitizer is armed).  Called once
+    per ``Trainer.run`` — jax.config updates are cheap and repeatable."""
+    if not flags.sanitize():
+        return False
+    import jax
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_debug_infs", True)
+    return True

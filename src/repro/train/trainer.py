@@ -65,7 +65,7 @@ from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.optim.adamw import AdamW, AdamWState, apply_updates
 from repro.parallel import ParallelCtx
-from repro.train import relocate
+from repro.train import relocate, sanitize
 from repro.train.runtime import (OverlapTelemetry, PlacementCache, PlanEvent,
                                  PlanPipeline, StepStats, run_plan)
 
@@ -98,6 +98,9 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, optimizer: AdamW,
             metrics["counts"] = aux["counts"]
         return TrainState(params, opt), metrics
 
+    # prophetlint: bounded(a2a_chunks): {1, 2, 4, 8} —
+    #   EngineConfig.a2a_chunk_candidates; _chunks_for_dispatch quantizes
+    #   every dispatch's K to this set so the jit cache stays small
     return jax.jit(step, donate_argnums=(0,) if donate else (),
                    static_argnames=("a2a_chunks",))
 
@@ -194,6 +197,7 @@ class Trainer:
         the planner-idle window and always in the home expert layout
         (``restore_home_layout`` first), so a restored run can bind a
         fresh engine."""
+        sanitize.arm()
         use_async = (self.async_plan if self.async_plan is not None
                      else flags.async_plan())
         runner = self._run_async if use_async else self._run_sync
@@ -296,6 +300,8 @@ class Trainer:
         dispatch holds the old arrays for one more step and the exchange
         is staged right after it, off the dispatch path."""
         st, self._staged = self._staged, None
+        # prophetlint: allow(host-sync): ``gather`` is the engine's
+        #   host-side relocation plan (numpy already) — no device fetch.
         if (st is not None and st.src_state is state
                 and np.array_equal(st.gather, np.asarray(gather))):
             moved = len(self.engine.relocations())
@@ -311,8 +317,10 @@ class Trainer:
             if out.retries:
                 # Re-stage behind the upcoming (held) dispatch so the
                 # retry commits at the very next one.
+                # prophetlint: allow(host-sync): host-side plan copy.
                 self._want_stage = np.asarray(gather).copy()
             return state, out
+        # prophetlint: allow(host-sync): host-side plan copy.
         self._want_stage = np.asarray(gather).copy()
         self._reloc_hold = True
         return state, out
@@ -443,9 +451,15 @@ class Trainer:
             placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
             chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
-            state, metrics = self._step_fn(state, batch, placements,
-                                           a2a_chunks=chunks)
+            # prophetlint: bounded(a2a_chunks): quantized to
+            #   EngineConfig.a2a_chunk_candidates by _chunks_for_dispatch
+            with sanitize.dispatch_guard():
+                state, metrics = self._step_fn(state, batch, placements,
+                                               a2a_chunks=chunks)
             self._maybe_stage(state)
+            # prophetlint: allow(host-sync): serial baseline blocks on the
+            #   device loss by design — this runtime IS the exposed-latency
+            #   comparison point for the async pipeline.
             loss = float(metrics["loss"])          # blocks on the device
             plan = None
             if self.engine is not None and "counts" in metrics:
@@ -490,8 +504,11 @@ class Trainer:
                 placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
                 chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
-                state, metrics = self._step_fn(state, batch, placements,
-                                               a2a_chunks=chunks)
+                # prophetlint: bounded(a2a_chunks): quantized to
+                #   EngineConfig.a2a_chunk_candidates by _chunks_for_dispatch
+                with sanitize.dispatch_guard():
+                    state, metrics = self._step_fn(state, batch, placements,
+                                                   a2a_chunks=chunks)
                 if pipeline is not None and "counts" in metrics:
                     pipeline.submit(metrics["counts"])
                 # Stage any requested relocation exchange now — it queues
@@ -503,6 +520,9 @@ class Trainer:
                 # already has this step queued, so the host never blocks
                 # the dispatch path on a device_get.
                 if pending is not None:
+                    # prophetlint: allow(host-sync): deferred consumption of
+                    #   the *previous* step's loss — the device already has
+                    #   this step queued, so nothing serializes.
                     loss = float(pending.metrics["loss"])
                     self._emit(self._stats_for(pending, loss, t_dispatch),
                                history, t0, log_every, log_fn, stats_sink,
@@ -522,6 +542,8 @@ class Trainer:
                 if pending is not None:
                     pending.plan = final_event
             if pending is not None:
+                # prophetlint: allow(host-sync): drain — the run is over,
+                #   there is no dispatch left to serialize.
                 loss = float(pending.metrics["loss"])
                 self._emit(self._stats_for(pending, loss,
                                            time.perf_counter()),

@@ -1,0 +1,216 @@
+"""prophetlint self-tests: each rule family catches its seeded fixture
+violation, the annotation grammar behaves, and the repo itself is clean.
+
+The fixtures live in tools/prophetlint/fixtures/ and are excluded from
+the CLI walk — they are linted here explicitly, forcing hot-path /
+env scope as needed (``lint_file(path, hot=True, env_exempt=False)``).
+"""
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools.prophetlint import cli                              # noqa: E402
+from tools.prophetlint.cli import lint_file, lint_paths        # noqa: E402
+
+FIXTURES = os.path.join(_ROOT, "tools", "prophetlint", "fixtures")
+
+
+def _fixture(name, **kw):
+    return lint_file(os.path.join(FIXTURES, name), **kw)
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# R1 host-sync
+# ---------------------------------------------------------------------------
+
+class TestHostSync:
+    def test_catches_all_seeded_syncs(self):
+        vs = _fixture("hot_sync.py", hot=True)
+        assert _rules(vs).count("host-sync") == 6
+        msgs = " ".join(v.message for v in vs)
+        assert ".item()" in msgs
+        assert "asarray" in msgs
+        assert "device_get" in msgs
+        assert "float" in msgs
+
+    def test_allow_annotation_suppresses(self):
+        vs = _fixture("hot_sync.py", hot=True)
+        # annotated_ok's float(metrics["loss"]) is allowed → not flagged
+        assert all(v.line < 19 for v in vs if v.rule == "host-sync")
+
+    def test_not_flagged_outside_hot_path(self):
+        assert _fixture("hot_sync.py", hot=False) == []
+
+
+# ---------------------------------------------------------------------------
+# R2 env-read
+# ---------------------------------------------------------------------------
+
+class TestEnvDiscipline:
+    def test_catches_reads_not_writes(self):
+        vs = _fixture("env_read.py", env_exempt=False)
+        lines = sorted(v.line for v in vs if v.rule == "env-read")
+        assert lines == [5, 6, 7, 8]       # get, getenv, membership, index
+        # writes (lines 10-11) and the annotated read are not flagged
+
+    def test_exempt_paths_skip_rule(self):
+        assert _fixture("env_read.py", env_exempt=True) == []
+
+
+# ---------------------------------------------------------------------------
+# R3 jit-bounded
+# ---------------------------------------------------------------------------
+
+class TestJitBounded:
+    def test_fixture_violations(self):
+        vs = _fixture("jit_unbounded.py")
+        msgs = {v.line: v.message for v in vs if v.rule == "jit-bounded"}
+        assert any("no boundedness declaration" in m for m in msgs.values())
+        assert any("static_argnums" in m for m in msgs.values())
+        assert any("outside its declared candidate set" in m
+                   for m in msgs.values())
+        assert any("computed value for set-bounded" in m
+                   for m in msgs.values())
+        assert any("unknown kind" in m for m in msgs.values())
+        assert len(msgs) == 5
+
+    def test_in_set_literal_and_documented_call_are_clean(self):
+        vs = _fixture("jit_unbounded.py")
+        flagged = {v.line for v in vs}
+        assert 26 not in flagged           # chunks=4 — in-set literal
+        assert 28 not in flagged           # annotated provenance
+
+
+# ---------------------------------------------------------------------------
+# R4 shared-state
+# ---------------------------------------------------------------------------
+
+class TestSharedState:
+    def test_owner_mode_catches_plan_pipeline_shaped_violation(self):
+        """Acceptance: a lockset violation on a PlanPipeline-shared
+        field (the fixture mirrors runtime.PlanPipeline's registry)."""
+        vs = [v for v in _fixture("lockset_bad.py")
+              if v.rule == "shared-state"]
+        owner_hits = [v for v in vs if "owner list" in v.message]
+        assert len(owner_hits) == 3
+        assert any("_future" in v.message for v in owner_hits)
+        assert any("_closed" in v.message for v in owner_hits)
+        assert any("worker_restarts" in v.message for v in owner_hits)
+
+    def test_lock_mode(self):
+        vs = [v for v in _fixture("lockset_bad.py")
+              if v.rule == "shared-state"]
+        lock_hits = [v for v in vs if "self._lock" in v.message]
+        assert len(lock_hits) == 1
+        assert "racy_bump" in lock_hits[0].message
+
+    def test_owner_methods_init_and_annotated_access_clean(self):
+        vs = _fixture("lockset_bad.py")
+        flagged = {v.line for v in vs}
+        # __init__, submit/wait/close bodies and the annotated peek
+        for line in (17, 18, 22, 25, 28, 41):
+            assert line not in flagged
+
+
+# ---------------------------------------------------------------------------
+# R5 pallas contracts
+# ---------------------------------------------------------------------------
+
+class TestPallas:
+    def test_vmem_budget_overflow(self):
+        """Acceptance: the seeded 4096³-tile pallas_call is caught as a
+        VMEM budget overflow (not merely 'unresolvable')."""
+        vs = [v for v in _fixture("pallas_vmem.py")
+              if v.rule == "pallas-vmem"]
+        over = [v for v in vs if "exceeds" in v.message]
+        assert len(over) == 1
+        assert "MiB" in over[0].message
+
+    def test_vmem_unresolvable_dim(self):
+        vs = [v for v in _fixture("pallas_vmem.py")
+              if v.rule == "pallas-vmem"]
+        assert any("not statically resolvable" in v.message for v in vs)
+
+    def test_tracer_branching(self):
+        vs = [v for v in _fixture("pallas_branch.py")
+              if v.rule == "pallas-branch"]
+        assert len(vs) == 3                # if-on-pid, if-on-ref, while
+        assert all("_branchy_kernel" in v.message for v in vs)
+        # _clean_kernel (pl.when, static-config if, range loop) is clean
+
+    def test_index_map_purity(self):
+        vs = [v for v in _fixture("pallas_impure.py")
+              if v.rule == "pallas-purity"]
+        assert any("captures 'shift'" in v.message for v in vs)
+        assert any("calls a function" in v.message for v in vs)
+        # the pure out_specs map is not flagged
+        assert all(v.line != 27 for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# Annotation grammar
+# ---------------------------------------------------------------------------
+
+class TestAnnotations:
+    def test_allow_requires_reason(self, tmp_path):
+        p = tmp_path / "x.py"
+        p.write_text("# prophetlint: allow(host-sync):\n"
+                     "v = m['loss']\n")
+        vs = lint_file(str(p), hot=False)
+        assert any(v.rule == "annotation" and "mandatory" in v.message
+                   for v in vs)
+
+    def test_trailing_comment_covers_statement(self, tmp_path):
+        p = tmp_path / "x.py"
+        p.write_text(
+            "import numpy as np\n"
+            "a = np.asarray(x)  # prophetlint: allow(host-sync): host data\n")
+        assert lint_file(str(p), hot=True) == []
+
+    def test_block_comment_covers_multiline_statement(self, tmp_path):
+        p = tmp_path / "x.py"
+        p.write_text(
+            "import numpy as np\n"
+            "# prophetlint: allow(host-sync): host data,\n"
+            "#   explained across two comment lines\n"
+            "a = np.asarray(\n"
+            "    x)\n")
+        assert lint_file(str(p), hot=True) == []
+
+    def test_unknown_directive_reported(self, tmp_path):
+        p = tmp_path / "x.py"
+        p.write_text("# prophetlint: frobnicate(x): y\n")
+        vs = lint_file(str(p))
+        assert any(v.rule == "annotation" for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# The repo itself
+# ---------------------------------------------------------------------------
+
+class TestRepoClean:
+    def test_src_is_clean(self):
+        """Every pre-existing violation is fixed or annotated — the CI
+        --lint lane gate."""
+        vs = lint_paths([os.path.join(_ROOT, "src")])
+        assert vs == [], "\n".join(str(v) for v in vs)
+
+    def test_cli_exit_codes(self, capsys):
+        assert cli.main([os.path.join(_ROOT, "src")]) == 0
+        assert "clean" in capsys.readouterr().out
+        assert cli.main([os.path.join(FIXTURES, "pallas_vmem.py")]) == 1
+        out = capsys.readouterr().out
+        assert "[pallas-vmem]" in out and "violation" in out
+
+    def test_walker_skips_fixtures(self):
+        vs = lint_paths([os.path.join(_ROOT, "tools")])
+        assert vs == [], "\n".join(str(v) for v in vs)

@@ -1,0 +1,151 @@
+"""Runtime sanitizer (REPRO_SANITIZE=1): transfer guard, debug lanes,
+torn-read assertions, and the sanitized trainer smoke run.
+
+The sanitizer is the *dynamic* twin of prophetlint (tests in
+test_prophetlint.py): the static rules prove the source holds the
+hot-path invariants; this lane proves a real training run does —
+no implicit host transfer inside the dispatch guard, no NaN/inf
+slipping through the debug lanes, no torn placement read.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import SyntheticLM
+from repro.optim import adamw, cosine
+from repro.parallel import local_ctx
+from repro.train import Trainer, sanitize
+from repro.train.runtime import PlacementCache
+from repro.train.sanitize import TornReadError
+from repro.train.trainer import make_engine_for
+
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    yield
+    # arm() flips process-level jax debug config; put it back so later
+    # tests don't pay the debug-lane overhead
+    jax.config.update("jax_debug_nans", False)
+    jax.config.update("jax_debug_infs", False)
+
+
+# ---------------------------------------------------------------------------
+# dispatch_guard / arm
+# ---------------------------------------------------------------------------
+
+class TestGuards:
+    def test_off_by_default(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        assert sanitize.arm() is False
+        with sanitize.dispatch_guard():
+            # implicit host→device transfer is fine when not sanitizing
+            jnp.sin(np.arange(4.0)).block_until_ready()
+
+    def test_guard_blocks_implicit_transfer(self, sanitized):
+        assert sanitize.arm() is True
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            with sanitize.dispatch_guard():
+                jnp.sin(np.arange(4.0)).block_until_ready()
+
+    def test_guard_scoped_to_context(self, sanitized):
+        with sanitize.dispatch_guard():
+            pass
+        # outside the guard the same transfer is fine again
+        jnp.sin(np.arange(4.0)).block_until_ready()
+
+    def test_debug_lanes_armed(self, sanitized):
+        sanitize.arm()
+        assert jax.config.jax_debug_nans
+        assert jax.config.jax_debug_infs
+
+
+# ---------------------------------------------------------------------------
+# PlacementCache torn-read assertions
+# ---------------------------------------------------------------------------
+
+class _RacyEngine:
+    """Fake engine whose placements_version moves *during* step_arrays —
+    the torn re-pack the submit→wait contract is supposed to prevent."""
+
+    def __init__(self):
+        self._v = 0
+
+    @property
+    def placements_version(self):
+        return self._v
+
+    def step_arrays(self):
+        self._v += 1            # concurrent planner bump, mid-pack
+        return {"expert_devs": np.zeros((2, 4), np.int32)}
+
+
+class _StableEngine:
+    placements_version = 7
+
+    def step_arrays(self):
+        return {"expert_devs": np.zeros((2, 4), np.int32)}
+
+
+class TestTornRead:
+    def test_mid_pack_version_bump_raises(self, sanitized):
+        cache = PlacementCache(_RacyEngine())
+        with pytest.raises(TornReadError, match="during the placement"):
+            cache.arrays_for_dispatch()
+
+    def test_cross_thread_consumption_raises(self, sanitized):
+        cache = PlacementCache(_StableEngine())
+        cache.arrays_for_dispatch()          # binds the dispatch thread
+        errs = []
+
+        def consume():
+            try:
+                cache.arrays_for_dispatch()
+            except TornReadError as e:
+                errs.append(e)
+
+        t = threading.Thread(target=consume)
+        t.start()
+        t.join()
+        assert len(errs) == 1
+        assert "thread" in str(errs[0])
+
+    def test_clean_usage_passes(self, sanitized):
+        cache = PlacementCache(_StableEngine())
+        a = cache.arrays_for_dispatch()
+        b = cache.arrays_for_dispatch()      # cached path, same thread
+        assert a is b
+
+    def test_not_armed_without_flag(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        cache = PlacementCache(_RacyEngine())
+        cache.arrays_for_dispatch()          # racy, but not asserted
+
+
+# ---------------------------------------------------------------------------
+# Sanitized trainer smoke (the acceptance lane)
+# ---------------------------------------------------------------------------
+
+class TestSanitizedTrainer:
+    @pytest.mark.parametrize("async_mode", [False, True])
+    def test_smoke_run_clean(self, sanitized, async_mode):
+        """A short Pro-Prophet run on the fast sim config with the full
+        sanitizer armed: any disallowed host transfer on the dispatch
+        path, NaN/inf in the step, or torn placement read faults the
+        run."""
+        cfg = reduced(get_config("moe-gpt-s"))
+        ctx = local_ctx()
+        steps = 6
+        tr = Trainer(cfg, ctx, adamw(cosine(3e-3, 2, steps)),
+                     attn_impl="naive", remat=False,
+                     engine=make_engine_for(cfg, ctx),
+                     async_plan=async_mode)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        data = SyntheticLM(cfg, batch=2, seq=16)
+        state, hist = tr.run(state, data, num_steps=steps, log_every=0)
+        assert len(hist) == steps
+        assert all(np.isfinite(h) for h in hist)

@@ -1,0 +1,29 @@
+"""prophetlint — repo-specific static analysis for the Pro-Prophet repro.
+
+Five rule families, each encoding an invariant the runtime relies on but
+Python cannot express:
+
+* ``host-sync``   (R1) — no host synchronization on the dispatch hot path
+  (``.item()``, ``float(x[...])``, ``np.asarray``, ``jax.device_get``,
+  ``block_until_ready``) in the hot modules.
+* ``env-read``    (R2) — ``os.environ`` / ``os.getenv`` reads only in
+  ``repro/flags.py`` and ``repro/launch/``.
+* ``jit-bounded`` (R3) — every ``jax.jit`` static argument draws from a
+  statically bounded candidate set, declared next to the jit site.
+* ``shared-state``(R4) — fields named in a class's ``shared(...)``
+  registry are only touched under the declared lock or inside the
+  declared owner methods.
+* ``pallas-*``    (R5) — ``pl.pallas_call`` contracts: pure BlockSpec
+  index maps, block tiles inside the per-core VMEM budget, no
+  tracer-dependent Python branching in kernel bodies.
+
+Escape hatch: ``# prophetlint: allow(<rule>): <reason>`` on the line or
+in the contiguous comment block above the statement; the reason is
+mandatory.  See tools/prophetlint/annotations.py for the full grammar
+and README.md §Static analysis & sanitizers for usage.
+
+Run: ``python -m tools.prophetlint src`` (or ``scripts/ci.sh --lint``).
+"""
+from tools.prophetlint.cli import Violation, lint_file, lint_paths, main
+
+__all__ = ["Violation", "lint_file", "lint_paths", "main"]

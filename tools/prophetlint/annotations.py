@@ -1,0 +1,219 @@
+"""Annotation grammar shared by all prophetlint rules.
+
+Annotations are ordinary comments starting with ``# prophetlint:``.  A
+directive may continue across the following lines of the *same
+contiguous comment block*; continuation lines are joined with their
+leading ``#`` and whitespace stripped.  Three directives exist:
+
+``allow(<rule>): <reason>``
+    Suppress ``<rule>`` violations on the annotated code.  The reason is
+    mandatory — an allow without one is itself reported.  Coverage: the
+    comment's own line(s) plus the next statement after the comment
+    block (through its last line), or — for a trailing comment — the
+    statement on that line.
+
+``shared(<field>, ...): owner=<method>, ...`` or ``lock=<attr>``
+    Class-body registry of concurrency-sensitive fields (rule R4).  In
+    ``owner`` mode the listed methods (plus ``__init__``) are the only
+    code allowed to touch the fields; in ``lock`` mode every access must
+    sit inside ``with self.<attr>:``.
+
+``bounded(<name>): <kind-or-provenance>``
+    R3 boundedness. Covering a ``jax.jit`` call it *declares* the static
+    argument's candidate set — kind must be ``bool``, a literal set like
+    ``{1, 2, 4, 8}``, ``shape-derived`` or ``config`` (free text may
+    follow).  Covering a call of a jitted function it documents the
+    *provenance* of a non-literal static argument (free text).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Optional, Set, Tuple
+
+DIRECTIVE_RE = re.compile(r"#\s*prophetlint:\s*(.*)$")
+ALLOW_RE = re.compile(r"allow\(([\w-]+)\)\s*:\s*(.*)", re.S)
+SHARED_RE = re.compile(r"shared\(([^)]*)\)\s*:\s*(.*)", re.S)
+BOUNDED_RE = re.compile(r"bounded\(([\w.]+)\)\s*:\s*(.*)", re.S)
+
+
+@dataclasses.dataclass
+class Allow:
+    rule: str
+    reason: str
+    line: int               # first comment line of the directive
+    lines: Set[int] = dataclasses.field(default_factory=set)  # coverage
+    used: bool = False
+
+
+@dataclasses.dataclass
+class SharedRegistry:
+    fields: Tuple[str, ...]
+    mode: str               # "owner" | "lock"
+    owners: Tuple[str, ...]  # owner mode: allowed methods
+    lock: str               # lock mode: attribute name
+    line: int
+
+
+@dataclasses.dataclass
+class Bounded:
+    name: str
+    text: str               # kind (declaration) or provenance (call site)
+    line: int
+    lines: Set[int] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class FileAnnotations:
+    allows: List[Allow]
+    registries: List[SharedRegistry]
+    bounded: List[Bounded]
+    errors: List[Tuple[int, str]]   # malformed directives
+
+    def allowed(self, rule: str, line: int) -> Optional[Allow]:
+        for a in self.allows:
+            if a.rule == rule and line in a.lines:
+                a.used = True
+                return a
+        return None
+
+    def bounded_at(self, name: str, line: int) -> Optional[Bounded]:
+        for b in self.bounded:
+            if line in b.lines and (b.name == name
+                                    or b.name.endswith("." + name)):
+                return b
+        return None
+
+
+def _comment_blocks(source: str):
+    """Yield contiguous comment runs as lists of (line, text).  A
+    trailing comment (code on the same line) forms its own block."""
+    toks = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    blocks: List[List[Tuple[int, str]]] = []
+    cur: List[Tuple[int, str]] = []
+    lines = source.splitlines()
+    prev_line = -2
+    for tok in toks:
+        if tok.type != tokenize.COMMENT:
+            continue
+        line = tok.start[0]
+        standalone = lines[line - 1][: tok.start[1]].strip() == ""
+        if standalone and cur and line == prev_line + 1:
+            cur.append((line, tok.string))
+        else:
+            if cur:
+                blocks.append(cur)
+            cur = [(line, tok.string)]
+        prev_line = line if standalone else -2
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+def _statement_spans(tree: ast.AST) -> List[Tuple[int, int]]:
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.stmt):
+            start = node.lineno
+            # a decorated def/class starts at its first decorator, so a
+            # comment above the decorators annotates the whole thing
+            for dec in getattr(node, "decorator_list", []):
+                start = min(start, dec.lineno)
+            spans.append((start, node.end_lineno or node.lineno))
+    return sorted(spans)
+
+
+def _coverage(first_comment: int, last_comment: int,
+              spans: List[Tuple[int, int]], same_line: bool) -> Set[int]:
+    """Lines a directive applies to: its own comment lines plus the
+    statement it annotates (trailing comment: the statement on that
+    line; block comment: the next statement after the block)."""
+    cov = set(range(first_comment, last_comment + 1))
+    if same_line:
+        # trailing comment — cover the statement ending on this line
+        for a, b in spans:
+            if a <= first_comment <= b:
+                cov.update(range(a, b + 1))
+        return cov
+    nxt = None
+    for a, b in spans:
+        if a > last_comment:
+            nxt = (a, b)
+            break
+    if nxt is not None:
+        cov.update(range(nxt[0], nxt[1] + 1))
+    return cov
+
+
+def _split_fields(s: str) -> Tuple[str, ...]:
+    return tuple(x.strip() for x in s.split(",") if x.strip())
+
+
+def collect(source: str, tree: ast.AST) -> FileAnnotations:
+    ann = FileAnnotations([], [], [], [])
+    spans = _statement_spans(tree)
+    src_lines = source.splitlines()
+    for block in _comment_blocks(source):
+        # split the block into directives: a new directive starts at any
+        # line matching DIRECTIVE_RE; lines between belong to the
+        # previous directive (continuations)
+        i = 0
+        while i < len(block):
+            line_no, text = block[i]
+            m = DIRECTIVE_RE.search(text)
+            if not m:
+                i += 1
+                continue
+            body = m.group(1)
+            last = line_no
+            j = i + 1
+            while j < len(block) and not DIRECTIVE_RE.search(block[j][1]):
+                cont = block[j][1].lstrip("#").strip()
+                body += " " + cont
+                last = block[j][0]
+                j += 1
+            i = j
+            same_line = src_lines[line_no - 1].lstrip()[0] != "#"
+            cov = _coverage(line_no, last, spans, same_line)
+            _parse_directive(ann, body.strip(), line_no, cov)
+    return ann
+
+
+def _parse_directive(ann: FileAnnotations, body: str, line: int,
+                     cov: Set[int]) -> None:
+    m = ALLOW_RE.match(body)
+    if m:
+        rule, reason = m.group(1), m.group(2).strip()
+        if not reason:
+            ann.errors.append(
+                (line, f"allow({rule}) without a reason — the reason "
+                       f"is mandatory"))
+            return
+        ann.allows.append(Allow(rule, reason, line, cov))
+        return
+    m = SHARED_RE.match(body)
+    if m:
+        fields = _split_fields(m.group(1))
+        rhs = m.group(2).strip()
+        if rhs.startswith("owner="):
+            ann.registries.append(SharedRegistry(
+                fields, "owner", _split_fields(rhs[len("owner="):]),
+                "", line))
+        elif rhs.startswith("lock="):
+            ann.registries.append(SharedRegistry(
+                fields, "lock", (), rhs[len("lock="):].strip(), line))
+        else:
+            ann.errors.append(
+                (line, f"shared(...) needs 'owner=<methods>' or "
+                       f"'lock=<attr>', got {rhs!r}"))
+        return
+    m = BOUNDED_RE.match(body)
+    if m:
+        ann.bounded.append(Bounded(m.group(1), m.group(2).strip(),
+                                   line, cov))
+        return
+    ann.errors.append((line, f"unrecognized prophetlint directive: "
+                             f"{body[:60]!r}"))

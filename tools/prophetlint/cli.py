@@ -1,0 +1,136 @@
+"""prophetlint driver: collect files, run rules, print violations.
+
+``python -m tools.prophetlint [paths...]`` — paths default to ``src``.
+Exit status 1 when any violation is found.  Output format::
+
+    path/to/file.py:123: [host-sync] .item() on the dispatch hot path ...
+
+Which rules apply where:
+
+* R1 host-sync runs only on the *hot modules* (``HOT_PATHS``) — the
+  model/kernel code and the trainer dispatch path.
+* R2 env-read runs on everything under ``src/`` except
+  ``repro/flags.py`` and ``repro/launch/`` (``ENV_EXEMPT``).
+* R3/R4/R5 are self-scoping: jit sites, ``shared(...)`` registries and
+  ``pallas_call`` sites are checked wherever they appear.
+
+``tools/prophetlint/fixtures/`` holds files with *seeded* violations for
+the self-tests; the walker skips them (tests lint them explicitly with
+``lint_file(path, hot=True, env_exempt=False)``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from tools.prophetlint import annotations as ann_mod
+from tools.prophetlint.rules import (envdiscipline, hostsync, jitcache,
+                                     lockset, pallas)
+
+# Paths (relative, '/'-separated) where R1 host-sync applies.
+HOT_PATHS = (
+    "src/repro/models/",
+    "src/repro/kernels/",
+    "src/repro/train/runtime.py",
+    "src/repro/train/trainer.py",
+)
+
+# Paths where R2 env-read does NOT apply (the sanctioned env readers).
+ENV_EXEMPT = (
+    "src/repro/flags.py",
+    "src/repro/launch/",
+)
+
+SKIP_DIRS = {"__pycache__", ".git", "fixtures"}
+
+
+@dataclasses.dataclass
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _relpath(path: str) -> str:
+    rel = os.path.relpath(path).replace(os.sep, "/")
+    return rel
+
+
+def lint_file(path: str, text: Optional[str] = None, *,
+              hot: Optional[bool] = None,
+              env_exempt: Optional[bool] = None) -> List[Violation]:
+    """Lint one file.  ``hot``/``env_exempt`` override the path-based
+    scoping (the self-tests force fixtures into scope this way)."""
+    rel = _relpath(path)
+    if text is None:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return [Violation(rel, e.lineno or 0, "parse",
+                          f"syntax error: {e.msg}")]
+    ann = ann_mod.collect(text, tree)
+    out: List[Violation] = []
+    for line, msg in ann.errors:
+        out.append(Violation(rel, line, "annotation", msg))
+
+    if hot is None:
+        hot = any(rel == p or rel.startswith(p) for p in HOT_PATHS)
+    if env_exempt is None:
+        env_exempt = (not rel.startswith("src/")) \
+            or any(rel == p or rel.startswith(p) for p in ENV_EXEMPT)
+
+    def emit(rule: str, line: int, msg: str) -> None:
+        if ann.allowed(rule, line) is None:
+            out.append(Violation(rel, line, rule, msg))
+
+    if hot:
+        hostsync.check(tree, emit)
+    if not env_exempt:
+        envdiscipline.check(tree, emit)
+    jitcache.check(tree, ann, emit)
+    lockset.check(tree, ann, emit)
+    pallas.check(tree, emit)
+    return out
+
+
+def _walk(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in SKIP_DIRS)
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    files.append(os.path.join(root, n))
+    return files
+
+
+def lint_paths(paths: Sequence[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for f in _walk(paths):
+        out.extend(lint_file(f))
+    return out
+
+
+def main(argv: Sequence[str]) -> int:
+    paths = list(argv) or ["src"]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    n = len(violations)
+    if n:
+        print(f"prophetlint: {n} violation{'s' if n != 1 else ''}")
+        return 1
+    print("prophetlint: clean")
+    return 0

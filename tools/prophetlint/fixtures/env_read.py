@@ -1,0 +1,14 @@
+"""Seeded R2 violations — env reads outside flags.py/launch/ (tests
+pass ``env_exempt=False``)."""
+import os
+
+MODE = os.environ.get("REPRO_MODE", "fast")        # env-read
+LEVEL = os.getenv("REPRO_LEVEL")                   # env-read
+HAS = "REPRO_DEBUG" in os.environ                  # env-read (membership)
+DIRECT = os.environ["HOME"]                        # env-read (subscript)
+
+os.environ["REPRO_SEEDED"] = "1"                   # write: allowed
+del os.environ["REPRO_SEEDED"]                     # delete: allowed
+
+# prophetlint: allow(env-read): fixture — documented exception
+ANNOTATED = os.environ.get("REPRO_ANNOTATED")

@@ -1,0 +1,20 @@
+"""Seeded R1 violations — every construct here must be flagged when the
+file is linted as a hot module (tests pass ``hot=True``)."""
+import jax
+import numpy as np
+
+
+def leaky_dispatch(step_fn, state, batch, metrics):
+    state, metrics = step_fn(state, batch)
+    loss = float(metrics["loss"])              # host-sync: blocking fetch
+    host = np.asarray(metrics["counts"])       # host-sync: D2H copy
+    scalar = metrics["aux"].item()             # host-sync: .item()
+    fetched = jax.device_get(state)            # host-sync: device_get
+    jax.block_until_ready(state)               # host-sync: barrier
+    metrics["counts"].block_until_ready()      # host-sync: barrier method
+    return loss, host, scalar, fetched
+
+
+def annotated_ok(metrics):
+    # prophetlint: allow(host-sync): fixture — deferred consumption
+    return float(metrics["loss"])

@@ -1,0 +1,33 @@
+"""Seeded R3 violations — statics without declarations, out-of-set
+literals, computed set-statics without provenance."""
+import jax
+
+
+def step(state, batch, chunks=1):
+    return state
+
+
+# no bounded() declaration for 'chunks' → violation
+undeclared = jax.jit(step, static_argnames=("chunks",))
+
+# static_argnums dodges by-name declarations → violation
+positional = jax.jit(step, static_argnums=(2,))
+
+
+def make_step():
+    # prophetlint: bounded(chunks): {1, 2, 4, 8}
+    return jax.jit(step, static_argnames=("chunks",))
+
+
+def train(state, batch, profiled_k):
+    fn = make_step()
+    fn(state, batch, chunks=16)           # literal outside {1, 2, 4, 8}
+    fn(state, batch, chunks=profiled_k)   # computed, no provenance note
+    fn(state, batch, chunks=4)            # fine: in-set literal
+    # prophetlint: bounded(chunks): fixture — quantized upstream
+    fn(state, batch, chunks=profiled_k)   # fine: documented provenance
+
+
+def make_bad_kind():
+    # prophetlint: bounded(chunks): whatever-goes
+    return jax.jit(step, static_argnames=("chunks",))   # unknown kind

@@ -1,0 +1,55 @@
+"""Seeded R4 violations — a PlanPipeline-shaped class whose shared
+fields are touched outside the registry's owner list, and a lock-mode
+class with an unlocked access."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class MiniPlanPipeline:
+    """Mirror of repro.train.runtime.PlanPipeline's registry shape."""
+
+    # prophetlint: shared(_future, _closed, worker_restarts):
+    #   owner=submit, wait, close
+
+    def __init__(self, engine):
+        self._engine = engine
+        self._exec = ThreadPoolExecutor(max_workers=1)
+        self._future = None
+        self._closed = False
+        self.worker_restarts = 0
+
+    def submit(self, counts):
+        self._future = self._exec.submit(lambda: counts)
+
+    def wait(self):
+        f, self._future = self._future, None
+        return f.result() if f is not None else None
+
+    def close(self):
+        self._closed = True
+
+    def peek(self):
+        return self._future          # violation: not in owner list
+
+    def sneaky_reset(self):
+        self._closed = False         # violation: not in owner list
+        self.worker_restarts += 1    # violation: not in owner list
+
+    def annotated_peek(self):
+        # prophetlint: allow(shared-state): fixture — read-only debug probe
+        return self._future
+
+
+class LockedCounter:
+    # prophetlint: shared(count): lock=_lock
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1          # fine: under the declared lock
+
+    def racy_bump(self):
+        self.count += 1              # violation: no lock held

@@ -1,0 +1,47 @@
+"""Seeded R5 branching violations — Python control flow on
+tracer-derived values inside a kernel body."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _branchy_kernel(x_ref, o_ref, *, bt: int):
+    t = pl.program_id(0)
+    row = x_ref[0, 0]
+    if t == 0:                       # violation: branch on program_id
+        o_ref[...] = jnp.zeros_like(o_ref)
+    if row > 0:                      # violation: branch on a ref value
+        o_ref[...] = x_ref[...]
+    while t < bt:                    # violation: loop on program_id
+        t = t + 1
+
+
+def _clean_kernel(x_ref, o_ref, *, bt: int, causal: bool):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if causal:                       # fine: keyword-only static config
+        o_ref[...] = x_ref[...]
+    for i in range(bt):              # fine: static unroll
+        pass
+
+
+def run(x, bt=128):
+    bad = pl.pallas_call(
+        _branchy_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((bt, bt), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, bt), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+    good = pl.pallas_call(
+        _clean_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((bt, bt), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, bt), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+    return bad, good

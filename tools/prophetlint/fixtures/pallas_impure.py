@@ -1,0 +1,30 @@
+"""Seeded R5 purity violations — BlockSpec index maps that are not pure
+functions of the grid indices."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OFFSET = 3
+
+
+def _table():
+    return [0, 1, 2]
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def impure_maps(x, bt=128):
+    shift = 2
+    out = pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((bt, bt), lambda i: (i + shift, 0)),    # capture
+            pl.BlockSpec((bt, bt), lambda i: (_table()[i], 0)),  # call
+        ],
+        out_specs=pl.BlockSpec((bt, bt), lambda i: (i, 0)),      # fine
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, x)
+    return out

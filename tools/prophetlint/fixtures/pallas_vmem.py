@@ -1,0 +1,40 @@
+"""Seeded R5 VMEM violations — a tile set that blows the 16 MiB/core
+budget, and a block dim the linter cannot bound."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def oversized_matmul(x, w, bt=4096, bf=4096, bd=4096):
+    """(4096·4096)·3 tiles · 4 B · double-buffered + f32 scratch
+    ≈ 448 MiB — nowhere near fitting."""
+    out = pl.pallas_call(
+        _kernel,
+        grid=(1, 1, 1, 1),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda g, t, f, d: (g, t, d)),
+            pl.BlockSpec((1, bd, bf), lambda g, t, f, d: (g, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf), lambda g, t, f, d: (g, t, f)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+    )(x, w)
+    return out
+
+
+def unbounded_panel(x, bd=128):
+    out = pl.pallas_call(
+        _kernel,
+        grid=(1, 1),
+        in_specs=[pl.BlockSpec((x.shape[0], bd), lambda d, r: (0, d))],
+        out_specs=pl.BlockSpec((x.shape[0], bd), lambda d, r: (0, d)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+    return out

@@ -1,0 +1,45 @@
+"""R2 ``env-read`` — environment reads only in flags.py / launch/.
+
+Scattered ``os.environ`` reads make a run's behavior depend on ambient
+process state with no single place to audit it.  The repo's contract:
+``repro/flags.py`` owns every tunable (one accessor per variable,
+re-read per call) and ``repro/launch/`` may read topology variables at
+process start.  Everything else must go through a flags accessor.
+
+Flagged: ``os.environ[...]`` loads, ``os.environ.get/…``,
+``"X" in os.environ``, ``os.getenv(...)``.  Writes
+(``os.environ["X"] = ...``, ``del os.environ["X"]``) are *not* flagged —
+tests and launchers legitimately seed the environment.
+"""
+from __future__ import annotations
+
+import ast
+
+RULE = "env-read"
+
+
+def _is_os_environ(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "environ"
+            and isinstance(node.value, ast.Name) and node.value.id == "os")
+
+
+def check(tree: ast.AST, emit) -> None:
+    writes = set()   # id() of os.environ Attribute nodes used as write targets
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                _is_os_environ(node.value):
+            writes.add(id(node.value))
+    for node in ast.walk(tree):
+        if _is_os_environ(node) and id(node) not in writes:
+            emit(RULE, node.lineno,
+                 "os.environ read outside repro/flags.py and "
+                 "repro/launch/ — add an accessor to repro.flags")
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "getenv"
+              and isinstance(node.func.value, ast.Name)
+              and node.func.value.id == "os"):
+            emit(RULE, node.lineno,
+                 "os.getenv read outside repro/flags.py and "
+                 "repro/launch/ — add an accessor to repro.flags")

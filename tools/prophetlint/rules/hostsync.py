@@ -1,0 +1,57 @@
+"""R1 ``host-sync`` — no host synchronization on the dispatch hot path.
+
+Every construct flagged here forces the host to block on (or copy from)
+the device — the exact serialization Pro-Prophet's async runtime exists
+to avoid.  In the hot modules they are errors unless annotated with
+``# prophetlint: allow(host-sync): <reason>``:
+
+* ``x.item()``, ``x.block_until_ready()``
+* ``jax.device_get(...)``, ``jax.block_until_ready(...)``
+* ``np.asarray(...)`` / ``numpy.asarray(...)`` (``jnp.asarray`` is fine
+  — it stays on device)
+* ``float(x[...])`` / ``int(x[...])`` / ``bool(x[...])`` — the classic
+  ``float(metrics["loss"])`` blocking fetch.  Only subscript arguments
+  are flagged: coercions of plain names/calls are overwhelmingly host
+  scalars already, and the dynamic twin (``REPRO_SANITIZE``'s transfer
+  guard) backstops anything this heuristic misses.
+"""
+from __future__ import annotations
+
+import ast
+
+RULE = "host-sync"
+
+_SYNC_METHODS = {"item", "block_until_ready"}
+_JAX_FUNCS = {"device_get", "block_until_ready"}
+_NUMPY_NAMES = {"np", "numpy"}
+_COERCIONS = {"float", "int", "bool"}
+
+
+def check(tree: ast.AST, emit) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr in _SYNC_METHODS and not (
+                    isinstance(f.value, ast.Name)
+                    and f.value.id in ("jax",)):
+                emit(RULE, node.lineno,
+                     f".{f.attr}() blocks the host on the device — "
+                     f"not allowed on the dispatch hot path")
+            elif (isinstance(f.value, ast.Name) and f.value.id == "jax"
+                  and f.attr in _JAX_FUNCS):
+                emit(RULE, node.lineno,
+                     f"jax.{f.attr}() is a host sync — not allowed on "
+                     f"the dispatch hot path")
+            elif (isinstance(f.value, ast.Name)
+                  and f.value.id in _NUMPY_NAMES and f.attr == "asarray"):
+                emit(RULE, node.lineno,
+                     f"{f.value.id}.asarray() copies device→host — use "
+                     f"jnp.asarray or move off the hot path")
+        elif isinstance(f, ast.Name) and f.id in _COERCIONS:
+            if len(node.args) == 1 and isinstance(node.args[0],
+                                                  ast.Subscript):
+                emit(RULE, node.lineno,
+                     f"{f.id}(...[...]) forces a blocking device fetch "
+                     f"of the subscripted value")

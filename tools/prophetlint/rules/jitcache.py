@@ -1,0 +1,225 @@
+"""R3 ``jit-bounded`` — every jit static argument is statically bounded.
+
+A ``jax.jit(..., static_argnames=...)`` site recompiles per distinct
+static value; an unbounded static (a raw profiled count, a float) turns
+the jit cache into a compile-per-step leak.  The repo's discipline
+(established by the chunked-a2a work, K ∈ {1, 2, 4, 8}): every static
+argument must carry a boundedness declaration next to the jit site::
+
+    # prophetlint: bounded(a2a_chunks): {1, 2, 4, 8}
+    return jax.jit(step, static_argnames=("a2a_chunks",))
+
+Declared kinds:
+
+* ``{v1, v2, ...}`` — a literal candidate set.  Call sites passing a
+  literal are checked for membership; call sites passing a computed
+  value must document provenance with a call-site annotation
+  ``# prophetlint: bounded(<name>): <where the quantization happens>``.
+* ``bool`` — two values, trivially bounded.
+* ``shape-derived`` — takes values from array shapes already specialized
+  by tracing (no extra cache growth beyond the shape key).
+* ``config`` — fixed per process by construction (config dataclass /
+  flags accessor), not data-dependent.
+
+Free text may follow the kind (e.g. ``config — tile sizes``).  Also
+flagged: ``static_argnums`` (positional statics dodge the by-name
+discipline) and jit sites whose ``static_argnames`` the linter cannot
+read statically.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+RULE = "jit-bounded"
+
+_KIND_RE = re.compile(r"^(bool|shape-derived|config)\b")
+_SET_RE = re.compile(r"^\{([^}]*)\}")
+
+
+def _is_jit_func(f: ast.AST) -> bool:
+    if isinstance(f, ast.Name) and f.id in ("jit", "pjit"):
+        return True
+    return (isinstance(f, ast.Attribute) and f.attr in ("jit", "pjit")
+            and isinstance(f.value, ast.Name)
+            and f.value.id in ("jax", "pjit"))
+
+
+def _is_jit_site(call: ast.Call) -> bool:
+    """Direct ``jax.jit(...)`` or the decorator idiom
+    ``functools.partial(jax.jit, static_argnames=...)``."""
+    if _is_jit_func(call.func):
+        return True
+    f = call.func
+    is_partial = (isinstance(f, ast.Name) and f.id == "partial") or \
+        (isinstance(f, ast.Attribute) and f.attr == "partial")
+    return is_partial and bool(call.args) and _is_jit_func(call.args[0])
+
+
+def _static_names(call: ast.Call) -> Optional[Tuple[List[str], bool]]:
+    """(names, readable) from a jit call's static_argnames; None if the
+    call has no statics.  readable=False when the kwarg exists but is
+    not a literal."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value], True
+            if isinstance(v, (ast.Tuple, ast.List)):
+                names = []
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and \
+                            isinstance(elt.value, str):
+                        names.append(elt.value)
+                    else:
+                        return [], False
+                return names, True
+            return [], False
+    return None
+
+
+def _parse_kind(text: str):
+    """('set', {values}) | ('kind', name) | None for a declaration."""
+    m = _SET_RE.match(text)
+    if m:
+        vals = set()
+        for part in m.group(1).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                vals.add(int(part))
+            except ValueError:
+                vals.add(part.strip("'\""))
+        return ("set", vals)
+    m = _KIND_RE.match(text)
+    if m:
+        return ("kind", m.group(1))
+    return None
+
+
+class _JitIndex:
+    """Map callables (names / self-attributes) to their static specs."""
+
+    def __init__(self):
+        self.by_name: Dict[str, Dict[str, object]] = {}
+        self.by_attr: Dict[str, Dict[str, object]] = {}
+
+
+def check(tree: ast.AST, ann, emit) -> None:
+    # -- pass 1: jit sites → declaration check; factory index ------------
+    sites: List[Tuple[ast.Call, Dict[str, object]]] = []
+    factories: Dict[str, Dict[str, object]] = {}
+
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_jit_site(node)):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "static_argnums":
+                emit(RULE, node.lineno,
+                     "static_argnums is positional — use static_argnames "
+                     "so boundedness declarations can attach by name")
+        res = _static_names(node)
+        if res is None:
+            continue
+        names, readable = res
+        if not readable:
+            emit(RULE, node.lineno,
+                 "static_argnames is not a string/tuple literal — the "
+                 "linter cannot verify the static set is bounded")
+            continue
+        spec: Dict[str, object] = {}
+        for name in names:
+            b = ann.bounded_at(name, node.lineno)
+            if b is None:
+                emit(RULE, node.lineno,
+                     f"static arg '{name}' has no boundedness "
+                     f"declaration — add '# prophetlint: "
+                     f"bounded({name}): <kind>' at the jit site")
+                continue
+            kind = _parse_kind(b.text)
+            if kind is None:
+                emit(RULE, b.line,
+                     f"bounded({name}): unknown kind {b.text[:40]!r} — "
+                     f"use bool, {{literal, set}}, shape-derived or "
+                     f"config")
+                continue
+            spec[name] = kind
+        sites.append((node, spec))
+
+    # factory pattern: a function whose return value is a jit call
+    for fn in funcs:
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Return) and \
+                    isinstance(stmt.value, ast.Call) and \
+                    _is_jit_site(stmt.value):
+                for call, spec in sites:
+                    if call is stmt.value and spec:
+                        factories[fn.name] = spec
+
+    # -- pass 2: alias the jitted callables ------------------------------
+    idx = _JitIndex()
+
+    # decorator idiom: @functools.partial(jax.jit, static_argnames=...)
+    for fn in funcs:
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call):
+                for call, spec in sites:
+                    if call is dec and spec:
+                        idx.by_name[fn.name] = spec
+
+    def record(target: ast.AST, spec: Dict[str, object]) -> None:
+        if isinstance(target, ast.Name):
+            idx.by_name[target.id] = spec
+        elif isinstance(target, ast.Attribute):
+            idx.by_attr[target.attr] = spec
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or \
+                not isinstance(node.value, ast.Call):
+            continue
+        call = node.value
+        spec = None
+        if _is_jit_site(call):
+            for c, s in sites:
+                if c is call:
+                    spec = s
+        elif isinstance(call.func, ast.Name) and \
+                call.func.id in factories:
+            spec = factories[call.func.id]
+        if spec:
+            for t in node.targets:
+                record(t, spec)
+
+    # -- pass 3: call-site discipline for literal-set statics ------------
+    jit_calls_seen = {id(c) for c, _ in sites}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or id(node) in jit_calls_seen:
+            continue
+        f = node.func
+        spec = None
+        if isinstance(f, ast.Name):
+            spec = idx.by_name.get(f.id)
+        elif isinstance(f, ast.Attribute):
+            spec = idx.by_attr.get(f.attr)
+        if not spec:
+            continue
+        for kw in node.keywords:
+            kind = spec.get(kw.arg)
+            if kind is None or kind[0] != "set":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Constant):
+                if v.value not in kind[1]:
+                    emit(RULE, node.lineno,
+                         f"static arg '{kw.arg}'={v.value!r} is outside "
+                         f"its declared candidate set {sorted(kind[1])}")
+            elif ann.bounded_at(kw.arg, node.lineno) is None:
+                emit(RULE, node.lineno,
+                     f"computed value for set-bounded static "
+                     f"'{kw.arg}' — annotate the call with "
+                     f"'# prophetlint: bounded({kw.arg}): <provenance>'")

@@ -1,0 +1,110 @@
+"""R4 ``shared-state`` — registry-driven lock/ownership discipline.
+
+Classes shared between the dispatch thread and the planner worker
+declare their concurrency-sensitive fields in a class-body registry::
+
+    # prophetlint: shared(_future, _closed): owner=submit, wait, close
+
+``owner`` mode: only the listed methods (plus ``__init__``, which runs
+before the object escapes its creating thread) may touch the fields —
+the repo's runtime classes synchronize by *phase* (the submit→wait
+happens-before edge), so ownership is a method list, not a mutex.
+
+``lock`` mode: every access must sit inside ``with self.<lock>:``.
+
+Any other access is a violation unless annotated
+``# prophetlint: allow(shared-state): <reason>`` — the point is that
+adding a method that touches planner state is a conscious concurrency
+decision, reviewed either by extending the registry or by justifying
+the exception inline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+RULE = "shared-state"
+
+
+def _self_attr(node: ast.AST, name: str = None):
+    """The attribute name if node is ``self.<attr>`` (any attr when
+    ``name`` is None and it matches otherwise), else None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        if name is None or node.attr == name:
+            return node.attr
+    return None
+
+
+class _MethodWalker(ast.NodeVisitor):
+    """Collect ``self.<field>`` accesses in a method, tracking whether
+    each sits under ``with self.<lock>:``."""
+
+    def __init__(self, fields, lock):
+        self.fields = fields
+        self.lock = lock
+        self.hits: List[tuple] = []   # (attr, lineno, under_lock)
+        self._lock_depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        locked = any(
+            _self_attr(item.context_expr, self.lock) is not None
+            or (isinstance(item.context_expr, ast.Call)
+                and _self_attr(item.context_expr.func, self.lock))
+            for item in node.items) if self.lock else False
+        if locked:
+            self._lock_depth += 1
+            self.generic_visit(node)
+            self._lock_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr in self.fields:
+            self.hits.append((attr, node.lineno, self._lock_depth > 0))
+        self.generic_visit(node)
+
+
+def check(tree: ast.AST, ann, emit) -> None:
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        regs = [r for r in ann.registries
+                if cls.lineno <= r.line <= (cls.end_lineno or cls.lineno)]
+        if not regs:
+            continue
+        # innermost class wins: skip registries owned by a nested class
+        nested = [c for c in ast.walk(cls)
+                  if isinstance(c, ast.ClassDef) and c is not cls]
+        regs = [r for r in regs
+                if not any(n.lineno <= r.line <= (n.end_lineno or 0)
+                           for n in nested)]
+        for reg in regs:
+            fields = set(reg.fields)
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if meth.name == "__init__":
+                    continue
+                walker = _MethodWalker(fields,
+                                       reg.lock if reg.mode == "lock"
+                                       else None)
+                walker.visit(meth)
+                for attr, line, under_lock in walker.hits:
+                    if reg.mode == "owner":
+                        if meth.name in reg.owners:
+                            continue
+                        emit(RULE, line,
+                             f"'{cls.name}.{meth.name}' touches shared "
+                             f"field '{attr}' but is not in the "
+                             f"registry's owner list "
+                             f"({', '.join(reg.owners)})")
+                    else:
+                        if under_lock:
+                            continue
+                        emit(RULE, line,
+                             f"'{cls.name}.{meth.name}' touches shared "
+                             f"field '{attr}' outside 'with "
+                             f"self.{reg.lock}:'")

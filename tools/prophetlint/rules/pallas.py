@@ -1,0 +1,359 @@
+"""R5 ``pallas-*`` — contracts every ``pl.pallas_call`` site must hold.
+
+Three checks, each a TPU-Pallas failure mode that surfaces as silent
+mis-compiles or hard-to-attribute runtime faults rather than nice
+Python errors:
+
+* ``pallas-purity`` — BlockSpec index maps must be pure functions of the
+  grid indices: free names, calls or attribute reads inside the lambda
+  make the block→HBM mapping depend on Python state captured at trace
+  time.
+* ``pallas-vmem`` — the per-grid-step working set (all BlockSpec tiles,
+  double-buffered by the pipeline, plus VMEM scratch) must fit the
+  per-core budget (~16 MiB).  Tile dims are resolved statically through
+  literals, enclosing-function locals/defaults, module-wide consistent
+  parameter defaults and module constants; a dim the linter cannot bound
+  (e.g. ``x.shape[0]``) is itself a violation — annotate with
+  ``allow(pallas-vmem)`` and say why the runtime value stays small.
+  Blocks are costed at 4 B/element (conservative for bf16 inputs).
+* ``pallas-branch`` — Python ``if``/``while`` in a kernel body on values
+  derived from refs or ``pl.program_id`` is a trace-time decision on a
+  runtime value; use ``@pl.when`` / ``jnp.where`` / ``fori_loop``.
+  Keyword-only kernel params are static configuration and may branch.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+PURITY = "pallas-purity"
+VMEM = "pallas-vmem"
+BRANCH = "pallas-branch"
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # per TPU core
+BLOCK_ELEM_BYTES = 4                   # conservative f32 costing
+DOUBLE_BUFFER = 2                      # Pallas pipelines tiles twice
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1,
+}
+
+
+def _attr_is(node: ast.AST, attr: str) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == attr
+
+
+# -- static dim resolution ---------------------------------------------------
+
+class _Resolver:
+    def __init__(self, tree: ast.AST, enclosing):
+        self.tree = tree
+        self.enclosing = enclosing
+        self.module_consts: Dict[str, int] = {}
+        for node in getattr(tree, "body", []):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, int):
+                self.module_consts[node.targets[0].id] = node.value.value
+        # module-wide consistent parameter defaults (e.g. bt=128 on every
+        # function that declares a default for bt)
+        seen: Dict[str, Set[int]] = {}
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            a = fn.args
+            for params, defaults in ((a.args, a.defaults),
+                                     (a.kwonlyargs, a.kw_defaults)):
+                pad = len(params) - len(defaults)
+                for p, d in zip(params[pad:], defaults):
+                    if d is not None and isinstance(d, ast.Constant) \
+                            and isinstance(d.value, int) \
+                            and not isinstance(d.value, bool):
+                        seen.setdefault(p.arg, set()).add(d.value)
+        self.param_defaults = {k: next(iter(v))
+                               for k, v in seen.items() if len(v) == 1}
+        self.local_consts: Dict[str, int] = {}
+        self.fn_defaults: Dict[str, int] = {}
+        if enclosing is not None:
+            for node in ast.walk(enclosing):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and isinstance(node.value, ast.Constant) \
+                        and isinstance(node.value.value, int):
+                    self.local_consts[node.targets[0].id] = node.value.value
+            a = enclosing.args
+            for params, defaults in ((a.args, a.defaults),
+                                     (a.kwonlyargs, a.kw_defaults)):
+                pad = len(params) - len(defaults)
+                for p, d in zip(params[pad:], defaults):
+                    if d is not None and isinstance(d, ast.Constant) \
+                            and isinstance(d.value, int) \
+                            and not isinstance(d.value, bool):
+                        self.fn_defaults[p.arg] = d.value
+
+    def resolve(self, node: ast.AST) -> Optional[int]:
+        if node is None:
+            return 1
+        if isinstance(node, ast.Constant):
+            if node.value is None:
+                return 1          # squeezed dim
+            if isinstance(node.value, int):
+                return node.value
+            return None
+        if isinstance(node, ast.Name):
+            for table in (self.local_consts, self.fn_defaults,
+                          self.param_defaults, self.module_consts):
+                if node.id in table:
+                    return table[node.id]
+            return None
+        if isinstance(node, ast.BinOp):
+            lhs, rhs = self.resolve(node.left), self.resolve(node.right)
+            if lhs is None or rhs is None:
+                return None
+            if isinstance(node.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(node.op, ast.Add):
+                return lhs + rhs
+            if isinstance(node.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(node.op, ast.FloorDiv) and rhs:
+                return lhs // rhs
+            return None
+        return None
+
+
+# -- site discovery ----------------------------------------------------------
+
+def _enclosing_map(tree: ast.AST):
+    """call node id → innermost enclosing function def."""
+    out: Dict[int, ast.AST] = {}
+
+    def walk(node, fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Call):
+                out[id(child)] = fn
+            walk(child, fn)
+
+    walk(tree, None)
+    return out
+
+
+def _resolve_grid_spec(call: ast.Call, enclosing) -> Optional[ast.Call]:
+    """The GridSpec constructor call for ``grid_spec=<name-or-call>``."""
+    for kw in call.keywords:
+        if kw.arg != "grid_spec":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Call):
+            return v
+        if isinstance(v, ast.Name) and enclosing is not None:
+            for node in ast.walk(enclosing):
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and node.targets[0].id == v.id \
+                        and isinstance(node.value, ast.Call):
+                    return node.value
+    return None
+
+
+def _block_specs(call: ast.Call, grid_spec: Optional[ast.Call]):
+    """All BlockSpec constructor calls reachable from the site."""
+    sources = [call] + ([grid_spec] if grid_spec is not None else [])
+    specs: List[ast.Call] = []
+    for src in sources:
+        for kw in src.keywords:
+            if kw.arg not in ("in_specs", "out_specs"):
+                continue
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Call) and _attr_is(v.func, "BlockSpec"):
+                    specs.append(v)
+    return specs
+
+
+def _scratch_shapes(call: ast.Call, grid_spec: Optional[ast.Call]):
+    out: List[ast.Call] = []
+    for src in [call] + ([grid_spec] if grid_spec is not None else []):
+        for kw in src.keywords:
+            if kw.arg == "scratch_shapes" and isinstance(
+                    kw.value, (ast.Tuple, ast.List)):
+                for v in kw.value.elts:
+                    if isinstance(v, ast.Call):
+                        out.append(v)
+    return out
+
+
+# -- the three checks --------------------------------------------------------
+
+def _check_purity(spec: ast.Call, emit) -> None:
+    if len(spec.args) < 2:
+        return
+    lam = spec.args[1]
+    if not isinstance(lam, ast.Lambda):
+        if not isinstance(lam, ast.Constant):   # e.g. a named helper fn
+            emit(PURITY, spec.lineno,
+                 "BlockSpec index map is not an inline lambda — the "
+                 "linter cannot verify it is pure in the grid indices")
+        return
+    params = {a.arg for a in lam.args.args}
+    for node in ast.walk(lam.body):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id not in params:
+            emit(PURITY, spec.lineno,
+                 f"BlockSpec index map captures '{node.id}' from the "
+                 f"enclosing scope — index maps must be pure functions "
+                 f"of the grid indices")
+        elif isinstance(node, ast.Call):
+            emit(PURITY, spec.lineno,
+                 "BlockSpec index map calls a function — the mapping "
+                 "must be a pure index expression")
+        elif isinstance(node, ast.Attribute):
+            emit(PURITY, spec.lineno,
+                 f"BlockSpec index map reads attribute '.{node.attr}' — "
+                 f"index maps must not touch external state")
+
+
+def _dim_names(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"
+
+
+def _check_vmem(call: ast.Call, specs, scratch, res: _Resolver,
+                emit) -> None:
+    total = 0
+    unresolved: List[str] = []
+    for spec in specs:
+        if not spec.args or not isinstance(spec.args[0],
+                                           (ast.Tuple, ast.List)):
+            continue
+        elems = 1
+        for dim in spec.args[0].elts:
+            v = res.resolve(dim)
+            if v is None:
+                unresolved.append(_dim_names(dim))
+            else:
+                elems *= max(v, 1)
+        total += elems * BLOCK_ELEM_BYTES * DOUBLE_BUFFER
+    for sc in scratch:
+        if not (_attr_is(sc.func, "VMEM") and sc.args
+                and isinstance(sc.args[0], (ast.Tuple, ast.List))):
+            continue
+        elems = 1
+        for dim in sc.args[0].elts:
+            v = res.resolve(dim)
+            if v is None:
+                unresolved.append(_dim_names(dim))
+            else:
+                elems *= max(v, 1)
+        nbytes = 4
+        if len(sc.args) > 1 and isinstance(sc.args[1], ast.Attribute):
+            nbytes = _DTYPE_BYTES.get(sc.args[1].attr, 4)
+        total += elems * nbytes
+    if unresolved:
+        emit(VMEM, call.lineno,
+             f"cannot bound the VMEM working set: block dims "
+             f"{sorted(set(unresolved))} are not statically resolvable "
+             f"— annotate allow(pallas-vmem) with the runtime bound")
+    elif total > VMEM_BUDGET_BYTES:
+        emit(VMEM, call.lineno,
+             f"per-step VMEM working set ≈{total / 2**20:.1f} MiB "
+             f"(tiles double-buffered + scratch) exceeds the "
+             f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB/core budget")
+
+
+def _kernel_def(call: ast.Call, enclosing, tree):
+    """FunctionDef of the kernel (first arg, through functools.partial)
+    and the set of names bound statically by partial keywords."""
+    if not call.args:
+        return None
+    k = call.args[0]
+    if isinstance(k, ast.Call) and (_attr_is(k.func, "partial")
+                                    or (isinstance(k.func, ast.Name)
+                                        and k.func.id == "partial")):
+        k = k.args[0] if k.args else None
+    if not isinstance(k, ast.Name):
+        return None
+    scopes = ([enclosing] if enclosing is not None else []) + [tree]
+    for scope in scopes:
+        for node in ast.walk(scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == k.id:
+                return node
+    return None
+
+
+def _check_branching(kernel, emit) -> None:
+    tainted: Set[str] = {a.arg for a in
+                         kernel.args.posonlyargs + kernel.args.args}
+    # fixpoint taint propagation through simple assignments and
+    # pl.program_id results
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(kernel):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            src_tainted = False
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    src_tainted = True
+                elif isinstance(sub, ast.Call) and \
+                        _attr_is(sub.func, "program_id"):
+                    src_tainted = True
+            if not src_tainted:
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name) and sub.id not in tainted:
+                        tainted.add(sub.id)
+                        changed = True
+    for node in ast.walk(kernel):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        for sub in ast.walk(node.test):
+            hit = None
+            if isinstance(sub, ast.Name) and sub.id in tainted:
+                hit = sub.id
+            elif isinstance(sub, ast.Call) and _attr_is(sub.func,
+                                                        "program_id"):
+                hit = "pl.program_id(...)"
+            if hit:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                emit(BRANCH, node.lineno,
+                     f"Python '{kind}' on tracer-derived value "
+                     f"'{hit}' inside kernel '{kernel.name}' — use "
+                     f"@pl.when / jnp.where instead")
+                break
+
+
+def check(tree: ast.AST, emit) -> None:
+    enclosing = _enclosing_map(tree)
+    seen_kernels: Set[int] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _attr_is(node.func, "pallas_call")):
+            continue
+        fn = enclosing.get(id(node))
+        grid_spec = _resolve_grid_spec(node, fn)
+        specs = _block_specs(node, grid_spec)
+        for spec in specs:
+            _check_purity(spec, emit)
+        res = _Resolver(tree, fn)
+        _check_vmem(node, specs, _scratch_shapes(node, grid_spec), res,
+                    emit)
+        kernel = _kernel_def(node, fn, tree)
+        if kernel is not None and id(kernel) not in seen_kernels:
+            seen_kernels.add(id(kernel))
+            _check_branching(kernel, emit)
