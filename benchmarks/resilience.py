@@ -17,7 +17,20 @@ design rests on:
   validation on top of the bare engine ingest.  It rides the host path
   that the async runtime already hides under the device step, but it must
   stay small enough not to widen the Plan window materially.
+
+* **degraded-mode cost** — ``resilience/health/*``: an EP rank stops
+  reporting heartbeats mid-run; the health tracker classifies it *lost*
+  after its patience window, the forced replan evacuates every resident
+  expert (slot swaps + forced shadows), and the remaining fleet carries
+  the remaining load.  ``steps_to_rebalance`` counts iterations from
+  fault onset to the first all-layers-evacuated placement (detection
+  patience + at most one plan cadence); ``faulted_settled`` is the
+  modeled step time after settling vs the clean run — the acceptance
+  bound is ≤ 1.05x (the dead rank's tokens leave with it, so the
+  survivors' per-device load is essentially unchanged).
 """
+import json
+import os
 import time
 
 import numpy as np
@@ -27,6 +40,9 @@ from repro.core import (EngineConfig, GatingTrace, HardwareSpec,
 from repro.train.runtime import run_plan
 
 from .simlib import SimConfig, fault_sweep
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_resilience.json")
 
 
 def run(iters: int = 30):
@@ -43,7 +59,104 @@ def run(iters: int = 30):
     rows.append(("resilience/sim/sanitized_layers", 0.0, bad["sanitized"]))
     rows.append(("resilience/sim/stale_frac", 0.0, bad["stale_frac"]))
     rows.extend(watchdog_rows(iters))
+    health = health_sweep(iters=max(iters, 24))
+    rows.append(("resilience/health/steps_to_rebalance", 0.0,
+                 health["steps_to_rebalance"]))
+    rows.append(("resilience/health/evacuated_experts", 0.0,
+                 health["evacuated"]))
+    rows.append(("resilience/health/clean_step",
+                 health["clean_step_s"] * 1e6, 1.0))
+    rows.append(("resilience/health/faulted_settled",
+                 health["faulted_step_s"] * 1e6,
+                 health["step_ratio_settled"]))
+    payload = json.dumps({"health": health}, indent=1)
+    try:
+        # idempotent write: deterministic seeded arithmetic, so re-runs
+        # must not dirty the committed trajectory seed
+        if (not os.path.exists(_JSON_PATH)
+                or open(_JSON_PATH).read() != payload):
+            with open(_JSON_PATH, "w") as fh:
+                fh.write(payload)
+    except OSError:
+        pass                     # read-only checkout: rows still stand
     return rows
+
+
+def health_sweep(iters: int = 30, *, fault_at: int = 8, lost: int = 3):
+    """Device-loss episode on a 16-device engine with health tracking:
+    seeded gating traces drive ``observe``; from ``fault_at`` on, device
+    ``lost`` misses every heartbeat (NaN step time) and produces no
+    tokens.  Returns the settled faulted-vs-clean modeled step-time
+    ratio and the iterations from onset to full evacuation.
+
+    The cluster profile uses NVLink/ICI-class links (100 GB/s): the
+    settled-ratio bound only holds where the forced evacuation shadows'
+    parameter broadcast hides under non-expert compute — on a 10 GB/s
+    fabric the planner (correctly) prices the broadcast as unhideable
+    and a lost rank costs ~1.5x, which is a property of the fabric, not
+    of the evacuation machinery this sweep measures."""
+    D, E, L = 16, 32, 4
+    hw = HardwareSpec.from_model_dims(1024, 2048, bandwidth=100e9,
+                                      flops_per_s=35e12, num_ffn_mats=2,
+                                      t_fnec=1e-3, t_bnec=2e-3)
+
+    def engine():
+        ec = EngineConfig(num_experts=E, num_devices=D, num_moe_layers=L,
+                          s_max=8, n=2, scheduled=True,
+                          enable_health=True)
+        return ProProphetEngine(ec, hw)
+
+    traces = [GatingTrace(D, E, 1024, skew=0.25, drift=0.05, seed=li)
+              for li in range(L)]
+    counts = [np.stack([t.step() for t in traces]) for _ in range(iters)]
+
+    def step_time(eng, c):
+        t = 0.0
+        for li in range(L):
+            pl = eng.placements[li]
+            H, R = pl.compute_loads(c[li])
+            t += eng.perf.layer_time_scheduled(R, H, pl.num_shadowed,
+                                               eng.cfg.n)
+        return t
+
+    clean = engine()
+    t_clean = []
+    for c in counts:
+        clean.observe_timings(np.full(D, 1.0))
+        clean.observe(list(c))
+        t_clean.append(step_time(clean, c))
+
+    bad = engine()
+    t_bad = []
+    rebalanced_at = None
+    probe = np.ones((D, E))
+    for i, c in enumerate(counts):
+        times = np.full(D, 1.0)
+        if i >= fault_at:
+            times[lost] = np.nan      # missed heartbeat
+            c = c.copy()
+            c[:, lost, :] = 0.0       # the dead rank produces no tokens
+        bad.observe_timings(times)
+        bad.observe(list(c))
+        t_bad.append(step_time(bad, c))
+        if rebalanced_at is None and i >= fault_at and all(
+                pl.compute_loads(probe)[1][lost] == 0.0
+                for pl in bad.placements):
+            rebalanced_at = i
+    assert rebalanced_at is not None, "lost rank was never evacuated"
+    settle = rebalanced_at + 1
+    clean_s = float(np.mean(t_clean[settle:]))
+    bad_s = float(np.mean(t_bad[settle:]))
+    return {
+        "devices": D, "experts": E, "layers": L, "iters": iters,
+        "fault_at": fault_at, "lost_device": lost,
+        "detected_summary": bad.health_summary(),
+        "steps_to_rebalance": float(rebalanced_at - fault_at),
+        "evacuated": float(bad.evacuations),
+        "clean_step_s": clean_s,
+        "faulted_step_s": bad_s,
+        "step_ratio_settled": bad_s / max(clean_s, 1e-12),
+    }
 
 
 def watchdog_rows(iters: int = 30):

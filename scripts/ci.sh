@@ -7,7 +7,14 @@
 #                             (tests/test_resilience.py — plan watchdog
 #                             fallback/rollback, transactional relocation,
 #                             atomic/torn checkpoints, and the 12-step
-#                             loss-bit-identity acceptance run)
+#                             loss-bit-identity acceptance run — plus
+#                             tests/test_health.py for the degraded-mode
+#                             fault kinds: straggler and
+#                             degraded_throughput re-price the perf model
+#                             and drain hot experts off slow ranks;
+#                             device_loss classifies the rank lost and
+#                             force-evacuates every resident expert
+#                             through the ordinary relocation path)
 #   scripts/ci.sh --forecast  predictive-planning lane only: the load
 #                             forecaster + plan-cadence backoff +
 #                             prefetched relocation (tests/
@@ -83,7 +90,7 @@ if [[ "${1:-}" == "--fast" ]]; then
   set -- -m "not slow" "$@"
 elif [[ "${1:-}" == "--faults" ]]; then
   shift
-  set -- tests/test_resilience.py "$@"
+  set -- tests/test_resilience.py tests/test_health.py "$@"
 elif [[ "${1:-}" == "--forecast" ]]; then
   shift
   set -- tests/test_forecast.py "$@"

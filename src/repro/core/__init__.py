@@ -10,6 +10,7 @@ from .distribution import (LocalityTracker, ModelLocalityTracker,
                            routing_matrix_from_assignments)
 from .engine import EngineConfig, ProProphetEngine
 from .forecast import PHASES, LoadForecaster
+from .health import HEALTH_STATES, DeviceHealthTracker
 from .perfmodel import (V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS, HardwareSpec,
                         PerfModel)
 from .placement import ExpertPlacement, default_owner, shadow_to_all, traditional
@@ -25,7 +26,7 @@ __all__ = [
     "LocalityTracker", "ModelLocalityTracker", "balance_degree",
     "distribution_similarity", "imbalance_ratio", "rb_ratio",
     "routing_matrix_from_assignments", "EngineConfig", "ProProphetEngine",
-    "LoadForecaster", "PHASES",
+    "LoadForecaster", "PHASES", "DeviceHealthTracker", "HEALTH_STATES",
     "HardwareSpec", "PerfModel", "V5E_PEAK_FLOPS", "V5E_HBM_BW", "V5E_ICI_BW",
     "ExpertPlacement", "default_owner", "shadow_to_all", "traditional",
     "GreedyPlanner", "LocalityPlanner", "PlanResult", "BlockCosts",

@@ -36,11 +36,13 @@ edge.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import guard, scheduler
+from .health import DeviceHealthTracker
 from .perfmodel import HardwareSpec, PerfModel
 from .placement import ExpertPlacement, default_owner, traditional
 from .planner import GreedyPlanner, LocalityPlanner, PlanResult
@@ -107,6 +109,25 @@ class EngineConfig:
     # the device allocates.
     top_k: int = 2
     capacity_factor: float = 1.25
+    # Elastic degraded mode (core/health.py): a DeviceHealthTracker
+    # classifies every EP rank healthy | degraded | lost from measured
+    # per-step timings, the perf model prices work against the resulting
+    # per-device throughput factors, and a lost rank's experts are
+    # force-evacuated onto the survivors through the ordinary relocation
+    # path.  Off by default — the disabled path never touches the
+    # tracker, so pricing stays bit-identical to the homogeneous model.
+    # REPRO_HEALTH=0/1 and REPRO_EVACUATE=0/1 override.
+    enable_health: bool = False
+    health_decay: float = 0.5
+    degraded_threshold: float = 1.5
+    lost_threshold: float = 4.0
+    health_patience: int = 3
+    health_recovery_patience: int = 3
+    enable_evacuation: bool = True
+    # Capacity-aware placement scoring: > 0 prices plans with per-device
+    # buffer truncation at this capacity factor (dropped-token penalty);
+    # 0 keeps the dense accounting bit-identical to prior planners.
+    planner_capacity_factor: float = 0.0
 
 
 class ProProphetEngine:
@@ -126,27 +147,50 @@ class ProProphetEngine:
     # prophetlint: shared(_placements, _version, _dirty, _cache, _last_g,
     #   _obs_count, _costs_cache, _device_slots, last_results,
     #   _plan_interval, _since_plan, plans_executed, plans_skipped,
-    #   last_plan_info): owner=observe, _plan_layer, snapshot, restore,
+    #   last_plan_info, health, _health_dirty, evacuations): owner=observe,
+    #   _plan_layer, snapshot, restore,
     #   cancel_migrations, step_arrays, pending_relocation, relocations,
     #   mark_relocated, reset_layout, last_counts, _layer_costs,
     #   _all_layer_costs, chunk_plan, chunk_stats, predicted_times,
-    #   placements, placements_version, _device_layout
+    #   placements, placements_version, _device_layout, observe_timings,
+    #   health_summary, degraded_devices, lost_devices
 
     def __init__(self, cfg: EngineConfig, hw: HardwareSpec):
         from repro import flags
         self.cfg = cfg
         self.perf = PerfModel(hw, cfg.num_devices, trans_mode=cfg.trans_mode)
         flag = flags.migration()
-        self.migration_enabled = (cfg.enable_migration if flag is None
-                                  else flag)
+        migration = cfg.enable_migration if flag is None else flag
         window = cfg.migrate_window or max(float(cfg.replan_interval), 50.0)
+        hflag = flags.health()
+        self.health_enabled = cfg.enable_health if hflag is None else hflag
+        eflag = flags.evacuate()
+        evacuate = cfg.enable_evacuation if eflag is None else eflag
+        # Evacuation re-homes experts via slot swaps, which only take
+        # effect through the relocation exchange — so the execution
+        # machinery (pending_relocation tracking, plan-from-current
+        # layout) must be live even when voluntary migration is off.
+        # The greedy *strategy* still follows the migration policy: a
+        # shadow-only planner stays shadow-only for voluntary moves.
+        self.migration_enabled = migration or (self.health_enabled
+                                               and evacuate)
+        self.health = DeviceHealthTracker(
+            cfg.num_devices, decay=cfg.health_decay,
+            degraded_threshold=cfg.degraded_threshold,
+            lost_threshold=cfg.lost_threshold,
+            patience=cfg.health_patience,
+            recovery_patience=cfg.health_recovery_patience)
+        self._health_dirty = False
+        self.evacuations = 0
         greedy = GreedyPlanner(
             self.perf, n=cfg.n, alpha=cfg.alpha, s_max=cfg.s_max,
             scheduled=cfg.scheduled,
-            strategy="both" if self.migration_enabled else "shadow",
+            strategy="both" if migration else "shadow",
             migrate_window=window,
             migrate_state_factor=cfg.migrate_state_factor,
-            migrate_hysteresis=cfg.migrate_hysteresis)
+            migrate_hysteresis=cfg.migrate_hysteresis,
+            capacity_factor=cfg.planner_capacity_factor,
+            evacuate=evacuate)
         self.planners: List[LocalityPlanner] = [
             LocalityPlanner(greedy, cfg.num_devices, cfg.num_experts,
                             replan_interval=cfg.replan_interval,
@@ -219,36 +263,57 @@ class ProProphetEngine:
             self.cfg.num_experts, self.cfg.num_devices, {},
             tuple(int(s) for s in self._device_slots[li]))
 
-    def _plan_layer(self, li: int, g: Array):
+    def _plan_layer(self, li: int, g: Array,
+                    deadline: Optional[float] = None):
         """One layer's planning step → (placement, PlanResult|None,
         planned?).  Layers are independent, so these may run on a thread
         pool (each call touches only its own layer's slots of the
-        per-layer state lists)."""
+        per-layer state lists).  ``deadline`` (absolute
+        ``time.perf_counter()``) is threaded into the greedy search's
+        cooperative cancellation checkpoints."""
         from .baselines import fastermoe_plan, topk_policy
         if self.cfg.policy == "pro_prophet":
             planner = self.planners[li]
             current = (self._device_layout(li) if self.migration_enabled
                        else None)
+            if (self.health_enabled and current is not None
+                    and self.perf.lost_devices()):
+                # Plan from the last *planned* layout, not the executed
+                # one: evacuation swaps land one dispatch later, and
+                # re-deriving them from the stale device layout against
+                # drifted counts would pick a new partner — one churned
+                # relocation per layer per step, forever.  The planned
+                # layout already contains the pending swaps, so the
+                # evacuation pass is idempotent; the relocation delta is
+                # still computed against the executed slots.
+                current = self._placements[li]
+            # A health transition (degraded/lost/recovered) re-prices the
+            # perf model, so every layer must re-search immediately —
+            # evacuation lands within one plan cadence of detection.
+            force = True if self._health_dirty else None
             if not self.forecast_enabled:
-                res, planned = planner.step(g, current=current)
+                res, planned = planner.step(g, replan=force, current=current,
+                                            deadline=deadline)
                 return res.placement, res, planned
             fc = self.forecasters[li]
             phase = fc.update(g)
             base = max(1, self.cfg.replan_interval)
-            if phase != "stable":
-                # Reset the backoff the moment the layer drifts; a
-                # fluctuating layer additionally replans immediately.
+            if phase != "stable" or force:
+                # Reset the backoff the moment the layer drifts (or the
+                # fleet's health changes); a fluctuating layer
+                # additionally replans immediately.
                 self._plan_interval[li] = base
             self._since_plan[li] += 1
             due = (planner.current is None
+                   or bool(force)
                    or phase == "fluctuating"
                    or self._since_plan[li] >= self._plan_interval[li])
             g_plan = fc.predict() if due else None
             res, planned = planner.step(g, replan=due, g_plan=g_plan,
-                                        current=current)
+                                        current=current, deadline=deadline)
             if planned:
                 self._since_plan[li] = 0
-                if phase == "stable":
+                if phase == "stable" and not force:
                     self._plan_interval[li] = min(
                         self._plan_interval[li] * 2, self.cadence_max)
             return res.placement, res, planned
@@ -283,15 +348,28 @@ class ProProphetEngine:
         self._obs_count += 1
         if self.cfg.policy == "none":
             return
+        from repro import flags
+        dl_ms = flags.plan_deadline_ms()
+        deadline = (time.perf_counter() + dl_ms / 1e3) if dl_ms > 0 else None
         if pool is not None:
-            futures = [pool.submit(self._plan_layer, li, g)
+            futures = [pool.submit(self._plan_layer, li, g, deadline)
                        for li, g in enumerate(per_layer_g)]
-            results = [f.result() for f in futures]
+            # Drain every future before re-raising: rolling back while
+            # sibling layers are still planning would race the restore.
+            results, first_err = [], None
+            for f in futures:
+                try:
+                    results.append(f.result())
+                except Exception as e:  # noqa: BLE001 — re-raised below
+                    if first_err is None:
+                        first_err = e
+            if first_err is not None:
+                raise first_err
         else:
-            results = [self._plan_layer(li, g)
+            results = [self._plan_layer(li, g, deadline)
                        for li, g in enumerate(per_layer_g)]
         changed = False
-        planned = stable = 0
+        planned = stable = evacuated = 0
         for li, (placement, res, ran) in enumerate(results):
             if res is not None:
                 self.last_results[li] = res
@@ -303,13 +381,18 @@ class ProProphetEngine:
                 self._placements[li] = placement
                 self._dirty.add(li)
                 changed = True
+                if res is not None:
+                    evacuated += int(getattr(res, "num_evacuated", 0))
         self.plans_executed += planned
         self.plans_skipped += len(results) - planned
+        self.evacuations += evacuated
         self.last_plan_info = {"planned": planned,
                                "skipped": len(results) - planned,
-                               "stable": stable}
+                               "stable": stable,
+                               "evacuated": evacuated}
         if changed:
             self._version += 1
+        self._health_dirty = False
 
     @property
     def placements(self) -> List[ExpertPlacement]:
@@ -348,6 +431,14 @@ class ProProphetEngine:
             "since_plan": list(self._since_plan),
             "plan_counters": (self.plans_executed, self.plans_skipped),
             "last_plan_info": dict(self.last_plan_info),
+            # Degraded mode: tracker EMAs/states, the pending-replan
+            # flag, and the perf model's raw factor vector all advance
+            # with the plan they priced — a rejected plan rolls them
+            # back together so retry re-prices identically.
+            "health": self.health.snapshot(),
+            "health_dirty": self._health_dirty,
+            "perf_factors": self.perf.raw_factors(),
+            "evacuations": self.evacuations,
         }
 
     def restore(self, snap: Dict[str, Any]) -> None:
@@ -371,6 +462,10 @@ class ProProphetEngine:
         self._since_plan = list(snap["since_plan"])
         self.plans_executed, self.plans_skipped = snap["plan_counters"]
         self.last_plan_info = dict(snap["last_plan_info"])
+        self.health.restore(snap["health"])
+        self._health_dirty = snap["health_dirty"]
+        self.perf.set_device_factors(snap["perf_factors"])
+        self.evacuations = snap["evacuations"]
 
     def cancel_migrations(self) -> int:
         """Drop every planned owner re-layout: rebuild each migrated
@@ -396,6 +491,47 @@ class ProProphetEngine:
         if reset:
             self._version += 1
         return reset
+
+    # ------------------------------------------------------------------
+    # Device health: elastic degraded mode
+    # ------------------------------------------------------------------
+    def observe_timings(self, times: Array) -> None:
+        """Feed the per-device step-time vector measured for the last
+        step (seconds; NaN = missed heartbeat).  Dispatch-thread mutator:
+        call only in the planner-idle window between ``wait()`` and
+        ``submit()`` — the same slot ``cancel_migrations`` uses.
+
+        On a health-state transition the perf model is re-priced with the
+        tracker's throughput factors and ``_health_dirty`` forces every
+        layer to replan at its next observe, so evacuation/rebalancing
+        lands within one plan cadence of detection.  No-op unless health
+        tracking is enabled (``enable_health`` / ``REPRO_HEALTH``)."""
+        if not self.health_enabled:
+            return
+        before = self.health.states()
+        self.health.update(np.asarray(times, dtype=np.float64))
+        after = self.health.states()
+        if not self.health.all_healthy:
+            # Degraded factors track the measured ratio continuously, so
+            # re-price every update while any device is off nominal.
+            self.perf.set_device_factors(self.health.factors())
+        elif after != before:
+            # Full recovery: clear the factors entirely so pricing
+            # returns to the exact homogeneous fast path.
+            self.perf.set_device_factors(None)
+        if after != before:
+            self._health_dirty = True
+
+    def health_summary(self) -> str:
+        """Compact fleet health string for logging: ``"healthy"`` or
+        e.g. ``"degraded:1,3 lost:2"``."""
+        return self.health.summary()
+
+    def degraded_devices(self) -> List[int]:
+        return self.health.degraded()
+
+    def lost_devices(self) -> List[int]:
+        return self.health.lost()
 
     def step_arrays(self) -> Dict[str, Array]:
         """Stacked static-shape placement arrays for the jitted step.

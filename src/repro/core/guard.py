@@ -31,6 +31,7 @@ Failures here degrade throughput, not correctness: placements only decide
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -48,6 +49,14 @@ class CountsError(GuardError):
 
 class PlacementInvariantError(GuardError):
     """A planner output violated the placement invariants."""
+
+
+class PlanDeadlineError(GuardError):
+    """The greedy search hit its cooperative deadline and aborted
+    mid-move-loop (``REPRO_PLAN_DEADLINE_MS``).  Unlike the watchdog's
+    post-hoc check — which can only *reject* an overrunning plan after
+    it completes — this unsticks the planner worker itself: the search
+    checks the deadline token every candidate move and bails."""
 
 
 # ---------------------------------------------------------------------------
@@ -81,9 +90,30 @@ def _clean_layer(g: Array) -> bool:
     return bool(np.isfinite(g).all() and not (g < 0).any())
 
 
+@dataclasses.dataclass
+class SanitizeReport:
+    """What :func:`sanitize_counts` repaired: ``repaired`` lists every
+    layer index that was replaced, ``uniform`` the subset that had no
+    clean fallback and fell back to the all-ones prior — the
+    first-observation path (no last-good counts yet) lands every dirty
+    layer there, and the watchdog's plan event surfaces the split so an
+    operator can tell "repaired from history" apart from "planned
+    blind"."""
+
+    repaired: List[int] = dataclasses.field(default_factory=list)
+    uniform: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def num_sanitized(self) -> int:
+        return len(self.repaired)
+
+    def __bool__(self) -> bool:
+        return bool(self.repaired)
+
+
 def sanitize_counts(counts: Array,
                     fallback: Optional[Sequence[Optional[Array]]] = None
-                    ) -> Tuple[List[Array], int]:
+                    ) -> Tuple[List[Array], SanitizeReport]:
     """Split stacked ``[L, D, E]`` device counts into clean per-layer
     float64 routing matrices.
 
@@ -91,9 +121,11 @@ def sanitize_counts(counts: Array,
     its ``fallback`` layer (the engine's last-good observation) when that
     is itself clean, else by a uniform all-ones matrix — planning from a
     flat distribution is a safe no-op-ish prior, planning from NaNs is
-    corruption.  Returns ``(layers, num_sanitized)``.  A count array of
-    the wrong rank cannot be per-layer repaired and raises
-    :class:`CountsError` (the watchdog turns that into a plan fallback).
+    corruption.  Returns ``(layers, report)`` where the
+    :class:`SanitizeReport` names the repaired layers and which of them
+    fell back to uniform.  A count array of the wrong rank cannot be
+    per-layer repaired and raises :class:`CountsError` (the watchdog
+    turns that into a plan fallback).
     """
     counts = np.asarray(counts)
     if counts.ndim != 3:
@@ -101,13 +133,13 @@ def sanitize_counts(counts: Array,
             f"stacked routing counts must be [L, D, E], got shape "
             f"{counts.shape}")
     layers: List[Array] = []
-    sanitized = 0
+    report = SanitizeReport()
     for li in range(counts.shape[0]):
         g = counts[li].astype(np.float64)
         if _clean_layer(g):
             layers.append(g)
             continue
-        sanitized += 1
+        report.repaired.append(li)
         fb = None
         if fallback is not None and li < len(fallback):
             fb = fallback[li]
@@ -115,7 +147,8 @@ def sanitize_counts(counts: Array,
             layers.append(np.asarray(fb, dtype=np.float64).copy())
         else:
             layers.append(np.ones_like(g))
-    return layers, sanitized
+            report.uniform.append(li)
+    return layers, report
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +217,26 @@ def validate_engine(engine) -> None:
             raise PlacementInvariantError(
                 f"modeled time '{k}' is not finite: {v}")
     validate_forecast(engine)
+    validate_health(engine)
+
+
+def validate_health(engine) -> None:
+    """Device-health state invariants: every tracked state is a known
+    label and the throughput factors are finite in [0, 1] — a corrupted
+    tracker would otherwise mis-price every heterogeneity-aware plan.
+    Engines without the health surface (test stubs) are skipped."""
+    tracker = getattr(engine, "health", None)
+    if tracker is None:
+        return
+    from .health import HEALTH_STATES
+    for d, s in enumerate(tracker.states()):
+        if s not in HEALTH_STATES:
+            raise PlacementInvariantError(
+                f"device {d}: unknown health state {s!r}")
+    f = tracker.factors()
+    if not (np.isfinite(f).all() and (f >= 0.0).all() and (f <= 1.0).all()):
+        raise PlacementInvariantError(
+            f"device health factors outside [0, 1]: {f}")
 
 
 def validate_forecast(engine) -> None:

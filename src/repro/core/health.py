@@ -1,0 +1,222 @@
+"""Per-device health tracking: EMA step timings + deviation classification.
+
+Pro-Prophet balances *token* skew across homogeneous devices; the
+degraded-mode runtime also has to survive *hardware* skew — stragglers,
+thermally throttled chips, and outright device loss.  FlexMoE (PAPERS.md)
+frames placement as continuously adjusted resource allocation, under
+which a degraded device is simply a device whose effective throughput
+dropped — so the existing planner/relocation machinery is the natural
+evacuation engine, it just needs a health signal.
+
+This module is that signal.  A :class:`DeviceHealthTracker` ingests one
+per-device timing vector per training step (seconds for the device's
+slice of the step; ``NaN``/``inf`` = missed heartbeat), smooths each
+device with the same EMA form as :class:`repro.core.forecast
+.LoadForecaster`, and scores each device by its **deviation ratio** —
+smoothed time over the fleet median.  Classification mirrors the
+forecaster's patience-gated phase detection:
+
+* ``healthy``  — ratio below ``degraded_threshold``.
+* ``degraded`` — ratio ≥ ``degraded_threshold`` for ``patience``
+  consecutive steps.  Carries a throughput ``factor`` = median/ema in
+  (0, 1): the device runs at that fraction of fleet speed.  The perf
+  model prices its work accordingly and the planner drains hot experts
+  away from it.
+* ``lost``     — ratio ≥ ``lost_threshold`` for ``patience`` steps, or
+  ``patience`` consecutive missed heartbeats (non-finite timings).  The
+  planner treats its capacity as zero and force-evacuates its experts.
+
+Recovery is symmetric: ``recovery_patience`` consecutive calm, finite
+observations return a degraded or lost device to ``healthy`` — a
+transient straggle must not permanently shrink the fleet.
+
+``snapshot``/``restore`` capture the full per-device state as a plain
+tuple (forecaster style) so the PR 6 watchdog can roll the tracker back
+together with the placements it classified for.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+HEALTH_STATES = ("healthy", "degraded", "lost")
+
+# Lost devices report factor 0.0; consumers that need finite modeled
+# times (PerfModel) clamp to this floor instead.
+FACTOR_FLOOR = 1e-3
+
+
+class DeviceHealthTracker:
+    """EMA over per-device step timings + patience-gated health states.
+
+    ``decay`` is the weight kept on history (same convention as the load
+    forecaster); thresholds are on the *ratio* of a device's smoothed
+    timing to the fleet median, so they are invariant to the absolute
+    step time; ``patience`` gates demotion (healthy→degraded→lost) and
+    ``recovery_patience`` gates promotion back to healthy.
+    """
+
+    def __init__(self, num_devices: int, *, decay: float = 0.5,
+                 degraded_threshold: float = 1.5,
+                 lost_threshold: float = 4.0,
+                 patience: int = 3, recovery_patience: int = 3):
+        assert 0.0 <= decay < 1.0, decay
+        assert 1.0 < degraded_threshold <= lost_threshold, (
+            degraded_threshold, lost_threshold)
+        self.D = int(num_devices)
+        self.decay = float(decay)
+        self.degraded_threshold = float(degraded_threshold)
+        self.lost_threshold = float(lost_threshold)
+        self.patience = max(1, int(patience))
+        self.recovery_patience = max(1, int(recovery_patience))
+        self._ema: Optional[Array] = None       # smoothed per-device time
+        self._state: List[str] = ["healthy"] * self.D
+        self._factor = np.ones(self.D)          # relative speed in (0, 1]
+        self._hot = np.zeros(self.D, dtype=np.int64)     # consecutive slow
+        self._very_hot = np.zeros(self.D, dtype=np.int64)  # consecutive lost-grade
+        self._calm = np.zeros(self.D, dtype=np.int64)    # consecutive calm
+        self._missed = np.zeros(self.D, dtype=np.int64)  # consecutive NaN
+        self.updates = 0
+
+    # -- ingestion -------------------------------------------------------
+    def update(self, times: Array) -> Tuple[str, ...]:
+        """Ingest one per-device step-timing vector; returns the states.
+
+        Non-finite entries are missed heartbeats: the device's EMA is
+        left untouched and its miss streak advances (``patience``
+        consecutive misses ⇒ ``lost``).  Finite entries reset the miss
+        streak and update the EMA with the forecaster's fixed-point form
+        ``ema + (1 − decay)·(t − ema)``.
+        """
+        t = np.asarray(times, dtype=np.float64)
+        assert t.shape == (self.D,), (t.shape, self.D)
+        self.updates += 1
+        finite = np.isfinite(t)
+        if self._ema is None:
+            self._ema = np.where(finite, t, np.nan)
+        else:
+            ema = self._ema
+            self._ema = np.where(
+                finite & np.isfinite(ema),
+                ema + (1.0 - self.decay) * (t - ema),
+                np.where(finite, t, ema))
+        self._missed = np.where(finite, 0, self._missed + 1)
+
+        # Fleet reference: median smoothed time over devices that are
+        # reporting (finite EMA) — a dead device must not drag the
+        # reference toward its own pathology.
+        ok = np.isfinite(self._ema)
+        ref = float(np.median(self._ema[ok])) if ok.any() else 0.0
+        for d in range(self.D):
+            self._step_device(d, ref, bool(finite[d]))
+        return self.states()
+
+    def _step_device(self, d: int, ref: float, finite: bool) -> None:
+        if self._missed[d] >= self.patience:
+            self._state[d] = "lost"
+            self._factor[d] = 0.0
+            self._hot[d] = self._very_hot[d] = self._calm[d] = 0
+            return
+        if not finite:
+            return  # missed beat below the loss patience: hold state
+        ema = float(self._ema[d])
+        ratio = ema / ref if (ref > 0.0 and np.isfinite(ema)) else 1.0
+        if ratio >= self.degraded_threshold:
+            self._hot[d] += 1
+            self._very_hot[d] = (self._very_hot[d] + 1
+                                 if ratio >= self.lost_threshold else 0)
+            self._calm[d] = 0
+            if self._very_hot[d] >= self.patience:
+                self._state[d] = "lost"
+                self._factor[d] = 0.0
+            elif self._hot[d] >= self.patience:
+                if self._state[d] != "lost":
+                    self._state[d] = "degraded"
+                    self._factor[d] = min(1.0, 1.0 / ratio)
+            elif self._state[d] == "degraded":
+                # already degraded: track the factor while it stays hot
+                self._factor[d] = min(1.0, 1.0 / ratio)
+        else:
+            self._hot[d] = self._very_hot[d] = 0
+            if self._state[d] == "healthy":
+                self._calm[d] = 0
+                self._factor[d] = 1.0
+            else:
+                self._calm[d] += 1
+                if self._calm[d] >= self.recovery_patience:
+                    self._state[d] = "healthy"
+                    self._factor[d] = 1.0
+                    self._calm[d] = 0
+
+    def mark_lost(self, device: int) -> None:
+        """Out-of-band loss signal (e.g. a failed collective): classify
+        immediately instead of waiting out the heartbeat patience."""
+        d = int(device)
+        assert 0 <= d < self.D, d
+        self._state[d] = "lost"
+        self._factor[d] = 0.0
+        self._missed[d] = self.patience
+        self._hot[d] = self._very_hot[d] = self._calm[d] = 0
+
+    # -- queries ---------------------------------------------------------
+    def states(self) -> Tuple[str, ...]:
+        return tuple(self._state)
+
+    def state_of(self, device: int) -> str:
+        return self._state[int(device)]
+
+    def factors(self) -> Array:
+        """Per-device relative throughput in [0, 1]: 1 healthy, the
+        measured fraction for degraded, 0 for lost.  A copy — safe to
+        hand to the perf model."""
+        return self._factor.copy()
+
+    def degraded(self) -> List[int]:
+        return [d for d in range(self.D) if self._state[d] == "degraded"]
+
+    def lost(self) -> List[int]:
+        return [d for d in range(self.D) if self._state[d] == "lost"]
+
+    def healthy(self) -> List[int]:
+        return [d for d in range(self.D) if self._state[d] == "healthy"]
+
+    @property
+    def all_healthy(self) -> bool:
+        return all(s == "healthy" for s in self._state)
+
+    def summary(self) -> str:
+        """Compact ``healthy`` / ``degraded:1,3`` / ``lost:2`` label for
+        telemetry lines."""
+        if self.all_healthy:
+            return "healthy"
+        parts = []
+        deg, lost = self.degraded(), self.lost()
+        if deg:
+            parts.append("degraded:" + ",".join(str(d) for d in deg))
+        if lost:
+            parts.append("lost:" + ",".join(str(d) for d in lost))
+        return " ".join(parts)
+
+    # -- watchdog rollback ----------------------------------------------
+    def snapshot(self) -> Tuple:
+        """Full-state capture for ``ProProphetEngine.snapshot``: a
+        rejected plan must not leave health classifications advanced past
+        the placements they were computed for."""
+        return (None if self._ema is None else self._ema.copy(),
+                tuple(self._state), self._factor.copy(),
+                self._hot.copy(), self._very_hot.copy(),
+                self._calm.copy(), self._missed.copy(), self.updates)
+
+    def restore(self, snap: Tuple) -> None:
+        ema, state, factor, hot, very_hot, calm, missed, updates = snap
+        self._ema = None if ema is None else ema.copy()
+        self._state = list(state)
+        self._factor = factor.copy()
+        self._hot = hot.copy()
+        self._very_hot = very_hot.copy()
+        self._calm = calm.copy()
+        self._missed = missed.copy()
+        self.updates = updates

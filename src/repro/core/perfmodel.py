@@ -20,9 +20,11 @@ residuals: ``T_PTrans = max(0, T_Trans − T_FEC − T_FNEC)`` and
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import List, Literal, Optional, Tuple
 
 import numpy as np
+
+from .health import FACTOR_FLOOR
 
 Array = np.ndarray
 TransMode = Literal["p2p", "ring"]
@@ -46,6 +48,10 @@ class HardwareSpec:
     hbm_bandwidth: per-device HBM bandwidth [bytes/s] — prices the
                    HBM-bound token-permutation legs (t_dispatch /
                    t_combine), which move memory, not wire bytes
+    device_throughput: optional per-device throughput vector [tokens/s]
+                   for heterogeneous clusters — entry d is device d's
+                   expert compute throughput.  ``None`` (the default)
+                   keeps the scalar homogeneous model bit-identical.
     """
 
     bandwidth: float
@@ -55,6 +61,7 @@ class HardwareSpec:
     t_fnec: float = 0.0
     t_bnec: float = 0.0
     hbm_bandwidth: float = V5E_HBM_BW
+    device_throughput: Optional[Tuple[float, ...]] = None
 
     @staticmethod
     def from_model_dims(d_model: int, d_ff: int, *,
@@ -81,23 +88,94 @@ class HardwareSpec:
 
 
 class PerfModel:
-    """Closed-form layer-time estimator (paper eqs. 1–6, 8)."""
+    """Closed-form layer-time estimator (paper eqs. 1–6, 8).
+
+    The homogeneous model is the paper's; two extensions make it
+    heterogeneity-aware (ISSUE 10): ``HardwareSpec.device_throughput``
+    prices each device's expert compute at its own speed, and
+    :meth:`set_device_factors` overlays the health tracker's relative
+    throughput multipliers (degraded devices run slower, ``lost`` ones
+    are clamped to :data:`repro.core.health.FACTOR_FLOOR` so modeled
+    times stay finite while :meth:`lost_devices` reports them for the
+    planner's evacuation pass).  With neither in effect every term takes
+    the original scalar path, so homogeneous plans stay bit-identical.
+    """
 
     def __init__(self, hw: HardwareSpec, num_devices: int,
                  trans_mode: TransMode = "p2p"):
         self.hw = hw
         self.D = int(num_devices)
         self.trans_mode = trans_mode
+        dt = hw.device_throughput
+        if dt is not None:
+            dt = np.asarray(dt, dtype=np.float64)
+            assert dt.shape == (self.D,), (dt.shape, self.D)
+            assert (dt > 0).all(), "device_throughput must be positive"
+        self._base_speeds: Optional[Array] = dt
+        self._factors: Optional[Array] = None      # clamped multipliers
+        self._raw_factors: Optional[Array] = None  # as given (0 = lost)
+
+    # -- device health / heterogeneity ------------------------------------
+    def set_device_factors(self, factors: Optional[Array]) -> None:
+        """Overlay per-device health multipliers in [0, 1] (``None``
+        clears).  Factor 0 marks a *lost* device: its modeled speed is
+        clamped to ``FACTOR_FLOOR`` (times must stay finite for the
+        watchdog's invariant sweep) and it is reported by
+        :meth:`lost_devices` so the planner zeroes its capacity."""
+        if factors is None:
+            self._factors = self._raw_factors = None
+            return
+        f = np.asarray(factors, dtype=np.float64)
+        assert f.shape == (self.D,), (f.shape, self.D)
+        self._raw_factors = f.copy()
+        if (f >= 1.0).all():
+            self._factors = None  # all healthy: exact homogeneous path
+        else:
+            self._factors = np.clip(f, FACTOR_FLOOR, 1.0)
+
+    def raw_factors(self) -> Optional[Array]:
+        """Copy of the unclipped health-factor vector as last set (None
+        when homogeneous) — snapshot/restore currency: feeding it back
+        through :meth:`set_device_factors` reproduces pricing exactly."""
+        return None if self._raw_factors is None else self._raw_factors.copy()
+
+    def lost_devices(self) -> List[int]:
+        """Devices whose health factor is 0 (evacuation targets)."""
+        if self._raw_factors is None:
+            return []
+        return [int(d) for d in np.where(self._raw_factors <= 0.0)[0]]
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when per-device speeds differ (hardware vector or health
+        factors) — the planner switches to weighted load balancing."""
+        return self._base_speeds is not None or self._factors is not None
+
+    def device_speeds(self) -> Array:
+        """Effective per-device expert throughput ``[D]`` [tokens/s]."""
+        base = (self._base_speeds if self._base_speeds is not None
+                else np.full(self.D, self.hw.throughput))
+        return base if self._factors is None else base * self._factors
 
     # -- eq. 1 ------------------------------------------------------------
     def t_a2a(self, R: Array) -> float:
         R = np.asarray(R, dtype=np.float64)
-        return float(R.max()) * self.hw.input_bytes / self.hw.bandwidth
+        if self._factors is None:
+            return float(R.max()) * self.hw.input_bytes / self.hw.bandwidth
+        # A degraded device also drains its a2a ingress slower: price
+        # device d's receive leg at factor-scaled bandwidth.
+        per = R * self.hw.input_bytes / (self.hw.bandwidth * self._factors)
+        return float(per.max())
 
     # -- eq. 2 ------------------------------------------------------------
     def t_fec(self, H: Array) -> float:
         H = np.asarray(H, dtype=np.float64)
-        return float(H.max()) / self.hw.throughput
+        if not self.heterogeneous:
+            return float(H.max()) / self.hw.throughput
+        # Straggler-bound over per-device speeds.  Division is monotone
+        # and correctly rounded, so under uniform speeds this equals the
+        # scalar path bit-for-bit.
+        return float((H / self.device_speeds()).max())
 
     # -- eq. 3 ------------------------------------------------------------
     def t_bec(self, H: Array) -> float:

@@ -190,7 +190,8 @@ class ExpertPlacement:
         return prev.slots[self.slot_expert].astype(np.int32)
 
     # -- load computation (Replace_Inputs in Algorithm 1) ----------------
-    def compute_loads(self, g: Array) -> Tuple[Array, Array]:
+    def compute_loads(self, g: Array, *, capacity=None,
+                      return_dropped: bool = False):
         """Given routing matrix ``G[d, e]``, return ``(H, R)``.
 
         ``H[i]``: tokens *computed* on device i.  ``R[i]``: tokens
@@ -201,6 +202,18 @@ class ExpertPlacement:
         a2a destination.  (When an expert is shadowed, tokens on
         non-holder devices still go to the owner — the shadow only absorbs
         the load already resident on the shadow devices, paper Fig. 6b.)
+
+        ``capacity`` (scalar or per-device ``[D]`` vector) enables
+        capacity-aware accounting: each (computing device, expert)
+        *bucket* — the unit the dispatch kernel's capacity buffer
+        truncates at — is clamped to the device's cap and the overflow
+        is **dropped**, matching what the hardware would actually
+        compute.  ``H`` then sums the truncated buckets; ``R`` stays
+        untruncated (the wire cost is paid before the buffer drops the
+        token).  A per-device cap of 0 models an evacuated/lost rank
+        that computes nothing.  With ``return_dropped`` the per-device
+        dropped-token vector is returned as a third element; capacity
+        ``None`` keeps the dense accounting bit-identical.
         """
         g = np.asarray(g, dtype=np.float64)
         D, E = self.num_devices, self.num_experts
@@ -209,9 +222,27 @@ class ExpertPlacement:
         holds = p.T  # [D, E] — device d holds expert e
         local = g * holds  # tokens computed where they live
         remote = g * (~holds)  # tokens shipped to the owner
-        H = local.sum(axis=1)
-        H += np.bincount(self.owner, weights=remote.sum(axis=0), minlength=D)
-        R = np.bincount(self.owner, weights=remote.sum(axis=0), minlength=D)
+        owner = self.owner
+        remote_per_expert = remote.sum(axis=0)
+        R = np.bincount(owner, weights=remote_per_expert, minlength=D)
+        if capacity is None:
+            H = local.sum(axis=1)
+            H += np.bincount(owner, weights=remote_per_expert, minlength=D)
+            if return_dropped:
+                return H, R, np.zeros(D)
+            return H, R
+        cap = np.asarray(capacity, dtype=np.float64)
+        if cap.ndim == 0:
+            cap = np.full(D, float(cap))
+        assert cap.shape == (D,), (cap.shape, D)
+        # bucket[d, e]: tokens computed at device d for expert e — the
+        # local holders' share plus, on the owner, everything remote.
+        bucket = local.copy()
+        bucket[owner, np.arange(E)] += remote_per_expert
+        capped = np.minimum(bucket, cap[:, None])
+        H = capped.sum(axis=1)
+        if return_dropped:
+            return H, R, (bucket - capped).sum(axis=1)
         return H, R
 
     # -- device-side (traced) form ---------------------------------------

@@ -36,11 +36,13 @@ placement in between.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import time
+from typing import FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
 from .distribution import LocalityTracker
+from .guard import PlanDeadlineError
 from .perfmodel import PerfModel
 from .placement import ExpertPlacement, traditional
 
@@ -55,6 +57,8 @@ class PlanResult:
     steps_examined: int          # greedy iterations executed
     balanced: bool               # eq. 7 satisfied at exit
     num_migrations: int = 0      # experts re-homed by this placement
+    num_evacuated: int = 0       # experts force-moved off lost devices
+    dropped_tokens: float = 0.0  # capacity-truncated tokens (scoring on)
 
     @property
     def predicted_speedup(self) -> float:
@@ -74,7 +78,9 @@ class GreedyPlanner:
                  s_max: int = 8, scheduled: bool = False,
                  strategy: str = "shadow", migrate_window: float = 50.0,
                  migrate_state_factor: float = 3.0,
-                 migrate_hysteresis: float = 1.0):
+                 migrate_hysteresis: float = 1.0,
+                 capacity_factor: float = 0.0,
+                 evacuate: bool = True):
         self.perf = perf
         self.n = int(n)
         self.alpha = float(alpha)
@@ -93,21 +99,65 @@ class GreedyPlanner:
         # (the gate is then vacuous); > 1 suppresses epsilon-win moves
         # that would churn the weights for negligible balance gain.
         self.migrate_hysteresis = float(migrate_hysteresis)
+        # Capacity-aware scoring (ROADMAP carry-over): > 0 prices each
+        # candidate by the *truncated* loads — per-bucket cap =
+        # capacity_factor · I / E, zero on lost devices — plus a
+        # dropped-token penalty, so the planner sees the drop it
+        # actually creates.  0 keeps the dense scoring bit-identical.
+        self.capacity_factor = float(capacity_factor)
+        # Force-evacuate experts owned by lost devices (health tracker
+        # → perf.set_device_factors → perf.lost_devices()).
+        self.evacuate = bool(evacuate)
 
-    def _balanced(self, H: Array, total_inputs: float, num_experts: int) -> bool:
-        return (H.max() - H.min()) < self.alpha * total_inputs / num_experts
+    def _balanced(self, H: Array, total_inputs: float, num_experts: int,
+                  w: Optional[Array] = None,
+                  alive: Optional[Array] = None) -> bool:
+        """eq. 7, generalized: with per-device slowness weights ``w``
+        the condition balances *time*, not tokens, and lost devices
+        (``alive`` mask False) are excluded from the spread."""
+        Hv = H if w is None else H * w
+        if alive is not None:
+            Hv = Hv[alive]
+        if Hv.size == 0:  # every device lost — nothing left to balance
+            return True
+        return (Hv.max() - Hv.min()) < self.alpha * total_inputs / num_experts
+
+    def _slowness(self) -> Optional[Array]:
+        """Per-device time-per-token weight, normalized to mean 1 so the
+        eq. 7 tolerance keeps its units; None on homogeneous fleets (the
+        unweighted, bit-identical path).  The mean is taken over
+        *surviving* devices only: a lost rank's ~1/FACTOR_FLOOR inverse
+        speed would otherwise dominate the normalizer and dilute every
+        healthy weight to ≈0, making the weighted balance condition
+        vacuously true (the planner would stop balancing the survivors
+        exactly when a loss makes balancing matter most)."""
+        if not getattr(self.perf, "heterogeneous", False):
+            return None
+        speeds = self.perf.device_speeds()
+        inv = 1.0 / speeds
+        lost = getattr(self.perf, "lost_devices", lambda: [])()
+        if lost:
+            alive = np.ones(inv.shape[0], dtype=bool)
+            alive[list(lost)] = False
+            if alive.any():
+                return inv / inv[alive].mean()
+        return inv / inv.mean()
 
     def _migrate_candidate(self, cur: ExpertPlacement, e: int,
                            heavy_dev: int, H: Array,
                            tokens_per_expert: Array,
-                           migrated: set) -> Optional[Tuple[int, int]]:
+                           migrated: set,
+                           lost: FrozenSet[int] = frozenset()
+                           ) -> Optional[Tuple[int, int]]:
         """(dst, partner) for re-homing expert ``e``: the lightest device
         that owns a swappable partner (not ``e``, not already moved, not
         shadowed — its shadow set would need pruning), partner = its
-        coldest expert.  None when no device qualifies."""
+        coldest expert.  ``H`` may be slowness-weighted so "lightest"
+        means fastest-to-drain; ``lost`` devices never receive work.
+        None when no device qualifies."""
         owner = cur.owner
         for dst in (int(d) for d in np.argsort(H, kind="stable")):
-            if dst == heavy_dev:
+            if dst == heavy_dev or dst in lost:
                 continue
             partners = [int(p) for p in np.where(owner == dst)[0]
                         if int(p) != e and int(p) not in migrated
@@ -117,15 +167,99 @@ class GreedyPlanner:
                     tokens_per_expert[partners]))])
         return None
 
-    def plan(self, g: Array, *, current: Optional[ExpertPlacement] = None
-             ) -> PlanResult:
+    def _evacuate(self, base: ExpertPlacement, g: Array,
+                  lost: FrozenSet[int],
+                  prev: Optional[ExpertPlacement] = None,
+                  ) -> Tuple[ExpertPlacement, int, int]:
+        """Force-evacuate every expert owned by a lost device.
+
+        Per-device physical slot counts are static (the relocation
+        exchange's shape invariant), so a lost rank can never be left
+        with zero slots: each hot resident *swaps* with the globally
+        coldest expert on a healthy device (an ordinary
+        ``with_migration``, so it flows through the PR 7 prefetch path
+        as a normal relocation), then every expert still homed on a
+        lost rank — the swapped-in cold ones — is shadowed onto all
+        healthy devices so no remote token ever lands there
+        (``R[lost] == 0``; the shadow absorbs every non-resident
+        source).  Returns ``(placement, num_evacuated,
+        num_forced_shadows)``: ``num_evacuated`` counts residents
+        *newly* drained this plan (swaps plus first-time forced
+        shadows), so a settled replan reports zero while the first
+        evacuating plan is never silently empty even when every
+        resident is cold.
+        """
+        D, E = base.num_devices, base.num_experts
+        tokens_per_expert = g.sum(axis=0)
+        healthy = frozenset(range(D)) - lost
+        owner = base.owner
+        residents = sorted(
+            (int(e) for e in np.where(np.isin(owner, list(lost)))[0]),
+            key=lambda e: -tokens_per_expert[e])
+        num_evac = 0
+        used: set[int] = set(residents)
+        # Only *hot* residents (above fleet-mean tokens) are worth a real
+        # exchange — a cold resident is fully covered by the shadow pass
+        # below (every source computes its tokens locally, so the lost
+        # rank sees none of them either way).  Without this gate every
+        # replan under drift re-swaps the cold experts the previous
+        # evacuation parked on the lost rank against the step's new
+        # coldest, churning one relocation per layer per step forever.
+        hot_floor = float(tokens_per_expert.mean())
+        prev_shadows = dict(prev.shadows) if prev is not None else {}
+        for e in residents:
+            if healthy <= prev_shadows.get(e, frozenset()):
+                # Already evacuated by an earlier plan: the forced shadow
+                # from that plan covers every healthy source, so the
+                # resident is settled — re-swapping it against the
+                # current step's coldest expert would churn a relocation
+                # (and a placement change) on every replan under drift.
+                continue
+            if tokens_per_expert[e] <= hot_floor:
+                continue          # cold: the shadow pass covers it
+            owner_now = base.owner
+            cands = [p for p in range(E)
+                     if int(owner_now[p]) not in lost and p not in used]
+            if not cands:
+                break
+            partner = int(min(cands, key=lambda p: (tokens_per_expert[p], p)))
+            base = base.with_migration(e, int(owner_now[partner]), partner)
+            used.add(partner)
+            num_evac += 1
+        # Shadow whatever still lives on lost ranks (hottest first, the
+        # shadow-slot budget permitting) onto every healthy device.
+        owner_now = base.owner
+        stranded = sorted(
+            (int(e) for e in np.where(np.isin(owner_now, list(lost)))[0]),
+            key=lambda e: -tokens_per_expert[e])
+        forced = 0
+        for e in stranded[: self.s_max]:
+            if not (healthy <= prev_shadows.get(e, frozenset())):
+                num_evac += 1        # first time this resident is drained
+            base = base.with_shadow(e, healthy)
+            forced += 1
+        return base, num_evac, forced
+
+    def plan(self, g: Array, *, current: Optional[ExpertPlacement] = None,
+             deadline: Optional[float] = None) -> PlanResult:
         """Greedy search from ``current``'s slot layout (identity when
         None — the pre-migration behavior, bit-identical for the shadow
         strategy).  Migration moves are charged ``t_migrate`` only for
         *new* owner changes relative to ``current`` — moves the device
         already executed are free, which is what stops a replan from
         re-paying (and re-proposing) its own history every step.  Shadows
-        are re-decided from scratch each plan."""
+        are re-decided from scratch each plan.
+
+        Degraded-mode extensions: when the perf model reports *lost*
+        devices their experts are force-evacuated before the voluntary
+        search (:meth:`_evacuate`) and they are excluded from every move
+        target; on heterogeneous fleets heavy-device selection and the
+        eq. 7 balance condition run on slowness-weighted loads so hot
+        experts drain toward fast ranks.  ``deadline`` is an absolute
+        ``time.perf_counter()`` instant: the move loop checks it every
+        candidate and raises :class:`~repro.core.guard.PlanDeadlineError`
+        on overrun — cooperative cancellation, so a slow search unsticks
+        itself instead of being rejected post-hoc by the watchdog."""
         g = np.asarray(g, dtype=np.float64)
         D, E = g.shape
         assert D == self.perf.D, (D, self.perf.D)
@@ -134,6 +268,20 @@ class GreedyPlanner:
                      else self.perf.layer_time)
         shadow_on = self.strategy in ("shadow", "both")
         migrate_on = self.strategy in ("migrate", "both")
+        lost = frozenset(getattr(self.perf, "lost_devices", lambda: [])())
+        w = self._slowness()
+        alive = None
+        if lost:
+            alive = np.ones(D, dtype=bool)
+            alive[list(lost)] = False
+
+        def check_deadline(steps: int) -> None:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise PlanDeadlineError(
+                    f"greedy search overran its cooperative deadline "
+                    f"after {steps} candidate moves")
+
+        check_deadline(0)
 
         def score(R, H, s, m):
             t = eval_time(R, H, s, self.n)
@@ -143,17 +291,42 @@ class GreedyPlanner:
                     state_factor=self.migrate_state_factor)
             return t
 
+        cap_vec = None
+        if self.capacity_factor > 0.0:
+            cap_vec = np.full(D, self.capacity_factor * total_inputs / E)
+            if lost:
+                cap_vec[list(lost)] = 0.0
+            speeds_fn = getattr(self.perf, "device_speeds", None)
+            speed_mean = (float(np.mean(speeds_fn())) if speeds_fn is not None
+                          else float(self.perf.hw.throughput))
+
+        def eval_candidate(pl, R, H, s, m):
+            """Score one candidate.  Dense scoring uses the caller's
+            incrementally maintained loads; capacity scoring recomputes
+            the truncated loads from the placement (incremental updates
+            are invalid under per-bucket truncation) and charges each
+            dropped token one fleet-mean compute quantum."""
+            if cap_vec is None:
+                return score(R, H, s, m)
+            Hc, Rc, drop = pl.compute_loads(g, capacity=cap_vec,
+                                            return_dropped=True)
+            return score(Rc, Hc, s, m) + float(drop.sum()) / speed_mean
+
         base = traditional(E, D)
         if current is not None and current.slot_of is not None:
             base = ExpertPlacement(E, D, {}, current.slot_of)
+        num_evac = forced_shadows = 0
+        if lost and self.evacuate and len(lost) < D:
+            base, num_evac, forced_shadows = self._evacuate(
+                base, g, lost, prev=current)
         placement = base
         H, R = placement.compute_loads(g)
-        t_best = score(R, H, 0, 0)
-        if base.slot_of is None:
+        t_best = eval_candidate(placement, R, H, placement.num_shadowed, 0)
+        if base.slot_of is None and not base.shadows:
             baseline = t_best
         else:
             Ht, Rt = traditional(E, D).compute_loads(g)
-            baseline = score(Rt, Ht, 0, 0)
+            baseline = eval_candidate(traditional(E, D), Rt, Ht, 0, 0)
 
         used_devices: set[int] = set()
         # ("shadow", e, devs) | ("migrate", e, dst, partner)
@@ -163,14 +336,26 @@ class GreedyPlanner:
         # migrate move qualify) — the hysteresis gate's fallback.
         cnt_free, t_free = 0, t_best
         steps = 0
-        n_shadow = n_mig = 0
+        n_mig = 0
         migrated: set[int] = set()
         tokens_per_expert = g.sum(axis=0)
+        # Forced evacuation shadows occupy slots of the same static
+        # shadow budget the traced step packs (to_device_arrays), so the
+        # voluntary search gets what remains.
+        budget = max(0, self.s_max - forced_shadows)
 
         cur = placement
-        while not self._balanced(H, total_inputs, E) and len(moves) < self.s_max:
+        while (len(lost) < D
+               and not self._balanced(H, total_inputs, E, w, alive)
+               and len(moves) < budget):
             steps += 1
-            heavy_dev = int(np.argmax(H))
+            check_deadline(steps)
+            if w is None and not lost:
+                heavy_dev = int(np.argmax(H))
+            else:
+                Hsel = (H if w is None else H * w).copy()
+                Hsel[list(lost)] = -np.inf
+                heavy_dev = int(np.argmax(Hsel))
             if heavy_dev in used_devices:
                 break
             used_devices.add(heavy_dev)
@@ -189,34 +374,41 @@ class GreedyPlanner:
             if shadow_on:
                 # BottomK: exclude the n devices holding the fewest of e's
                 # tokens (never excluding the owner — it already has the
-                # params).
+                # params).  Lost devices never receive shadows.
                 order = np.argsort(g[:, e], kind="stable")
                 bottoms = [int(d) for d in order
                            if int(d) != heavy_dev][: self.n]
-                shadow_devs = frozenset(range(D)) - {heavy_dev} - set(bottoms)
-                # Replace_Inputs, incrementally: e was not previously
-                # shadowed, so exactly the tokens g[d, e] for d in
-                # shadow_devs move from remote-on-owner to local-on-d.
-                # O(|shadow_devs|) instead of a full O(D·E) compute_loads.
-                # With the "last" predictor g holds integral counts and the
-                # running sums match a fresh recomputation bit-for-bit;
-                # fractional g (the "ema" predictor) may drift by float
-                # rounding in the last ulp, which only matters on exact
-                # ties of the heuristic's comparisons.
-                own = int(owner[e])
-                sd = np.fromiter(shadow_devs, dtype=np.intp)
-                moved = g[sd, e]
-                H_sh, R_sh = H.copy(), R.copy()
-                H_sh[sd] += moved
-                tot = float(moved.sum())
-                H_sh[own] -= tot
-                R_sh[own] -= tot
-                t_sh = score(R_sh, H_sh, n_shadow + 1, n_mig)
-                cand = ("shadow", cur.with_shadow(e, shadow_devs),
-                        H_sh, R_sh, t_sh, shadow_devs)
+                shadow_devs = (frozenset(range(D)) - {heavy_dev}
+                               - set(bottoms) - lost)
+                if shadow_devs:
+                    # Replace_Inputs, incrementally: e was not previously
+                    # shadowed, so exactly the tokens g[d, e] for d in
+                    # shadow_devs move from remote-on-owner to local-on-d.
+                    # O(|shadow_devs|) instead of a full O(D·E)
+                    # compute_loads.
+                    # With the "last" predictor g holds integral counts
+                    # and the running sums match a fresh recomputation
+                    # bit-for-bit; fractional g (the "ema" predictor) may
+                    # drift by float rounding in the last ulp, which only
+                    # matters on exact ties of the heuristic's
+                    # comparisons.
+                    own = int(owner[e])
+                    sd = np.fromiter(shadow_devs, dtype=np.intp)
+                    moved = g[sd, e]
+                    H_sh, R_sh = H.copy(), R.copy()
+                    H_sh[sd] += moved
+                    tot = float(moved.sum())
+                    H_sh[own] -= tot
+                    R_sh[own] -= tot
+                    pl_sh = cur.with_shadow(e, shadow_devs)
+                    t_sh = eval_candidate(pl_sh, R_sh, H_sh,
+                                          cur.num_shadowed + 1, n_mig)
+                    cand = ("shadow", pl_sh, H_sh, R_sh, t_sh, shadow_devs)
             if migrate_on:
-                mg = self._migrate_candidate(cur, e, heavy_dev, H,
-                                             tokens_per_expert, migrated)
+                mg = self._migrate_candidate(cur, e, heavy_dev,
+                                             H if w is None else H * w,
+                                             tokens_per_expert, migrated,
+                                             lost)
                 if mg is not None:
                     dst, partner = mg
                     pl_mg = cur.with_migration(e, dst, partner)
@@ -238,7 +430,8 @@ class GreedyPlanner:
                                         - (tot_e - g[heavy_dev, e]))
                     R_mg[dst] += ((tot_e - g[dst, e])
                                   - (tot_p - g[dst, partner]))
-                    t_mg = score(R_mg, H_mg, pl_mg.num_shadowed, n_mig + 1)
+                    t_mg = eval_candidate(pl_mg, R_mg, H_mg,
+                                          pl_mg.num_shadowed, n_mig + 1)
                     if cand is None or t_mg < cand[4]:
                         cand = ("migrate", pl_mg, H_mg, R_mg, t_mg,
                                 (dst, partner))
@@ -247,7 +440,6 @@ class GreedyPlanner:
             kind, cur, H, R, t, payload = cand
             if kind == "shadow":
                 moves.append(("shadow", e, payload))
-                n_shadow += 1
             else:
                 dst, partner = payload
                 moves.append(("migrate", e, dst, partner))
@@ -281,14 +473,22 @@ class GreedyPlanner:
                 best = best.with_shadow(mv[1], mv[2])
             else:
                 best = best.with_migration(mv[1], mv[2], mv[3])
-        Hb, _ = best.compute_loads(g)
+        if cap_vec is None:
+            Hb, _ = best.compute_loads(g)
+            dropped = 0.0
+        else:
+            Hb, _, dropb = best.compute_loads(g, capacity=cap_vec,
+                                              return_dropped=True)
+            dropped = float(dropb.sum())
         return PlanResult(
             placement=best,
             predicted_time=t_best,
             baseline_time=baseline,
             steps_examined=steps,
-            balanced=self._balanced(Hb, total_inputs, E),
+            balanced=self._balanced(Hb, total_inputs, E, w, alive),
             num_migrations=best.num_migrated,
+            num_evacuated=num_evac,
+            dropped_tokens=dropped,
         )
 
 
@@ -338,7 +538,8 @@ class LocalityPlanner:
 
     def step(self, g_observed: Array, *, replan: Optional[bool] = None,
              g_plan: Optional[Array] = None,
-             current: Optional[ExpertPlacement] = None
+             current: Optional[ExpertPlacement] = None,
+             deadline: Optional[float] = None
              ) -> Tuple[PlanResult, bool]:
         """One observation with externally-driven cadence: the caller
         (the engine's forecast backoff) decides whether this observation
@@ -359,7 +560,8 @@ class LocalityPlanner:
         if due:
             g = (np.asarray(g_plan, dtype=np.float64) if g_plan is not None
                  else self.tracker.predict_next(self.predictor))
-            self._cached = self.greedy.plan(g, current=current)
+            self._cached = self.greedy.plan(g, current=current,
+                                            deadline=deadline)
         return self._cached, due
 
     def maybe_plan(self, g_observed: Array, *,

@@ -128,6 +128,35 @@ REPRO_PIN_NORM=1        Constrain rmsnorm outputs to P(batch, None, None)
                         so the TP backward all-reduces ONE bf16 cotangent
                         at the boundary instead of three f32 x-shaped
                         intermediates inside the norm's backward (§Perf).
+REPRO_HEALTH=0/1        Device health tracking (core/health.py): the
+                        engine ingests measured per-device step timings,
+                        classifies each EP rank healthy | degraded |
+                        lost (EMA ratio vs the fleet median, with
+                        patience), and re-prices the perf model with the
+                        resulting throughput factors so planning drains
+                        hot experts off slow ranks.  Unset ⇒ the
+                        EngineConfig.enable_health policy decides
+                        (default off; disabled never touches the tracker
+                        and pricing stays bit-identical to the
+                        homogeneous model).
+REPRO_EVACUATE=0/1      Expert evacuation: when a rank is classified
+                        *lost*, the planner force-moves its resident
+                        experts onto the survivors (slot swaps + shadows
+                        through the ordinary relocation path) before the
+                        voluntary balance search.  Unset ⇒ the
+                        EngineConfig.enable_evacuation policy decides
+                        (default on — only reachable when health
+                        tracking reports a lost device).
+REPRO_RELOC_RETRY_MAX=N  Bound on consecutive relocation-exchange
+                        retries when the failure is attributed to a
+                        degraded/lost device (default 3; the legacy
+                        retry-once policy applies when the fleet is
+                        healthy).  After N failed attempts the pending
+                        relocation is cancelled and the planner falls
+                        back to shadow-only balancing.
+REPRO_RELOC_BACKOFF=N   Steps to wait after a failed degraded-mode
+                        relocation attempt before retrying, doubled per
+                        consecutive failure (default 2).
 REPRO_SANITIZE=1        Runtime sanitizer mode (repro.train.sanitize):
                         arms jax.transfer_guard("disallow") around the
                         trainer's step dispatch (any implicit host↔device
@@ -260,6 +289,40 @@ def reloc_prefetch():
     synchronously at dispatch)."""
     v = _flag("REPRO_RELOC_PREFETCH", "")
     return None if v == "" else v == "1"
+
+
+def health():
+    """REPRO_HEALTH=0/1: override the engine's device-health-tracking
+    policy (EngineConfig.enable_health).  Unset ⇒ None (the engine
+    config decides; default off — the disabled path never consults the
+    tracker and keeps pricing bit-identical)."""
+    v = _flag("REPRO_HEALTH", "")
+    return None if v == "" else v == "1"
+
+
+def evacuate():
+    """REPRO_EVACUATE=0/1: override the planner's expert-evacuation
+    policy (EngineConfig.enable_evacuation).  Unset ⇒ None (the engine
+    config decides; default on — only reachable when health tracking
+    reports a lost device)."""
+    v = _flag("REPRO_EVACUATE", "")
+    return None if v == "" else v == "1"
+
+
+def reloc_retry_max() -> int:
+    """REPRO_RELOC_RETRY_MAX: consecutive relocation-exchange retries
+    allowed when the failure is attributed to a degraded/lost device
+    (default 3).  See the module docstring."""
+    v = _flag("REPRO_RELOC_RETRY_MAX", "")
+    return max(1, int(v)) if v else 3
+
+
+def reloc_backoff() -> int:
+    """REPRO_RELOC_BACKOFF: base steps to hold off after a failed
+    degraded-mode relocation attempt, doubled per consecutive failure
+    (default 2).  See the module docstring."""
+    v = _flag("REPRO_RELOC_BACKOFF", "")
+    return max(1, int(v)) if v else 2
 
 
 def norm_bf16() -> bool:

@@ -35,7 +35,29 @@ site (kind)          effect at the hook
                        digest check must catch), ``'abort'`` abandons the
                        temp directory before the atomic rename (a partial
                        ``restore_latest`` must skip).
+``straggler``          multiplies device ``payload['device']`` (default 0)'s
+                       reported step time by ``payload['factor']``
+                       (default 2.0) for ``payload['steps']`` (default 5)
+                       consecutive timing observations, then clears — the
+                       health tracker must classify it degraded and the
+                       planner must drain hot experts toward fast ranks,
+                       and it must recover once the episode ends.
+``degraded_throughput``  like ``straggler`` but *persistent*: device
+                       ``payload['device']`` reports
+                       ``payload['factor']``× (default 2.0) step times
+                       from occurrence ``at`` onwards — steady-state
+                       heterogeneity-aware planning.
+``device_loss``        device ``payload['device']`` stops reporting (its
+                       timing entry becomes NaN — a missed heartbeat)
+                       from occurrence ``at`` onwards: the tracker must
+                       classify it *lost* after its patience window and
+                       the planner must evacuate every resident expert.
 ===================  =====================================================
+
+The three timing sites share one hook (``device_timings``): the trainer
+passes the measured per-device step-time vector through it every step,
+and all three site counters advance together, so ``at`` is the training
+step the episode starts at.
 
 Everything is deterministic: the schedule is explicit, per-site counters
 advance exactly once per hook reach, and the corruption positions come
@@ -63,7 +85,8 @@ import numpy as np
 Array = np.ndarray
 
 KINDS = ("planner_exception", "slow_plan", "corrupt_counts",
-         "fail_relocation", "torn_checkpoint")
+         "fail_relocation", "torn_checkpoint",
+         "straggler", "degraded_throughput", "device_loss")
 
 
 class InjectedFault(RuntimeError):
@@ -99,6 +122,9 @@ class FaultInjector:
         self.rng = np.random.default_rng(seed)
         self._counters: Dict[str, int] = defaultdict(int)
         self.fired: List[Tuple[str, int]] = []
+        # Live timing episodes (straggler countdowns, persistent
+        # degradation/loss) started by device_timings.
+        self._timing_effects: List[Dict] = []
 
     def _take(self, kind: str) -> Optional[Fault]:
         """Advance the site counter; return the scheduled fault for this
@@ -157,6 +183,42 @@ class FaultInjector:
         """The checkpoint-save hook: the caller simulates the returned
         fault's crash mode (``truncate`` | ``abort``), or nothing."""
         return self._take("torn_checkpoint")
+
+    def device_timings(self, times: Array) -> Array:
+        """The fleet-health hook: perturb the measured per-device step
+        times before the health tracker sees them.  All three timing
+        sites advance together once per call, so a fault's ``at`` is the
+        timing observation (≈ training step) its episode starts at.
+        Effects persist across calls: a ``straggler`` inflates its
+        device's time for ``steps`` observations then clears,
+        ``degraded_throughput`` inflates forever, ``device_loss`` reports
+        NaN (missed heartbeat) forever."""
+        out = np.array(times, dtype=np.float64, copy=True)
+        for kind in ("straggler", "degraded_throughput", "device_loss"):
+            f = self._take(kind)
+            if f is None:
+                continue
+            self._timing_effects.append({
+                "kind": kind,
+                "device": int(f.payload.get("device", 0)),
+                "factor": float(f.payload.get("factor", 2.0)),
+                "left": (int(f.payload.get("steps", 5))
+                         if kind == "straggler" else -1),
+            })
+        keep = []
+        for eff in self._timing_effects:
+            d = eff["device"]
+            if eff["kind"] == "device_loss":
+                out[d] = np.nan
+            else:
+                out[d] *= eff["factor"]
+                if eff["left"] > 0:
+                    eff["left"] -= 1
+                    if eff["left"] == 0:
+                        continue          # straggler episode over
+            keep.append(eff)
+        self._timing_effects = keep
+        return out
 
 
 # ---------------------------------------------------------------------------

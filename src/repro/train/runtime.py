@@ -92,6 +92,14 @@ class StepStats:
     # rollback, and rollbacks declared persistent (migration cancelled).
     relocation_retries: int = 0
     relocation_persistent: int = 0
+    # Degraded-mode runtime: fleet health at this step's dispatch
+    # ("healthy" or the tracker's compact degraded/lost label), device
+    # counts per state, and experts force-evacuated off lost ranks by
+    # this step's plan.
+    health_state: str = "healthy"
+    degraded_devices: int = 0
+    lost_devices: int = 0
+    evacuations: int = 0
 
     @property
     def hidden_frac(self) -> float:
@@ -128,6 +136,10 @@ class StepStats:
         if self.plans_skipped:
             extra += (f" plan_skips={self.plans_skipped}"
                       f" stable={self.stable_layers}")
+        if self.health_state != "healthy":
+            extra += f" health={self.health_state.replace(' ', '+')}"
+        if self.evacuations:
+            extra += f" evacuated={self.evacuations}"
         return (f"step {self.step:5d} loss {self.loss:.4f} "
                 f"({avg_step:.3f}s/it){extra}")
 
@@ -160,6 +172,10 @@ class OverlapTelemetry:
         self.stable_layers = 0
         self.relocation_retries = 0
         self.relocation_persistent = 0
+        # Degraded-mode totals: steps dispatched with a non-healthy
+        # fleet, and experts force-evacuated off lost ranks.
+        self.degraded_steps = 0
+        self.evacuations = 0
 
     def record(self, *, plan: float, step: float, exposed: float,
                upload: float = 0.0, comm_hidden: float = 0.0,
@@ -200,6 +216,9 @@ class OverlapTelemetry:
                                        + stats.relocation_failures)
         self.plans_skipped += stats.plans_skipped
         self.stable_layers += stats.stable_layers
+        self.evacuations += stats.evacuations
+        if stats.health_state != "healthy":
+            self.degraded_steps += 1
         self.relocation_retries += stats.relocation_retries
         if stats.relocation_persistent:
             self.relocation_persistent += stats.relocation_persistent
@@ -245,6 +264,9 @@ class OverlapTelemetry:
             "stable_layers": float(self.stable_layers),
             "relocation_retries": float(self.relocation_retries),
             "relocation_persistent": float(self.relocation_persistent),
+            # Degraded-mode runtime totals.
+            "degraded_steps": float(self.degraded_steps),
+            "evacuations": float(self.evacuations),
         }
 
 
@@ -388,16 +410,23 @@ class PlanEvent:
     # engine rolled back to the last-good placements.  ``failure`` names
     # why (planner_exception | invariant | deadline | bad_counts |
     # worker_crash); ``sanitized_layers`` counts routing-count layers the
-    # sanitizer had to repair before observe.
+    # sanitizer had to repair before observe, ``uniform_layers`` the
+    # subset that had no clean fallback and planned from the uniform
+    # prior (the first-observation path).
     ok: bool = True
     failure: str = ""
     sanitized_layers: int = 0
+    uniform_layers: int = 0
     # Predictive planning: how the forecast cadence backoff split this
     # observe across layers (planned + skipped = num_moe_layers for
     # engines with the forecast surface; all zero for stubs).
     planned_layers: int = 0
     skipped_layers: int = 0
     stable_layers: int = 0
+    # Degraded-mode runtime: fleet health label after this observe and
+    # experts force-evacuated off lost ranks by it (stubs: defaults).
+    health_state: str = "healthy"
+    evacuations: int = 0
 
 
 def counts_to_layers(counts: Array) -> List[Array]:
@@ -439,7 +468,7 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
 
     t0 = time.perf_counter()
     inj = _faults.active()
-    sanitized = 0
+    sanitized = uniform = 0
     failure = ""
     try:
         # prophetlint: allow(host-sync): intentional — this is the Plan
@@ -460,7 +489,9 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
         counts = inj.corrupt_counts(counts)
     last_good = getattr(engine, "last_counts", lambda: None)()
     try:
-        layers, sanitized = guard.sanitize_counts(counts, fallback=last_good)
+        layers, report = guard.sanitize_counts(counts, fallback=last_good)
+        sanitized = report.num_sanitized
+        uniform = len(report.uniform)
     except guard.CountsError:
         t2 = time.perf_counter()
         return PlanEvent(plan_time=t2 - t1, fetch_time=t1 - t0,
@@ -484,6 +515,12 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
         engine.observe(layers, pool=layer_pool)
         if snap is not None:   # full engines expose the invariant surface
             guard.validate_engine(engine)
+    except guard.PlanDeadlineError:
+        # Cooperative cancellation: the greedy search aborted itself
+        # mid-move-loop (REPRO_PLAN_DEADLINE_MS) — same rollback as the
+        # post-hoc deadline below, but the worker is already unstuck.
+        _rollback()
+        failure = "deadline"
     except guard.PlacementInvariantError:
         _rollback()
         failure = "invariant"
@@ -506,9 +543,13 @@ def run_plan(engine, counts_device, layer_pool=None) -> PlanEvent:
                      version=engine.placements_version,
                      ok=not failure, failure=failure,
                      sanitized_layers=sanitized,
+                     uniform_layers=uniform,
                      planned_layers=int(info.get("planned", 0)),
                      skipped_layers=int(info.get("skipped", 0)),
-                     stable_layers=int(info.get("stable", 0)))
+                     stable_layers=int(info.get("stable", 0)),
+                     health_state=getattr(engine, "health_summary",
+                                          lambda: "healthy")(),
+                     evacuations=int(info.get("evacuated", 0)))
 
 
 class PlanPipeline:

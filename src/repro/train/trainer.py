@@ -134,6 +134,9 @@ class _Pending:
     relocation_failures: int = 0 # exchanges rolled back at this dispatch
     relocation_retries: int = 0  # rollbacks scheduled for a retry
     relocation_persistent: int = 0  # rollbacks declared persistent
+    health_state: str = "healthy"   # fleet health label at dispatch
+    degraded_devices: int = 0
+    lost_devices: int = 0
 
 
 @dataclasses.dataclass
@@ -166,6 +169,8 @@ class Trainer:
         self._want_stage = None      # gather to stage after the dispatch
         self._reloc_hold = False     # dispatch on the held (old) arrays
         self._reloc_attempts = 0     # consecutive failed exchanges
+        self._reloc_cooldown = 0     # dispatches to hold before a retry
+        self._t_last_dispatch = None  # previous dispatch instant (health)
         if self.engine is not None:
             # The engine's device width is the single source of truth the
             # packed placement arrays are shaped with; it must match the
@@ -241,6 +246,39 @@ class Trainer:
                               extra=extra)
         return state
 
+    def _observe_timings(self, now: float) -> None:
+        """Feed the engine's device health tracker the step-time proxy
+        for the interval since the previous dispatch — broadcast to every
+        EP rank (a uniform vector can never trip the relative-ratio
+        classifier, so noise-free runs stay exactly healthy) and then
+        perturbed per-device by any installed fault injector
+        (``device_timings``: straggler / degraded_throughput /
+        device_loss).  Runs in the planner-idle window before
+        ``_maybe_relocate`` so a health transition's forced replan and
+        evacuation land at this step's plan."""
+        if self.engine is None or not getattr(self.engine,
+                                              "health_enabled", False):
+            return
+        if self._t_last_dispatch is None:
+            return
+        dt = max(now - self._t_last_dispatch, 1e-9)
+        times = np.full(self.engine.cfg.num_devices, dt, dtype=np.float64)
+        from repro.testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None:
+            times = inj.device_timings(times)
+        self.engine.observe_timings(times)
+
+    def _health_snapshot(self) -> tuple:
+        """(label, #degraded, #lost) for the step's telemetry."""
+        if self.engine is None:
+            return "healthy", 0, 0
+        summary = getattr(self.engine, "health_summary", None)
+        if summary is None:
+            return "healthy", 0, 0
+        return (summary(), len(self.engine.degraded_devices()),
+                len(self.engine.lost_devices()))
+
     def _maybe_relocate(self, state: TrainState) -> tuple:
         """Execute a pending owner re-layout before the dependent
         dispatch, transactionally: fingerprint the touched expert slabs,
@@ -273,6 +311,14 @@ class Trainer:
             self._want_stage = None
             self._reloc_hold = False
             self._reloc_attempts = 0
+            self._reloc_cooldown = 0
+            return state, out
+        if self._reloc_cooldown > 0:
+            # Degraded-mode backoff: an exchange attributed to a sick
+            # device failed recently — keep dispatching on the held (old)
+            # arrays until the cooldown elapses, then retry.
+            self._reloc_cooldown -= 1
+            self._reloc_hold = True
             return state, out
         if self._prefetch:
             return self._relocate_prefetched(state, gather, out)
@@ -342,15 +388,39 @@ class Trainer:
         except Exception:
             self._staged = None
 
+    def _reloc_suspect(self) -> bool:
+        """True when the pending relocation touches a degraded/lost
+        device — the failure is then attributed to the sick endpoint
+        rather than the exchange itself, and the bounded retry/backoff
+        policy applies instead of retry-once."""
+        if self.engine is None or not getattr(self.engine,
+                                              "health_enabled", False):
+            return False
+        suspect = set(self.engine.degraded_devices())
+        suspect.update(self.engine.lost_devices())
+        if not suspect:
+            return False
+        return any(src in suspect or dst in suspect
+                   for _, _, src, dst in self.engine.relocations())
+
     def _reloc_failure(self, state: TrainState, out: RelocOutcome) -> tuple:
-        """Handle one rolled-back exchange under the retry policy."""
+        """Handle one rolled-back exchange under the retry policy: a
+        healthy fleet gets the legacy retry-once; a failure attributed to
+        a degraded/lost device gets up to ``REPRO_RELOC_RETRY_MAX``
+        attempts with ``REPRO_RELOC_BACKOFF``-step exponential backoff
+        (the sick endpoint may come back, and evacuation *needs* the
+        exchange to eventually land)."""
         out.failures = 1
         self._reloc_attempts += 1
-        if self._reloc_attempts <= 1:
+        limit = flags.reloc_retry_max() if self._reloc_suspect() else 1
+        if self._reloc_attempts <= limit:
             # Transient: keep the plan, dispatch this step on the held
-            # (old) arrays, re-attempt at the next dispatch.
+            # (old) arrays, re-attempt after the cooldown elapses.
             out.retries = 1
             self._reloc_hold = True
+            if limit > 1:
+                self._reloc_cooldown = (flags.reloc_backoff()
+                                        * 2 ** (self._reloc_attempts - 1))
             return state, out
         # Persistent: the state is untouched (pre-exchange); bring the
         # device back to the home layout if an earlier migration had
@@ -358,6 +428,7 @@ class Trainer:
         out.persistent = 1
         self._reloc_attempts = 0
         self._reloc_hold = False
+        self._reloc_cooldown = 0
         self._staged = None
         self._want_stage = None
         home = self.engine.reset_layout()
@@ -415,6 +486,10 @@ class Trainer:
             stable_layers=ev.stable_layers if ev else 0,
             relocation_retries=pending.relocation_retries,
             relocation_persistent=pending.relocation_persistent,
+            health_state=pending.health_state,
+            degraded_devices=pending.degraded_devices,
+            lost_devices=pending.lost_devices,
+            evacuations=ev.evacuations if ev else 0,
         )
 
     def _chunks_for_dispatch(self) -> tuple:
@@ -446,11 +521,15 @@ class Trainer:
             # bump) must land before arrays_for_dispatch so the dispatch
             # runs with weights matching its expert_slot arrays.  A held
             # relocation pins the old arrays instead — the staged
-            # exchange commits at the next dispatch.
+            # exchange commits at the next dispatch.  Health first: a
+            # transition forces the plan below to evacuate/rebalance.
+            self._observe_timings(time.perf_counter())
             state, reloc = self._maybe_relocate(state)
+            health, n_deg, n_lost = self._health_snapshot()
             placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
             chunks, chunk_stats = self._chunks_for_dispatch()
             t_dispatch = time.perf_counter()
+            self._t_last_dispatch = t_dispatch
             # prophetlint: bounded(a2a_chunks): quantized to
             #   EngineConfig.a2a_chunk_candidates by _chunks_for_dispatch
             with sanitize.dispatch_guard():
@@ -468,7 +547,7 @@ class Trainer:
                                cache.last_upload_time, cache.version,
                                cache.fingerprint, plan, chunks, chunk_stats,
                                reloc.moved, reloc.failures, reloc.retries,
-                               reloc.persistent)
+                               reloc.persistent, health, n_deg, n_lost)
             self._emit(self._stats_for(pending, loss, time.perf_counter()),
                        history, t0, log_every, log_fn, stats_sink, telemetry)
         return state, history
@@ -500,10 +579,13 @@ class Trainer:
                 # precedes arrays_for_dispatch), and the chunk choice.
                 state = self._maybe_checkpoint(state, step, ckpt_dir,
                                                ckpt_every, ckpt_keep)
+                self._observe_timings(time.perf_counter())
                 state, reloc = self._maybe_relocate(state)
+                health, n_deg, n_lost = self._health_snapshot()
                 placements = cache.arrays_for_dispatch(hold=self._reloc_hold)
                 chunks, chunk_stats = self._chunks_for_dispatch()
                 t_dispatch = time.perf_counter()
+                self._t_last_dispatch = t_dispatch
                 # prophetlint: bounded(a2a_chunks): quantized to
                 #   EngineConfig.a2a_chunk_candidates by _chunks_for_dispatch
                 with sanitize.dispatch_guard():
@@ -535,7 +617,10 @@ class Trainer:
                                    relocations=reloc.moved,
                                    relocation_failures=reloc.failures,
                                    relocation_retries=reloc.retries,
-                                   relocation_persistent=reloc.persistent)
+                                   relocation_persistent=reloc.persistent,
+                                   health_state=health,
+                                   degraded_devices=n_deg,
+                                   lost_devices=n_lost)
             # Drain: the final step's loss and its (now unused) plan.
             if pipeline is not None:
                 final_event = pipeline.wait()

@@ -77,3 +77,15 @@ def test_chunked_a2a_mesh_equivalence():
     out = run_dist_script("chunked_equivalence.py", timeout=900)
     assert "CHUNKED_LAYER_EQUIVALENCE_PASS" in out
     assert "CHUNKED_TRAINER_EQUIVALENCE_PASS" in out
+
+
+@pytest.mark.slow
+def test_health_mesh_equivalence():
+    """Degraded-mode runtime on a (2, 4) mesh: an injected device_loss
+    on EP rank 2 is classified lost after the patience window, every
+    expert is evacuated off the rank within one plan cadence (remote
+    load exactly zero, no shadow on the lost rank), and the loss
+    history — including the final, fully-evacuated step — stays
+    bit-identical to the fault-free run."""
+    out = run_dist_script("health_equivalence.py", timeout=900)
+    assert "HEALTH_EQUIVALENCE_PASS" in out

@@ -1,0 +1,534 @@
+"""Elastic degraded mode: device health tracking, heterogeneity-aware
+planning, expert evacuation, capacity-aware scoring, and the cooperative
+plan deadline.
+
+The degraded-mode invariant mirrors the resilience suite's: health only
+decides *where* compute happens (placements, pricing), never the math —
+so a fleet that stays healthy must be bit-identical to a run without the
+tracker, and every evacuation must still satisfy the placement
+invariants the traced step relies on.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DeviceHealthTracker, EngineConfig, HardwareSpec,
+                        ProProphetEngine)
+from repro.core import guard
+from repro.core.health import FACTOR_FLOOR, HEALTH_STATES
+from repro.core.perfmodel import PerfModel
+from repro.core.placement import ExpertPlacement, traditional
+from repro.core.planner import GreedyPlanner
+from repro.testing import Fault, FaultInjector
+
+
+def _hw(**kw):
+    return HardwareSpec.from_model_dims(512, 1024, bandwidth=25e9,
+                                        flops_per_s=70e12, **kw)
+
+
+def _engine(layers=2, d=4, e=8, **kw):
+    cfg = EngineConfig(num_experts=e, num_devices=d, num_moe_layers=layers,
+                       s_max=4, **kw)
+    return ProProphetEngine(cfg, _hw())
+
+
+def _skewed(d=4, e=8, hot=0, tokens=300.0):
+    g = np.full((d, e), 10.0)
+    g[:, hot] = tokens
+    return g
+
+
+# ---------------------------------------------------------------------------
+# DeviceHealthTracker units
+# ---------------------------------------------------------------------------
+
+class TestHealthTracker:
+    def test_uniform_times_stay_healthy(self):
+        tr = DeviceHealthTracker(4)
+        for _ in range(20):
+            tr.update(np.full(4, 0.1))
+        assert tr.all_healthy
+        assert tr.summary() == "healthy"
+        np.testing.assert_array_equal(tr.factors(), np.ones(4))
+
+    def test_degraded_after_patience_with_factor(self):
+        tr = DeviceHealthTracker(4, patience=3)
+        times = np.full(4, 0.1)
+        times[1] = 0.2                     # 2× the fleet median
+        states = None
+        for i in range(10):
+            states = tr.update(times)
+            if i < 2:                      # patience not yet exhausted
+                assert states[1] == "healthy"
+        assert states[1] == "degraded"
+        assert tr.degraded() == [1] and tr.lost() == []
+        # Factor converges toward median/ema = 0.5.
+        assert 0.4 <= float(tr.factors()[1]) <= 0.6
+        assert tr.summary() == "degraded:1"
+
+    def test_extreme_ratio_is_lost(self):
+        tr = DeviceHealthTracker(4, patience=2, lost_threshold=4.0)
+        times = np.full(4, 0.1)
+        times[2] = 10.0                    # 100× — lost-grade immediately
+        for _ in range(6):
+            tr.update(times)
+        assert tr.state_of(2) == "lost"
+        assert float(tr.factors()[2]) == 0.0
+
+    def test_missed_heartbeats_mean_lost(self):
+        tr = DeviceHealthTracker(4, patience=3)
+        times = np.full(4, 0.1)
+        times[3] = np.nan
+        s = None
+        for i in range(3):
+            s = tr.update(times)
+            assert s[3] == ("lost" if i >= 2 else "healthy")
+        assert tr.lost() == [3]
+        assert tr.summary() == "lost:3"
+
+    def test_single_missed_beat_is_forgiven(self):
+        tr = DeviceHealthTracker(4, patience=3)
+        tr.update(np.array([0.1, 0.1, 0.1, np.nan]))
+        tr.update(np.full(4, 0.1))         # heartbeat returns
+        for _ in range(5):
+            tr.update(np.full(4, 0.1))
+        assert tr.all_healthy
+
+    def test_recovery_after_calm_patience(self):
+        tr = DeviceHealthTracker(4, patience=2, recovery_patience=3)
+        slow = np.full(4, 0.1)
+        slow[0] = 0.3
+        for _ in range(8):
+            tr.update(slow)
+        assert tr.state_of(0) == "degraded"
+        # EMA needs a few calm steps to decay below threshold, then
+        # recovery_patience more to promote.
+        for _ in range(20):
+            tr.update(np.full(4, 0.1))
+        assert tr.state_of(0) == "healthy"
+        assert float(tr.factors()[0]) == 1.0
+
+    def test_mark_lost_out_of_band(self):
+        tr = DeviceHealthTracker(4)
+        tr.mark_lost(2)
+        assert tr.state_of(2) == "lost"
+        assert tr.lost() == [2]
+        assert float(tr.factors()[2]) == 0.0
+
+    def test_snapshot_restore_roundtrip(self):
+        tr = DeviceHealthTracker(4, patience=2)
+        times = np.full(4, 0.1)
+        times[1] = 0.4
+        for _ in range(5):
+            tr.update(times)
+        snap = tr.snapshot()
+        before = (tr.states(), tr.factors().copy(), tr.updates)
+        for _ in range(5):
+            tr.update(np.array([0.1, np.nan, np.nan, 0.1]))
+        assert tr.states() != before[0] or tr.updates != before[2]
+        tr.restore(snap)
+        assert tr.states() == before[0]
+        np.testing.assert_array_equal(tr.factors(), before[1])
+        assert tr.updates == before[2]
+
+    def test_states_are_known_labels(self):
+        tr = DeviceHealthTracker(3)
+        tr.update(np.array([0.1, np.nan, 50.0]))
+        assert all(s in HEALTH_STATES for s in tr.states())
+
+
+# ---------------------------------------------------------------------------
+# PerfModel heterogeneity
+# ---------------------------------------------------------------------------
+
+class TestPerfModelHeterogeneity:
+    def test_uniform_factors_bit_identical(self):
+        pm = PerfModel(_hw(), 4)
+        H = np.array([100.0, 250.0, 70.0, 33.0])
+        R = np.array([40.0, 90.0, 10.0, 5.0])
+        base = (pm.t_fec(H), pm.t_a2a(R))
+        pm.set_device_factors(np.ones(4))
+        assert (pm.t_fec(H), pm.t_a2a(R)) == base
+        assert not pm.heterogeneous
+        pm.set_device_factors(None)
+        assert (pm.t_fec(H), pm.t_a2a(R)) == base
+
+    def test_degraded_factor_slows_fec_and_a2a(self):
+        pm = PerfModel(_hw(), 4)
+        H = np.full(4, 100.0)
+        R = np.full(4, 50.0)
+        t0, a0 = pm.t_fec(H), pm.t_a2a(R)
+        pm.set_device_factors(np.array([1.0, 0.5, 1.0, 1.0]))
+        assert pm.heterogeneous
+        assert pm.t_fec(H) == pytest.approx(2.0 * t0)
+        assert pm.t_a2a(R) == pytest.approx(2.0 * a0)
+
+    def test_lost_device_clamped_to_floor(self):
+        pm = PerfModel(_hw(), 4)
+        pm.set_device_factors(np.array([1.0, 1.0, 0.0, 1.0]))
+        assert pm.lost_devices() == [2]
+        speeds = pm.device_speeds()
+        assert speeds[2] == pytest.approx(FACTOR_FLOOR * pm.hw.throughput)
+        assert np.isfinite(pm.t_fec(np.full(4, 100.0)))
+
+    def test_hardware_throughput_vector(self):
+        import dataclasses
+        hw = _hw()
+        hw = dataclasses.replace(
+            hw, device_throughput=(hw.throughput, hw.throughput / 2,
+                                   hw.throughput, hw.throughput))
+        pm = PerfModel(hw, 4)
+        assert pm.heterogeneous
+        H = np.full(4, 100.0)
+        assert pm.t_fec(H) == pytest.approx(100.0 / (hw.throughput / 2))
+
+    def test_raw_factors_roundtrip(self):
+        pm = PerfModel(_hw(), 4)
+        assert pm.raw_factors() is None
+        f = np.array([1.0, 0.25, 0.0, 1.0])
+        pm.set_device_factors(f)
+        np.testing.assert_array_equal(pm.raw_factors(), f)
+        pm2 = PerfModel(_hw(), 4)
+        pm2.set_device_factors(pm.raw_factors())
+        assert pm2.lost_devices() == pm.lost_devices()
+        np.testing.assert_array_equal(pm2.device_speeds(),
+                                      pm.device_speeds())
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity-aware planning
+# ---------------------------------------------------------------------------
+
+class TestHeterogeneousPlanning:
+    def _weighted_max(self, pl, g, speeds):
+        H, _ = pl.compute_loads(g)
+        return float((H / speeds).max())
+
+    def test_hot_expert_drains_off_slow_device(self):
+        """A degraded device hosting the hot expert: the plan must cut
+        the slowness-weighted bottleneck below the do-nothing baseline."""
+        pm = PerfModel(_hw(), 4)
+        pm.set_device_factors(np.array([0.4, 1.0, 1.0, 1.0]))
+        planner = GreedyPlanner(pm, alpha=0.1, s_max=4, scheduled=False)
+        g = _skewed(hot=0)                 # expert 0 lives on device 0
+        res = planner.plan(g)
+        base = traditional(8, 4)
+        speeds = pm.device_speeds()
+        assert (self._weighted_max(res.placement, g, speeds)
+                < self._weighted_max(base, g, speeds))
+        # The hot expert was shadowed or moved — device 0 no longer
+        # carries the whole spike alone.
+        H, _ = res.placement.compute_loads(g)
+        H_base, _ = base.compute_loads(g)
+        assert H[0] < H_base[0]
+
+    def test_homogeneous_plan_unchanged_by_unit_factors(self):
+        pm_a = PerfModel(_hw(), 4)
+        pm_b = PerfModel(_hw(), 4)
+        pm_b.set_device_factors(np.ones(4))
+        g = _skewed(hot=3)
+        res_a = GreedyPlanner(pm_a, s_max=4).plan(g)
+        res_b = GreedyPlanner(pm_b, s_max=4).plan(g)
+        assert res_a.placement == res_b.placement
+        assert res_a.predicted_time == res_b.predicted_time
+
+
+# ---------------------------------------------------------------------------
+# Expert evacuation
+# ---------------------------------------------------------------------------
+
+class TestEvacuation:
+    def _lost_perf(self, lost, d=4):
+        pm = PerfModel(_hw(), d)
+        f = np.ones(d)
+        for dd in lost:
+            f[dd] = 0.0
+        pm.set_device_factors(f)
+        return pm
+
+    def test_lost_rank_fully_evacuated(self):
+        pm = self._lost_perf([2])
+        planner = GreedyPlanner(pm, s_max=4)
+        g = _skewed()
+        res = planner.plan(g)
+        assert res.num_evacuated > 0
+        H, R = res.placement.compute_loads(g)
+        assert R[2] == 0.0                 # nothing routed to the corpse
+        guard.validate_placement(res.placement, num_experts=8,
+                                 num_devices=4)
+
+    def test_evacuation_property_random_configs(self):
+        """Property: over seeded random (D, E, lost, g) configs the
+        evacuated placement is always structurally valid, routes nothing
+        to the lost rank, and never shadows onto it."""
+        rng = np.random.default_rng(42)
+        for trial in range(25):
+            d = int(rng.integers(2, 6))
+            e = d * int(rng.integers(1, 4))
+            lost = int(rng.integers(0, d))
+            g = rng.integers(1, 200, size=(d, e)).astype(np.float64)
+            pm = self._lost_perf([lost], d=d)
+            planner = GreedyPlanner(pm, s_max=max(2, e // 2))
+            res = planner.plan(g)
+            guard.validate_placement(res.placement, num_experts=e,
+                                     num_devices=d)
+            _, R = res.placement.compute_loads(g)
+            assert R[lost] == 0.0, (trial, d, e, lost)
+            for exp, devs in res.placement.shadows.items():
+                assert lost not in devs, (trial, exp, devs)
+
+    def test_evacuation_disabled_leaves_residents(self):
+        pm = self._lost_perf([1])
+        planner = GreedyPlanner(pm, s_max=4, evacuate=False)
+        res = planner.plan(_skewed())
+        assert res.num_evacuated == 0
+
+    def test_all_lost_is_a_noop(self):
+        """Nowhere to evacuate to: the planner must not thrash."""
+        pm = self._lost_perf([0, 1, 2, 3])
+        res = GreedyPlanner(pm, s_max=4).plan(_skewed())
+        assert res.num_evacuated == 0
+        guard.validate_placement(res.placement, num_experts=8,
+                                 num_devices=4)
+
+    def test_migrations_never_target_lost_rank(self):
+        pm = self._lost_perf([3])
+        planner = GreedyPlanner(pm, s_max=4, strategy="both",
+                                migrate_window=500.0, migrate_hysteresis=0.0)
+        res = planner.plan(_skewed(hot=1))
+        owner = res.placement.owner
+        # Experts may sit in device 3's physical slots only if they are
+        # stranded cold partners with zero routed traffic.
+        _, R = res.placement.compute_loads(_skewed(hot=1))
+        assert R[3] == 0.0
+        assert owner.shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-aware placement scoring (ROADMAP carry-over)
+# ---------------------------------------------------------------------------
+
+class TestCapacityScoring:
+    def _oracle(self, pl, g, cap):
+        """Independent loop-based dense accounting: route every (source,
+        expert) cell to the device that computes it (local holder, else
+        the owner), truncate each per-device expert bucket at cap."""
+        d, e = g.shape
+        holds = pl.placement_matrix().T          # [D, E]
+        buckets = np.zeros((d, e))
+        for src in range(d):
+            for exp in range(e):
+                dev = src if holds[src, exp] else int(pl.owner[exp])
+                buckets[dev, exp] += g[src, exp]
+        capped = np.minimum(buckets, cap)
+        return capped.sum(axis=1), (buckets - capped).sum(axis=1)
+
+    def test_capacity_none_bit_identical(self):
+        pl = traditional(8, 4).with_shadow(0, (1, 2))
+        g = _skewed()
+        H0, R0 = pl.compute_loads(g)
+        H1, R1, drop = pl.compute_loads(g, return_dropped=True)
+        np.testing.assert_array_equal(H0, H1)
+        np.testing.assert_array_equal(R0, R1)
+        np.testing.assert_array_equal(drop, np.zeros(4))
+
+    def test_capacity_truncation_matches_oracle(self):
+        rng = np.random.default_rng(7)
+        for _ in range(10):
+            pl = traditional(8, 4)
+            for e in rng.choice(8, size=2, replace=False):
+                devs = [d for d in range(4) if d != int(pl.owner[e])]
+                pl = pl.with_shadow(int(e), tuple(devs[:2]))
+            g = rng.integers(0, 120, size=(4, 8)).astype(np.float64)
+            cap = float(rng.integers(30, 150))
+            H, R, drop = pl.compute_loads(g, capacity=cap,
+                                          return_dropped=True)
+            H_or, drop_or = self._oracle(pl, g, cap)
+            np.testing.assert_allclose(H, H_or)
+            np.testing.assert_allclose(drop, drop_or)
+            # Wire cost is paid before the buffer drops: R untruncated.
+            _, R_dense = pl.compute_loads(g)
+            np.testing.assert_array_equal(R, R_dense)
+
+    def test_planner_capacity_penalty_prefers_fewer_drops(self):
+        pm = PerfModel(_hw(), 4)
+        g = _skewed(tokens=600.0)
+        dense = GreedyPlanner(pm, s_max=4, scheduled=False).plan(g)
+        capped = GreedyPlanner(pm, s_max=4, scheduled=False,
+                               capacity_factor=1.25).plan(g)
+        # The dense planner never charges drops, so compare both plans
+        # under the *same* cap the capacity-aware search optimized for:
+        # its plan must not drop more than the capacity-blind one would.
+        cap = 1.25 * g.sum() / 8
+        _, _, drop_dense = dense.placement.compute_loads(
+            g, capacity=cap, return_dropped=True)
+        assert dense.dropped_tokens == 0.0
+        assert capped.dropped_tokens <= float(drop_dense.sum()) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Cooperative plan deadline (ROADMAP carry-over)
+# ---------------------------------------------------------------------------
+
+class TestCooperativeDeadline:
+    def test_expired_deadline_aborts_search(self):
+        pm = PerfModel(_hw(), 4)
+        planner = GreedyPlanner(pm, s_max=4)
+        with pytest.raises(guard.PlanDeadlineError):
+            planner.plan(_skewed(), deadline=time.perf_counter() - 1.0)
+
+    def test_future_deadline_harmless(self):
+        pm = PerfModel(_hw(), 4)
+        planner = GreedyPlanner(pm, s_max=4)
+        res = planner.plan(_skewed(), deadline=time.perf_counter() + 60.0)
+        assert res.placement is not None
+
+    def test_run_plan_converts_to_deadline_fallback(self, monkeypatch):
+        from repro.train.runtime import run_plan
+        monkeypatch.setenv("REPRO_PLAN_DEADLINE_MS", "0.0000001")
+        eng = _engine()
+        v = eng.placements_version
+        ev = run_plan(eng, np.stack([_skewed(hot=5)] * 2))
+        assert not ev.ok and ev.failure == "deadline"
+        assert eng.placements_version == v   # rolled back
+
+    def test_deadline_env_does_not_break_fast_plans(self, monkeypatch):
+        from repro.train.runtime import run_plan
+        monkeypatch.setenv("REPRO_PLAN_DEADLINE_MS", "60000")
+        eng = _engine()
+        ev = run_plan(eng, np.stack([_skewed()] * 2))
+        assert ev.ok
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: observe_timings → replan → evacuation
+# ---------------------------------------------------------------------------
+
+class TestEngineHealth:
+    def test_disabled_by_default_no_op(self):
+        eng = _engine()
+        assert not eng.health_enabled
+        eng.observe_timings(np.full(4, 0.1))
+        assert eng.health.updates == 0
+        assert not eng.perf.heterogeneous
+
+    def test_uniform_timings_never_trip(self):
+        eng = _engine(enable_health=True)
+        eng.observe([_skewed(), _skewed(hot=3)])
+        v = eng.placements_version
+        for _ in range(10):
+            eng.observe_timings(np.full(4, 0.25))
+            eng.observe([_skewed(), _skewed(hot=3)])
+        assert eng.health_summary() == "healthy"
+        assert not eng.perf.heterogeneous
+        assert eng.placements_version == v   # nothing replanned differently
+
+    def test_device_loss_evacuates_within_one_observe(self):
+        eng = _engine(enable_health=True, replan_interval=4)
+        g = [_skewed(), _skewed(hot=3)]
+        eng.observe(g)
+        lost_at = None
+        for step in range(8):
+            t = np.full(4, 0.1)
+            t[2] = np.nan
+            eng.observe_timings(t)
+            if eng.health.lost() and lost_at is None:
+                lost_at = step
+                assert eng._health_dirty
+            eng.observe(g)
+            if lost_at is not None:
+                break
+        assert lost_at is not None
+        # The very next observe after classification evacuated rank 2,
+        # despite the replan_interval=4 cadence.
+        assert eng.evacuations > 0
+        for li, pl in enumerate(eng.placements):
+            _, R = pl.compute_loads(g[li])
+            assert R[2] == 0.0, li
+        assert eng.last_plan_info["evacuated"] >= 0
+        guard.validate_engine(eng)
+
+    def test_straggler_fault_degrades_then_recovers(self):
+        inj = FaultInjector([Fault("straggler", 2,
+                                   {"device": 1, "factor": 3.0,
+                                    "steps": 6})])
+        eng = _engine(enable_health=True,
+                      health_patience=2, health_recovery_patience=2)
+        g = [_skewed(), _skewed(hot=3)]
+        eng.observe(g)
+        saw_degraded = False
+        for _ in range(30):
+            times = inj.device_timings(np.full(4, 0.1))
+            eng.observe_timings(times)
+            eng.observe(g)
+            if eng.health.state_of(1) == "degraded":
+                saw_degraded = True
+                assert eng.perf.heterogeneous
+        assert ("straggler", 2) in inj.fired
+        assert saw_degraded
+        # Episode over: the device recovers and pricing goes homogeneous.
+        assert eng.health_summary() == "healthy"
+        assert not eng.perf.heterogeneous
+
+    def test_snapshot_restore_covers_health(self):
+        eng = _engine(enable_health=True, health_patience=1)
+        g = [_skewed(), _skewed(hot=3)]
+        eng.observe(g)
+        snap = eng.snapshot()
+        t = np.full(4, 0.1)
+        t[0] = np.nan
+        for _ in range(3):
+            eng.observe_timings(t)
+            eng.observe(g)
+        assert eng.health.lost() == [0]
+        eng.restore(snap)
+        assert eng.health_summary() == "healthy"
+        assert not eng.perf.heterogeneous
+        assert eng.evacuations == 0
+
+    def test_validate_health_rejects_corrupt_factor(self):
+        eng = _engine(enable_health=True)
+        eng.observe([_skewed(), _skewed(hot=3)])
+        eng.health._factor[1] = np.nan
+        with pytest.raises(guard.PlacementInvariantError, match="factor"):
+            guard.validate_engine(eng)
+
+
+# ---------------------------------------------------------------------------
+# Fault injector: timing sites
+# ---------------------------------------------------------------------------
+
+class TestTimingFaults:
+    def test_device_loss_persists_forever(self):
+        inj = FaultInjector([Fault("device_loss", 1, {"device": 3})])
+        t0 = inj.device_timings(np.full(4, 0.1))
+        assert np.isfinite(t0).all()       # occurrence 0: clean
+        for _ in range(5):
+            t = inj.device_timings(np.full(4, 0.1))
+            assert np.isnan(t[3]) and np.isfinite(t[:3]).all()
+        assert ("device_loss", 1) in inj.fired
+
+    def test_straggler_episode_bounded(self):
+        inj = FaultInjector([Fault("straggler", 0,
+                                   {"device": 0, "factor": 2.0,
+                                    "steps": 3})])
+        inflated = [inj.device_timings(np.full(4, 0.1))[0]
+                    for _ in range(6)]
+        assert inflated[:3] == [pytest.approx(0.2)] * 3
+        assert inflated[3:] == [pytest.approx(0.1)] * 3
+
+    def test_degraded_throughput_persists(self):
+        inj = FaultInjector([Fault("degraded_throughput", 0,
+                                   {"device": 2, "factor": 1.5})])
+        for _ in range(4):
+            t = inj.device_timings(np.full(4, 0.1))
+            assert t[2] == pytest.approx(0.15)
+
+    def test_sites_advance_together(self):
+        inj = FaultInjector([Fault("straggler", 2, {"device": 0}),
+                             Fault("device_loss", 2, {"device": 1})])
+        for _ in range(3):
+            t = inj.device_timings(np.full(4, 0.1))
+        assert t[0] == pytest.approx(0.2) and np.isnan(t[1])

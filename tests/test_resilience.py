@@ -70,24 +70,27 @@ class TestCountGuards:
 
     def test_sanitize_passthrough_clean(self):
         c = _counts()
-        layers, n = guard.sanitize_counts(c)
-        assert n == 0 and len(layers) == 2
+        layers, rep = guard.sanitize_counts(c)
+        assert rep.num_sanitized == 0 and not rep and len(layers) == 2
+        assert rep.repaired == [] and rep.uniform == []
         np.testing.assert_array_equal(layers[0], c[0])
 
     def test_sanitize_replaces_dirty_layer_with_fallback(self):
         c = _counts().astype(np.float64)
         c[1, 0, 0] = np.nan
         fb = [_skewed(hot=2), _skewed(hot=3)]
-        layers, n = guard.sanitize_counts(c, fallback=fb)
-        assert n == 1
+        layers, rep = guard.sanitize_counts(c, fallback=fb)
+        assert rep.num_sanitized == 1
+        assert rep.repaired == [1] and rep.uniform == []
         np.testing.assert_array_equal(layers[0], c[0])   # clean layer kept
         np.testing.assert_array_equal(layers[1], fb[1])  # dirty → fallback
 
     def test_sanitize_uniform_without_fallback(self):
         c = _counts().astype(np.float64)
         c[0, 2, :] = -5.0
-        layers, n = guard.sanitize_counts(c, fallback=[None, None])
-        assert n == 1
+        layers, rep = guard.sanitize_counts(c, fallback=[None, None])
+        assert rep.num_sanitized == 1
+        assert rep.repaired == [0] and rep.uniform == [0]
         np.testing.assert_array_equal(layers[0], np.ones((4, 8)))
 
     def test_sanitize_ignores_dirty_fallback(self):
@@ -95,9 +98,25 @@ class TestCountGuards:
         c[0, 0, 0] = np.inf
         bad_fb = _skewed()
         bad_fb[0, 0] = np.nan
-        layers, n = guard.sanitize_counts(c, fallback=[bad_fb, None])
-        assert n == 1
+        layers, rep = guard.sanitize_counts(c, fallback=[bad_fb, None])
+        assert rep.num_sanitized == 1
+        assert rep.uniform == [0]   # dirty fallback is no fallback
         np.testing.assert_array_equal(layers[0], np.ones((4, 8)))
+
+    def test_sanitize_first_observation_path(self):
+        # Regression: the very first watchdog plan has no last-good
+        # history (fallback=None entries) — every dirty layer must land
+        # on the uniform prior and be reported as such, clean layers
+        # must pass through untouched.
+        c = _counts(layers=3).astype(np.float64)
+        c[0, 1, 2] = np.nan
+        c[2, 0, 0] = -3.0
+        layers, rep = guard.sanitize_counts(c, fallback=None)
+        assert rep.repaired == [0, 2]
+        assert rep.uniform == [0, 2]
+        np.testing.assert_array_equal(layers[0], np.ones((4, 8)))
+        np.testing.assert_array_equal(layers[1], c[1])
+        np.testing.assert_array_equal(layers[2], np.ones((4, 8)))
 
     def test_sanitize_rejects_wrong_rank(self):
         with pytest.raises(guard.CountsError):
